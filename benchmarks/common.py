@@ -1,0 +1,76 @@
+"""Shared benchmark scaffolding: reduced model, cached pretrained base,
+heterogeneous client datasets (paper setting: one downstream task per
+client; causal / QA / IE like Table I)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.loader import eval_batches
+from repro.data.synthetic import (SyntheticInstructionDataset,
+                                  make_dataset_family, TASK_TYPES)
+from repro.fed.pretrain import get_pretrained_base
+from repro.models.config import ArchConfig
+
+# ~1.6 M params — "llama-family" reduced model used across benchmarks
+BENCH_CFG = ArchConfig(
+    name="bench-llama", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab_size=512, dtype="float32", lora_rank=8,
+    lora_alpha=32.0, lora_dropout=0.0, source="reduced llama2 family")
+
+# Paper Table I uses three downstream tasks; map to our generators.
+PAPER_TASKS = ("causal", "qa", "ie")
+SEQ = 48
+EVAL_BATCH = 32
+N_EVAL = 4
+
+
+def task_probs(task: str):
+    return [1.0 if t == task else 0.0 for t in TASK_TYPES]
+
+
+def mixture_probs():
+    return [1.0 / len(PAPER_TASKS) if t in PAPER_TASKS else 0.0
+            for t in TASK_TYPES]
+
+
+def build_setting(dataset_name: str, n_clients: int = 3, seed: int = 0,
+                  pool_size: int = 64):
+    """Returns (client_datasets, server_dataset, eval_global, eval_local).
+
+    pool_size: finite per-client training shard (paper setting — Dolly-15k
+    split across clients); eval batches are always fresh/held-out."""
+    fam = make_dataset_family(dataset_name)
+    cds = [SyntheticInstructionDataset(
+        fam, task_probs(PAPER_TASKS[c % len(PAPER_TASKS)]),
+        client_seed=seed,                      # shared world per family
+        pool_size=pool_size, pool_seq_len=SEQ)
+        for c in range(n_clients)]
+    sds = SyntheticInstructionDataset(fam, mixture_probs(), client_seed=seed)
+    eval_global = eval_batches(sds, EVAL_BATCH, SEQ, N_EVAL, seed=20_000)
+    rng = np.random.default_rng(30_000)
+    eval_local = []
+    for _ in range(N_EVAL):
+        # held-out per-task eval — sample_task_batch always generates
+        # fresh examples (never the client's finite training pool)
+        outs = [d.sample_task_batch(rng, EVAL_BATCH, SEQ,
+                                    PAPER_TASKS[i % len(PAPER_TASKS)])
+                for i, d in enumerate(cds)]
+        eval_local.append({k: jnp.asarray(np.stack([o[k] for o in outs]))
+                           for k in outs[0]})
+    return cds, sds, eval_global, eval_local
+
+
+def eval_per_task(sim_or_params_eval, fam_name: str, tasks=PAPER_TASKS):
+    fam = make_dataset_family(fam_name)
+    out = {}
+    for t in tasks:
+        ds = SyntheticInstructionDataset(fam, task_probs(t), client_seed=0)
+        out[t] = eval_batches(ds, EVAL_BATCH, SEQ, N_EVAL, seed=40_000)
+    return out
+
+
+def bench_base(dataset_name: str, steps: int = 800, log=lambda s: None):
+    fam = make_dataset_family(dataset_name)
+    mix = SyntheticInstructionDataset(fam, mixture_probs(), client_seed=0)
+    return get_pretrained_base(BENCH_CFG, mix, steps=steps, log=log)

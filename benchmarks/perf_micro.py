@@ -1,0 +1,72 @@
+"""CPU micro-benchmarks: wall time of one forward/train/decode step per
+reduced architecture (real measured numbers on this container; the TPU
+numbers live in the roofline table, which is analytic by necessity)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import model as M
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng):
+    S_tok = S
+    extras = {}
+    if cfg.frontend and not cfg.n_enc_layers:
+        S_tok = S - cfg.frontend_tokens
+        extras["frontend_emb"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_tokens, cfg.d_model)), jnp.float32)
+    if cfg.n_enc_layers:
+        extras["frontend_emb"] = jnp.asarray(
+            rng.normal(size=(B, 16, cfg.d_model)), jnp.float32)
+    return {"tokens": jnp.asarray(rng.integers(5, cfg.vocab_size,
+                                               size=(B, S_tok)), jnp.int32),
+            "loss_mask": jnp.ones((B, S_tok), jnp.float32), **extras}
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)                                  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(log=print):
+    rng = np.random.default_rng(0)
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        batch = _batch(cfg, rng)
+        fwd = jax.jit(lambda p, b: M.loss_and_metrics(p, b, cfg)[0])
+        us_f = _time(fwd, params, batch)
+        cache = M.init_cache(cfg, B, S)
+        dec = jax.jit(lambda p, t, c, i: M.decode_step(
+            p, t, c, i, cfg,
+            enc_out=jnp.zeros((B, 16, cfg.d_model)) if cfg.n_enc_layers else None)[0])
+        us_d = _time(dec, params, jnp.ones((B,), jnp.int32), cache,
+                     jnp.asarray(5))
+        rows.append({"arch": arch, "fwd_us": us_f, "dec_us": us_d})
+        log(f"[perf] {arch:24s} fwd={us_f:9.0f}us decode={us_d:9.0f}us")
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"perf/{r['arch']}/fwd,{r['fwd_us']:.0f},smoke_cpu")
+        print(f"perf/{r['arch']}/decode,{r['dec_us']:.0f},smoke_cpu")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Roofline table from dry-run artifacts (experiments/dryrun/*.json).
+
+One row per (arch × shape × mesh): the three terms, dominant bottleneck,
+MODEL_FLOPS/HLO ratio, memory fit.  This is the §Roofline source of truth
+— also exported into EXPERIMENTS.md by scripts in launch/report.py.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(path: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(recs: list[dict]) -> list[str]:
+    hdr = (f"{'arch':24s} {'shape':11s} {'mesh':8s} {'ok':3s} "
+           f"{'mem GB':>7s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dom':10s} {'useful%':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:24s} {r['shape']:11s} {r['mesh']:8s} "
+                         f"ERR {str(r.get('error'))[:60]}")
+            continue
+        ro = r["roofline"]
+        name = r['arch']
+        if r.get('variant', 'baseline') != 'baseline':
+            name += f"+{r['variant']}"
+        lines.append(
+            f"{name:24s} {r['shape']:11s} {r['mesh']:8s} "
+            f"{'y' if r['fits_16g'] else 'N':3s} "
+            f"{r['memory']['peak_estimate_bytes']/1e9:7.2f} "
+            f"{ro['compute_s']:10.3e} {ro['memory_s']:10.3e} "
+            f"{ro['collective_s']:10.3e} {ro['dominant']:10s} "
+            f"{100*ro['useful_flops_ratio']:8.1f}")
+    return lines
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("no dry-run records found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        print("name,us_per_call,derived")
+        return []
+    for line in table(recs):
+        print(line)
+    print()
+    print("name,us_per_call,derived")
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        step_s = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        vtag = "" if r.get("variant", "baseline") == "baseline" \
+            else f"+{r['variant']}"
+        print(f"roofline/{r['arch']}{vtag}/{r['shape']}/{r['mesh']},"
+              f"{step_s*1e6:.1f},"
+              f"dom={ro['dominant']};fits={r['fits_16g']};"
+              f"useful={ro['useful_flops_ratio']:.3f}")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Benchmark harness — one entry per paper table/figure + infra perf.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig1,...]
+
+Prints ``name,us_per_call,derived`` CSV per run (plus human-readable
+logs) and writes JSON to experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+ALL = ("table1", "table2", "fig1", "fig3", "perf", "roofline")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list from: " + ",".join(ALL))
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore cached per-bench JSON results")
+    args = ap.parse_args()
+    which = args.only.split(",") if args.only else list(ALL)
+
+    def cached(name, fn):
+        path = f"experiments/bench/{name}.json"
+        if not args.fresh and os.path.exists(path):
+            print(f"[{name}] using cached results from {path}")
+            with open(path) as f:
+                return json.load(f)
+        out = fn()
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+        return out
+
+    os.makedirs("experiments/bench", exist_ok=True)
+    results = {}
+    csv_lines = ["name,us_per_call,derived"]
+
+    t00 = time.time()
+    if "table1" in which:
+        from benchmarks import table1_accuracy
+        rows = cached("table1", table1_accuracy.run)
+        results["table1"] = rows
+        for r in rows:
+            csv_lines.append(
+                f"table1/{r['dataset']}/{r['method']},{r['wall_s']*1e6:.0f},"
+                f"global_acc={r['global_acc']:.4f};local_acc={r['local_acc']:.4f}")
+    if "table2" in which:
+        from benchmarks import table2_rank
+        rows = cached("table2", table2_rank.run)
+        results["table2"] = rows
+        for r in rows:
+            csv_lines.append(f"table2/r{r['r']}xn{r['n']},{r['wall_s']*1e6:.0f},"
+                             f"acc={r['acc']:.4f};pct_params={r['pct_params']:.4f}")
+    if "fig1" in which:
+        from benchmarks import fig1_sensitivity
+        rep = cached("fig1", fig1_sensitivity.run)
+        results["fig1"] = rep
+        csv_lines.append(f"fig1/sensitivity,{rep['wall_s']*1e6:.0f},"
+                         f"dirA_over_dirB={rep['obs1_dir_ratio_A_over_B']:.3f};"
+                         f"magB_over_magA={rep['obs2_mag_ratio_B_over_A']:.3f}")
+    if "fig3" in which:
+        from benchmarks import fig3_pipeline
+        rows = cached("fig3", fig3_pipeline.run)
+        results["fig3"] = rows
+        for r in rows:
+            tag = "post-serial" if r["pipeline"] else "pre-serial"
+            csv_lines.append(f"fig3/{tag},{r['wall_s']*1e6:.0f},"
+                             f"local_acc={r['local_acc']:.4f}")
+    if "perf" in which:
+        from benchmarks import perf_micro
+        rows = cached("perf", perf_micro.run)
+        results["perf"] = rows
+        for r in rows:
+            csv_lines.append(f"perf/{r['arch']}/fwd,{r['fwd_us']:.0f},smoke_cpu")
+            csv_lines.append(f"perf/{r['arch']}/decode,{r['dec_us']:.0f},smoke_cpu")
+    if "roofline" in which:
+        from benchmarks import roofline
+        recs = roofline.load_records()
+        results["roofline_n"] = len(recs)
+        for line in roofline.table(recs):
+            print(line)
+        for r in recs:
+            if r.get("status") != "ok":
+                continue
+            ro = r["roofline"]
+            step_s = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+            vtag = "" if r.get("variant", "baseline") == "baseline" \
+                else f"+{r['variant']}"
+            csv_lines.append(
+                f"roofline/{r['arch']}{vtag}/{r['shape']}/{r['mesh']},"
+                f"{step_s*1e6:.1f},dom={ro['dominant']};fits={r['fits_16g']}")
+
+    with open("experiments/bench/results.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print()
+    print("\n".join(csv_lines))
+    print(f"\n[benchmarks done in {time.time()-t00:.0f}s; "
+          f"JSON -> experiments/bench/results.json]")
+
+
+if __name__ == "__main__":
+    main()

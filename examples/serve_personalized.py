@@ -1,0 +1,60 @@
+"""Multi-tenant personalized serving demo.
+
+    PYTHONPATH=src python examples/serve_personalized.py
+
+One frozen backbone + per-tenant DoRA-decomposed adapters where only the
+ΔB_M magnitude vectors differ per tenant (the paper's local-optimizer
+output — a few hundred *scalars* per tenant).  Batched prefill + greedy
+decode; shows tenants produce different continuations from identical
+prompts while sharing every backbone byte.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import peft  # noqa: E402
+from repro.launch.serve import greedy_generate, merge_adapters  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.config import ArchConfig  # noqa: E402
+from repro.utils.pytree import (tree_bytes, tree_map_with_path,  # noqa: E402
+                                tree_paths)
+
+CFG = ArchConfig(name="serve-demo", family="dense", n_layers=4, d_model=256,
+                 n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=1024,
+                 dtype="float32", lora_rank=8, lora_dropout=0.0)
+
+
+def main():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    shared = peft.add_lora(params, CFG, jax.random.PRNGKey(1),
+                           decomposed=True)
+    backbone_b = tree_bytes(params)
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(5, CFG.vocab_size, size=(4, 24)),
+                          jnp.int32)
+    print(f"backbone: {backbone_b/1e6:.1f} MB shared across tenants")
+    for tenant in range(3):
+        # per-tenant personalization = only the dB_mag leaves
+        ad = tree_map_with_path(
+            lambda p, x: x + 0.3 * (tenant + 1) * jnp.sign(
+                jnp.sin(jnp.arange(x.size, dtype=jnp.float32) + tenant)
+            ).reshape(x.shape) if p.endswith("dB_mag") else x, shared)
+        per_tenant_b = sum(
+            x.size * 4 for p, x in zip(tree_paths(ad), jax.tree.leaves(ad))
+            if p.endswith("dB_mag"))
+        merged = merge_adapters(params, ad)
+        out = greedy_generate(merged, {"tokens": prompts}, CFG, n_new=8)
+        print(f"tenant {tenant}: ΔB_M payload={per_tenant_b} B  "
+              f"first-request tokens: {np.asarray(out[0]).tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""msgpack pytree checkpointing.
+
+Arrays are gathered to host, serialized with shape/dtype headers, and
+restored with optional resharding (``shardings`` pytree of NamedSharding).
+bfloat16 is round-tripped via uint16 views (msgpack/numpy have no bf16).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.utils.pytree import tree_map_with_path, path_str
+
+_BF16 = "__bf16__"
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(jax.device_get(x))
+    if arr.dtype == jnp.bfloat16:
+        return {"d": _BF16, "s": list(arr.shape),
+                "b": arr.view(np.uint16).tobytes()}
+    return {"d": arr.dtype.str, "s": list(arr.shape), "b": arr.tobytes()}
+
+
+def _unpack_leaf(rec: dict) -> np.ndarray:
+    shape = tuple(rec["s"])
+    if rec["d"] == _BF16:
+        return np.frombuffer(rec["b"], np.uint16).reshape(shape).view(jnp.bfloat16)
+    return np.frombuffer(rec["b"], np.dtype(rec["d"])).reshape(shape)
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    payload = {
+        "step": step,
+        "leaves": {path_str(p): _pack_leaf(x) for p, x in leaves},
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore_checkpoint(path: str, like: Any, shardings: Any = None):
+    """Restore into the structure of ``like``; device_put with shardings if
+    given (sharding-aware restore for multi-host meshes)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    recs = payload["leaves"]
+
+    def fn(p, x):
+        arr = _unpack_leaf(recs[p])
+        assert tuple(arr.shape) == tuple(x.shape), (p, arr.shape, x.shape)
+        return arr
+
+    host_tree = tree_map_with_path(fn, like)
+    if shardings is not None:
+        host_tree = jax.tree.map(jax.device_put, host_tree, shardings)
+    else:
+        host_tree = jax.tree.map(jnp.asarray, host_tree)
+    return host_tree, payload["step"]

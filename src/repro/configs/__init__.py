@@ -1,0 +1,69 @@
+"""Assigned-architecture registry + input shapes.
+
+Every architecture from the assignment pool is one module exposing ARCH
+(exact assigned hyperparameters, source cited) and SMOKE (the reduced
+same-family variant used by CPU smoke tests).  ``get_config("<id>")``
+resolves either spelling (hyphens or underscores).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ArchConfig, reduced
+
+ARCH_IDS = [
+    "jamba-v0.1-52b",
+    "seamless-m4t-large-v2",
+    "granite-34b",
+    "qwen3-moe-30b-a3b",
+    "gemma3-1b",
+    "deepseek-7b",
+    "mixtral-8x22b",
+    "mamba2-2.7b",
+    "qwen2-vl-2b",
+    "qwen3-32b",
+    # the paper's own fine-tuning targets
+    "llama2-7b",
+]
+
+
+def _modname(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_modname(arch_id)}")
+    return mod.ARCH
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_modname(arch_id)}")
+    return mod.SMOKE
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs bounded attention state (see DESIGN.md §6): SSM/hybrid
+# always; dense only with a sliding-window/local-global variant.
+LONG_CONTEXT_ARCHS = {"jamba-v0.1-52b", "mamba2-2.7b", "gemma3-1b",
+                      "mixtral-8x22b"}
+
+
+def shape_supported(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in LONG_CONTEXT_ARCHS
+    return True

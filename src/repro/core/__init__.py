@@ -1,0 +1,4 @@
+from repro.core import dora, peft, aggregation, sensitivity  # noqa: F401
+
+# NOTE: repro.core.fedlora imports repro.fed (which imports this package);
+# import it directly — from repro.core.fedlora import run_federated.

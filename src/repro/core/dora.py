@@ -1,0 +1,66 @@
+"""Direction–Magnitude (D-M) decomposition (paper Eq. 1 / Eq. 4).
+
+For a kernel in (d_in, d_out) layout the DoRA "column" is the per-input-
+feature vector over outputs, so
+
+    mag(X) = ||X||_c           shape (..., d_in)    [norm over last axis]
+    dir(X) = X / ||X||_c       shape (..., d_in, d_out)
+    X      = dir * mag[..., None]                   (Eq. 1)
+
+Leading stacked dims (the scan-over-superblocks layer axis, or a vmapped
+client axis) pass straight through.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def magnitude(x):
+    return jnp.linalg.norm(x.astype(jnp.float32), axis=-1)
+
+
+def decompose(x):
+    """x (..., d_in, d_out) → (mag (..., d_in), dir (..., d_in, d_out))."""
+    m = magnitude(x)
+    d = x.astype(jnp.float32) / (m[..., None] + _EPS)
+    return m.astype(x.dtype), d.astype(x.dtype)
+
+
+def recompose(mag, dir_):
+    """(Eq. 1)  X = mag ⊙ dir  (broadcast over the output axis)."""
+    return (dir_.astype(jnp.float32)
+            * mag.astype(jnp.float32)[..., None]).astype(dir_.dtype)
+
+
+def decompose_lora_pair(lora_A, lora_B):
+    """LoRA factors → paper Eq. 4 components.
+
+    lora_A: (..., d_in, r) → (A_mag (..., d_in), A_dir)
+    lora_B: (..., r, d_out) → (B_mag (..., r),  B_dir)
+    """
+    A_mag, A_dir = decompose(lora_A)[0], decompose(lora_A)[1]
+    B_mag, B_dir = decompose(lora_B)[0], decompose(lora_B)[1]
+    return {"A_mag": A_mag, "A_dir": A_dir, "B_mag": B_mag, "B_dir": B_dir}
+
+
+def recompose_lora_pair(c):
+    """Inverse of decompose_lora_pair, honouring the trained deltas
+    (paper Eq. 9 / Eq. 10):
+
+        A = (A_dir + dA_dir) · diag(A_mag)
+        B = diag(B_mag + dB_mag) · B_dir
+    """
+    a_dir = c["A_dir"] + c.get("dA_dir", 0.0)
+    b_mag = c["B_mag"] + c.get("dB_mag", 0.0)
+    return recompose(c["A_mag"], a_dir), recompose(b_mag, c["B_dir"])
+
+
+def effective_delta_w(c, scale: float):
+    """Materialized ΔW = scale · A · B for analysis/tests (not the compute
+    path — the model applies the factors without forming ΔW)."""
+    A, B = recompose_lora_pair(c)
+    return scale * jnp.einsum("...ir,...ro->...io", A.astype(jnp.float32),
+                              B.astype(jnp.float32))

@@ -1,0 +1,155 @@
+"""PEFT adapter zoo: param-tree transformations over the shared backbone.
+
+Each ``add_*`` function returns an *adapter tree*: a sparse overlay pytree
+whose leaves sit at the same paths the model's ``linear`` consults
+(``.../q_proj/lora_A`` etc.).  ``merge_trees(base, adapters)`` produces the
+full forward params.  Keeping adapters separate is what makes the
+federated runtime cheap: only the overlay is vmapped per client,
+aggregated, and communicated.
+
+Methods:
+  lora            raw LoRA (baseline; FedIT-style federated averaging)
+  dora_lora       DoRA-decomposed LoRA — the paper's representation:
+                  {A_dir, A_mag, B_dir, B_mag, dA_dir, dB_mag}
+  prompt          prompt-tuning (Lester et al.)
+  adapter         Houlsby bottleneck adapters after each dense FFN
+  ffa_lora        raw LoRA with A frozen (Sun et al.) — via trainable mask
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dora
+from repro.models.config import ArchConfig
+from repro.utils import pytree as pt
+
+Params = Any
+
+_KERNEL_RX = re.compile(r"(?P<proj>[a-zA-Z0-9_]+)/kernel$")
+
+
+def _target_kernels(base: Params, targets) -> list[tuple[str, Any]]:
+    out = []
+    for path in pt.tree_paths(base):
+        m = _KERNEL_RX.search(path)
+        if m and m.group("proj") in targets:
+            # fetch leaf
+            node = base
+            for k in path.split("/"):
+                node = node[k]
+            out.append((path, node))
+    return out
+
+
+def _set_path(tree: dict, path: str, leaf) -> None:
+    keys = path.split("/")
+    cur = tree
+    for k in keys[:-1]:
+        cur = cur.setdefault(k, {})
+    cur[keys[-1]] = leaf
+
+
+def add_lora(base: Params, cfg: ArchConfig, rng, *, decomposed: bool = False,
+             rank: int = 0) -> Params:
+    """Build the adapter overlay for every target projection.
+
+    Raw LoRA init: A ~ N(0, 1/r), B ~ N(0, 1e-3) — B near-zero so the
+    initial ΔW ≈ 0 (can't be exactly 0 or its D-M decomposition is
+    undefined).
+
+    Decomposed (DoRA-faithful) init: B_dir is a random *unit-norm*
+    direction and B_mag = 0, so ΔW = 0 exactly at init.  This matters for
+    the paper's training dynamics: the gradient w.r.t. B_dir scales with
+    B_mag, so early training pours task energy into the *magnitude* of B
+    while its direction stays near init — the asymmetry behind the paper's
+    Obs. 1/2 (a near-zero random B instead makes its direction maximally
+    plastic and inverts the measurement; see DESIGN.md §10).
+    """
+    r = rank or cfg.lora_rank
+    overlay: dict = {}
+    for i, (path, kern) in enumerate(_target_kernels(base, cfg.lora_targets)):
+        *lead, d_in, d_out = kern.shape
+        k1, k2 = jax.random.split(jax.random.fold_in(rng, i))
+        A = jax.random.normal(k1, (*lead, d_in, r), jnp.float32) / jnp.sqrt(r)
+        B = jax.random.normal(k2, (*lead, r, d_out), jnp.float32) * 1e-3
+        prefix = path.rsplit("/", 1)[0]
+        if decomposed:
+            A_mag, A_dir = dora.decompose(A)
+            _, B_dir = dora.decompose(
+                jax.random.normal(k2, (*lead, r, d_out), jnp.float32))
+            B_mag = jnp.zeros((*lead, r), jnp.float32)
+            _set_path(overlay, f"{prefix}/A_dir", A_dir)
+            _set_path(overlay, f"{prefix}/A_mag", A_mag)
+            _set_path(overlay, f"{prefix}/B_dir", B_dir)
+            _set_path(overlay, f"{prefix}/B_mag", B_mag)
+            _set_path(overlay, f"{prefix}/dA_dir", jnp.zeros_like(A_dir))
+            _set_path(overlay, f"{prefix}/dB_mag", jnp.zeros_like(B_mag))
+        else:
+            _set_path(overlay, f"{prefix}/lora_A", A)
+            _set_path(overlay, f"{prefix}/lora_B", B)
+    return overlay
+
+
+def add_prompt_tuning(base: Params, cfg: ArchConfig, rng,
+                      n_prompt: int = 16) -> Params:
+    return {"prompt_embed": jax.random.normal(
+        rng, (n_prompt, cfg.d_model), jnp.float32) * 0.02}
+
+
+def add_adapter_tuning(base: Params, cfg: ArchConfig, rng,
+                       bottleneck: int = 16) -> Params:
+    """Houlsby bottleneck after each dense FFN (``mlp`` dicts)."""
+    overlay: dict = {}
+    i = 0
+    for path in pt.tree_paths(base):
+        m = re.search(r"(.*mlp)/down_proj/kernel$", path)
+        if not m:
+            continue
+        node = base
+        for k in path.split("/"):
+            node = node[k]
+        *lead, _, d_out = node.shape
+        k1, k2 = jax.random.split(jax.random.fold_in(rng, 7000 + i))
+        i += 1
+        down = jax.random.normal(k1, (*lead, d_out, bottleneck), jnp.float32) * 0.02
+        up = jnp.zeros((*lead, bottleneck, d_out), jnp.float32)
+        _set_path(overlay, f"{m.group(1)}/adapter_down", down)
+        _set_path(overlay, f"{m.group(1)}/adapter_up", up)
+    return overlay
+
+
+# ---------------------------------------------------------------------------
+# trainable masks (drive optim.masked + the paper's stage pipeline)
+# ---------------------------------------------------------------------------
+
+def mask_all(adapters: Params) -> Params:
+    return pt.path_mask(adapters, lambda p: True)
+
+
+def mask_stage_local_pretrain(adapters: Params) -> Params:
+    """Stage 1 — client LoRA fine-tune: train the base components, not the
+    pipeline deltas (dA_dir / dB_mag stay zero until their stages)."""
+    return pt.path_mask(adapters, lambda p: not re.search(r"d[AB]_(dir|mag)", p))
+
+
+def mask_stage_global(adapters: Params) -> Params:
+    """Stage 2 — global optimizer: ΔA_D only (paper Eq. 9)."""
+    return pt.path_mask(adapters, lambda p: p.endswith("dA_dir"))
+
+
+def mask_stage_local(adapters: Params) -> Params:
+    """Stage 3 — local optimizer: ΔB_M only (paper Eq. 10/11)."""
+    return pt.path_mask(adapters, lambda p: p.endswith("dB_mag"))
+
+
+def mask_ffa(adapters: Params) -> Params:
+    """FFA-LoRA: freeze A, train B only."""
+    return pt.path_mask(adapters, lambda p: p.endswith("lora_B"))
+
+
+def reg_mask_dB(adapters: Params) -> Params:
+    return pt.path_mask(adapters, lambda p: p.endswith("dB_mag"))

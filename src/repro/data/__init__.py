@@ -1,0 +1,9 @@
+from repro.data.synthetic import (  # noqa: F401
+    TaskSpec,
+    SyntheticInstructionDataset,
+    make_dataset_family,
+    TASK_TYPES,
+)
+from repro.data.partition import dirichlet_task_partition  # noqa: F401
+from repro.data.loader import batch_iterator, eval_batches  # noqa: F401
+from repro.data.tokenizer import HashTokenizer  # noqa: F401

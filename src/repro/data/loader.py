@@ -1,0 +1,42 @@
+"""Batch iterators bridging numpy generation → jnp device arrays."""
+from __future__ import annotations
+
+from typing import Iterator, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import SyntheticInstructionDataset
+
+
+def batch_iterator(dataset: SyntheticInstructionDataset, batch: int,
+                   seq_len: int, steps: int, seed: int = 0) -> Iterator[dict]:
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        b = dataset.sample_batch(rng, batch, seq_len)
+        yield {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def eval_batches(dataset: SyntheticInstructionDataset, batch: int,
+                 seq_len: int, n_batches: int, task: str | None = None,
+                 seed: int = 10_000) -> list[dict]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        if task is None:
+            b = dataset.sample_batch(rng, batch, seq_len)
+        else:
+            b = dataset.sample_task_batch(rng, batch, seq_len, task)
+        out.append({k: jnp.asarray(v) for k, v in b.items()})
+    return out
+
+
+def client_batch(datasets: Sequence[SyntheticInstructionDataset],
+                 rng: np.random.Generator, per_client_batch: int,
+                 seq_len: int) -> dict:
+    """Stacked (C, B, S) batch across clients for the vmapped fed step."""
+    outs = [d.sample_batch(rng, per_client_batch, seq_len) for d in datasets]
+    return {
+        k: jnp.asarray(np.stack([o[k] for o in outs]))
+        for k in outs[0]
+    }

@@ -1,0 +1,1 @@
+from repro.fed.simulate import FedSim, FedHyper  # noqa: F401

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: causal / sliding-window flash attention with GQA.
+
+Online-softmax tiling adapted for the TPU memory hierarchy: one (bq × dh)
+query tile stays VMEM-resident while (bk × dh) key/value tiles stream
+HBM→VMEM; the running max/denominator live in VMEM scratch across the
+key loop (grid dim 2 innermost).  GQA is handled in the BlockSpec index
+maps — query head h reads kv head h // (H/K), so kv tiles are fetched
+once per group, not repeated in HBM like the naive jnp.repeat path.
+
+Grid: (B·H, Sq/bq, Sk/bk).
+
+VMEM working set (bq=bk=512, dh=128, bf16):
+  q + k + v tiles ≈ 0.4 MB, scratch (acc 512·128·4 + m/l) ≈ 0.27 MB — MXU
+  dims (bq, dh, bk) all multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window, n_k: int, bq: int, bk: int,
+            sk_valid: int, q_offset: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(1)
+    q = q_ref[0]                                   # (bq, dh)
+    k = k_ref[0]                                   # (bk, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kj < sk_valid
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "bq", "bk", "interpret",
+                                             "sk_valid", "q_offset"))
+def flash_attention_bhsd(q, k, v, *, scale: float, causal: bool = True,
+                         window=None, bq: int = 512, bk: int = 512,
+                         sk_valid: int = 0, q_offset: int = 0,
+                         interpret: bool = False):
+    """q (BH, Sq, dh); k/v (BK, Sk, dh); BH = B·H, BK = B·K (kv heads)."""
+    BH, Sq, dh = q.shape
+    BK, Sk, _ = k.shape
+    assert BH % BK == 0
+    rep = BH // BK         # == H // K per batch iff layout is (b, h) fused
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    n_k = Sk // bk
+    sk_valid = sk_valid or Sk
+
+    grid = (BH, Sq // bq, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          n_k=n_k, bq=bq, bk=bk, sk_valid=sk_valid,
+                          q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda h, i, j: (h // rep, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda h, i, j: (h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),        # running max
+            pltpu.VMEM((bq,), jnp.float32),        # running denom
+            pltpu.VMEM((bq, dh), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

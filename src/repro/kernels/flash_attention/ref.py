@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for (sliding-window) causal flash attention, GQA."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None):
+    """q (B,Sq,H,dh), k/v (B,Sk,K,dh) → (B,Sq,H,dh)."""
+    B, Sq, H, dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    rep = H // K
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    s = scale if scale is not None else 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) * s
+    qi = jnp.arange(Sq)[:, None] + (Sk - Sq)   # align ends (decode-friendly)
+    kj = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,45 @@
+"""jit'd public wrapper for the fused DoRA-LoRA linear.
+
+``fused_dora(...)`` dispatches to the Pallas TPU kernel on TPU backends
+and to interpret mode elsewhere (this container is CPU-only; interpret
+mode executes the same kernel body for validation).  Batched inputs
+(..., K) are flattened to (M, K) and padded to tile boundaries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_dora.fused_dora import fused_dora_matmul
+from repro.kernels.fused_dora.ref import fused_dora_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_dora(x, w0, a_dir, a_mag, b_dir, b_mag, da_dir=None, db_mag=None,
+               *, scale: float = 1.0, interpret: bool | None = None):
+    if da_dir is None:
+        da_dir = jnp.zeros_like(a_dir)
+    if db_mag is None:
+        db_mag = jnp.zeros_like(b_mag)
+    batch_shape = x.shape[:-1]
+    K = x.shape[-1]
+    N = w0.shape[1]
+    xm = x.reshape(-1, K)
+    M = xm.shape[0]
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    # tile sizes: shrink for small problems, keep MXU-aligned when possible
+    bm = 256 if M % 256 == 0 else (128 if M % 128 == 0 else M)
+    bn = 256 if N % 256 == 0 else (128 if N % 128 == 0 else N)
+    bk = 512 if K % 512 == 0 else (128 if K % 128 == 0 else K)
+    y = fused_dora_matmul(xm, w0, a_dir, a_mag, b_dir, b_mag, da_dir, db_mag,
+                          scale=scale, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret)
+    return y.reshape(*batch_shape, N)
+
+
+__all__ = ["fused_dora", "fused_dora_ref"]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused DoRA-LoRA linear.
+
+    y = x @ W0  +  scale · ((x ⊙ A_mag) @ (A_dir + dA_dir)) ⊙ (B_mag + dB_mag) @ B_dir
+
+Shapes: x (M, K), W0 (K, N), A_dir (K, r), A_mag (K,), B_dir (r, N),
+B_mag (r,).  This is the per-token compute of the paper's Eq. 9/10 weight
+composition, applied factor-wise (ΔW is never materialized).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_dora_ref(x, w0, a_dir, a_mag, b_dir, b_mag, da_dir, db_mag,
+                   scale: float):
+    f32 = jnp.float32
+    y = x.astype(f32) @ w0.astype(f32)
+    h = (x.astype(f32) * a_mag.astype(f32)[None, :]) @ (
+        a_dir.astype(f32) + da_dir.astype(f32))
+    h = h * (b_mag.astype(f32) + db_mag.astype(f32))[None, :]
+    y = y + scale * (h @ b_dir.astype(f32))
+    return y.astype(x.dtype)

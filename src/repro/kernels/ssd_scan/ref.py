@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the Mamba-2 SSD chunked scan.
+
+Reuses the model's XLA implementation (models/ssm._ssd_chunked) — itself
+validated against a naive per-step recurrence in tests/test_ssm.py — so
+kernel ⇄ model ⇄ naive recurrence form a three-way agreement check.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import _ssd_chunked
+
+
+def ssd_ref(x, dt, A_log, B, C, chunk: int):
+    """x (b,S,H,P); dt (b,S,H); B,C (b,S,G,N) → (y (b,S,H,P), state)."""
+    return _ssd_chunked(x, dt, A_log, B, C, chunk)
+
+
+def ssd_naive(x, dt, A_log, B, C):
+    """O(S) sequential recurrence — ground truth for tiny shapes."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    a = jnp.exp(-jnp.exp(A_log.astype(jnp.float32)) * dt.astype(jnp.float32))
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    state = jnp.zeros((b, H, N, P), jnp.float32)
+    ys = []
+    for t in range(S):
+        state = a[:, t, :, None, None] * state + jnp.einsum(
+            "bhn,bhp->bhnp", Bh[:, t], xdt[:, t])
+        ys.append(jnp.einsum("bhn,bhnp->bhp", Ch[:, t], state))
+    y = jnp.stack(ys, axis=1)
+    return y.astype(x.dtype), state.transpose(0, 1, 3, 2)

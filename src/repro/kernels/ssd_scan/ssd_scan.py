@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan.
+
+CUDA Mamba implements the selective scan with warp-level prefix products;
+the TPU-native decomposition is the SSD block form: per chunk a Q×Q
+lower-triangular decay-weighted C·Bᵀ matmul (MXU) plus a small recurrent
+(N×P) state carried across chunks.  The chunk loop is the innermost grid
+dimension, so the state lives in VMEM scratch for the whole sequence —
+one HBM read of x/B/C, no state spills.
+
+Grid: (B·H, S/Q) — chunk index innermost/sequential.
+
+Per-(head,chunk) VMEM (Q=256, N=128, P=64, f32 scratch):
+  x(Q·P) + B,C(2·Q·N) + decay(Q·Q) + state(N·P) ≈ 0.6 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(alog_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, st_ref,
+            state_ref, *, nc: int, Q: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)               # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)             # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)              # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)              # (Q, N)
+    a = -jnp.exp(alog_ref[0]) * dt                 # (Q,) log-decay
+    l = jnp.cumsum(a)                              # (Q,)
+    xdt = x * dt[:, None]
+
+    # intra-chunk: (C Bᵀ ∘ L) xdt   with L[i,j] = exp(l_i − l_j)·[i ≥ j]
+    li = l[:, None]
+    lj = l[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(tri, jnp.exp(li - lj), 0.0)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(cb * decay, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += (C ∘ exp(l)) @ state_prev      state: (N, P)
+    y += jax.lax.dot_general(Cm * jnp.exp(l)[:, None], state_ref[...],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # state update: state = exp(l_Q)·state + (B ∘ exp(l_Q − l))ᵀ @ xdt
+    lQ = l[Q - 1]
+    seg = jnp.exp(lQ - l)
+    state_ref[...] = jnp.exp(lQ) * state_ref[...] + jax.lax.dot_general(
+        Bm * seg[:, None], xdt, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _emit_state():
+        st_ref[0] = state_ref[...].astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_bh(x, dt, a_log, B, C, *, chunk: int = 256,
+                interpret: bool = False):
+    """x (BH,S,P); dt (BH,S); a_log (BH,); B,C (BG,S,N) with BH = BG·rep.
+    Returns (y (BH,S,P), final_state (BH,N,P))."""
+    BH, S, P = x.shape
+    BG, _, N = B.shape
+    assert BH % BG == 0
+    rep = BH // BG
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    grid = (BH, nc)
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, nc=nc, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, c: (h,)),            # a_log
+            pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),  # x
+            pl.BlockSpec((1, Q), lambda h, c: (h, c)),        # dt
+            pl.BlockSpec((1, Q, N), lambda h, c: (h // rep, c, 0)),  # B
+            pl.BlockSpec((1, Q, N), lambda h, c: (h // rep, c, 0)),  # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, N, P), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(a_log, x, dt, B, C)
+    return y, st

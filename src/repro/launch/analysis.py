@@ -1,0 +1,308 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = FLOPs_per_device / 197e12        (v5e bf16 peak)
+  memory     = HBM_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9  (per-link ICI)
+
+Sources & honesty notes (EXPERIMENTS.md §Roofline):
+  · collective bytes are parsed from compiled HLO text; ops inside scan
+    bodies (metadata op_name containing "/while/") are multiplied by the
+    loop trip count (measured: XLA's static text lists a while body once).
+  · FLOPs/HBM bytes use exact analytic formulas from the config (below),
+    because cost_analysis() counts every while body once (measured 0.1×
+    for a 10-iteration scan) and several model loops nest; the raw
+    cost_analysis numbers are reported alongside as a diagnostic.
+  · memory fit is taken from compiled.memory_analysis() (per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+from repro.configs import InputShape
+from repro.models.config import ArchConfig
+
+PEAK_FLOPS = 197e12          # v5e bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RX = re.compile(
+    r"(?P<typ>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RX = re.compile(r"=\s*(?:\()?\s*(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _result_bytes(line: str) -> int:
+    """Sum result-tuple element bytes on an HLO op line."""
+    total = 0
+    for m in _SHAPE_RX.finditer(line.split("metadata=")[0]):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# computation headers: "%name (params...) -> type {" — params may contain
+# nested tuple types, so only anchor on the leading name
+_COMP_HDR_RX = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RX = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RX = re.compile(r"body=%?([\w.\-]+)")
+_CALL_RX = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = _COMP_HDR_RX.match(line) if (line and not line[0].isspace()) else None
+        if m and ls.endswith("{") and "->" in line:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+        elif ls == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(ls)
+    comps["__entry__"] = [entry or ""]
+    return comps
+
+
+def parse_collectives(hlo_text: str,
+                      loop_trips: tuple[int, ...] = ()) -> dict:
+    """Collective bytes per device by op type, loop-aware.
+
+    XLA's static text lists a while body once (measured); we rebuild the
+    call graph, read each while's backend_config known_trip_count, and
+    multiply collective bytes by the product of enclosing trip counts.
+    loop_trips[0] is the fallback trip for loops without the annotation.
+    """
+    comps = _split_computations(hlo_text)
+    entry = comps.pop("__entry__")[0]
+    default_trip = loop_trips[0] if loop_trips else 1
+
+    # per-computation: collective bytes + outgoing edges (child, trip)
+    coll_b: dict[str, dict[str, float]] = {}
+    counts: dict[str, int] = {}
+    edges: dict[str, list[tuple[str, int]]] = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        cb: dict[str, float] = {}
+        for line in lines:
+            mb = _BODY_RX.search(line)
+            if mb and "while(" in line:
+                mt = _TRIP_RX.search(line)
+                trip = int(mt.group(1)) if mt else default_trip
+                edges[cname].append((mb.group(1), trip))
+            for mc in _CALL_RX.finditer(line):
+                if "while(" not in line:
+                    edges[cname].append((mc.group(1), 1))
+            m = _COLL_RX.search(line)
+            if not m or "-done" in line.split("=")[0]:
+                continue
+            typ = m.group("typ")
+            b = _result_bytes(line)
+            if typ == "all-reduce":
+                b *= 2                       # ring AR moves ≈2× payload
+            cb[typ] = cb.get(typ, 0.0) + b
+            counts[typ] = counts.get(typ, 0) + 1
+        coll_b[cname] = cb
+
+    # propagate multipliers from entry
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    if entry in mult:
+        mult[entry] = 1.0
+    changed = True
+    it = 0
+    while changed and it < 10_000:
+        changed = False
+        it += 1
+        for cname, outs in edges.items():
+            if mult.get(cname, 0.0) <= 0:
+                continue
+            for child, trip in outs:
+                want = mult[cname] * trip
+                if child in mult and want > mult[child]:
+                    mult[child] = want
+                    changed = True
+
+    out: dict[str, float] = {}
+    for cname, cb in coll_b.items():
+        f = mult.get(cname, 0.0) or (1.0 if cname == entry else 0.0)
+        for typ, b in cb.items():
+            out[typ] = out.get(typ, 0.0) + b * f
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["op_counts"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs / bytes (documented formulas)
+# ---------------------------------------------------------------------------
+
+def _sublayer_flops_per_token(cfg: ArchConfig, sub, kind: str,
+                              seq_len: int) -> float:
+    D = cfg.d_model
+    fl = 0.0
+    if sub.mixer in ("attn", "cross_attn"):
+        Hdh = cfg.n_heads * cfg.head_dim
+        Kdh = cfg.n_kv_heads * cfg.head_dim
+        fl += 2 * D * Hdh + 2 * 2 * D * Kdh + 2 * Hdh * D
+        if kind == "decode":
+            eff = seq_len if sub.attn_kind != "local" or not cfg.sliding_window \
+                else min(cfg.sliding_window, seq_len)
+        else:
+            full = seq_len / 2                       # causal average
+            eff = full if sub.attn_kind != "local" or not cfg.sliding_window \
+                else min(cfg.sliding_window, full)
+        fl += 4 * cfg.n_heads * cfg.head_dim * eff   # qk^T + pv
+    elif sub.mixer == "ssm":
+        H = D * cfg.ssm_expand // cfg.ssm_headdim
+        P = cfg.ssm_headdim
+        N = cfg.ssm_state
+        GN = cfg.ssm_groups * N
+        d_inner = H * P
+        fl += 2 * D * (2 * d_inner) + 2 * D * 2 * GN + 2 * D * H
+        fl += 2 * cfg.ssm_conv * (d_inner + 2 * GN)
+        if kind == "decode":
+            fl += 6 * H * N * P                      # state update + read
+        else:
+            Q = min(cfg.ssm_chunk, seq_len)
+            fl += H * (2 * Q * (N + P) + 4 * N * P)  # SSD chunked
+        fl += 2 * d_inner * D
+    if sub.ffn == "dense":
+        fl += 3 * 2 * D * cfg.d_ff
+    elif sub.ffn == "moe":
+        fl += 2 * D * cfg.n_experts
+        fl += 3 * 2 * D * cfg.d_ff * cfg.top_k * cfg.capacity_factor
+    return fl
+
+
+def _layer_list(cfg: ArchConfig):
+    n_sb, tail, pattern = cfg.blocks_layout()
+    if cfg.n_enc_layers:
+        pattern = cfg.dec_pattern()
+        n_sb, tail = cfg.n_layers, 0
+    return n_sb, tail, pattern
+
+
+def analytic_step_flops(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Global (all-device) FLOPs for one step of the shape's kind."""
+    kind = shape.kind
+    S, B = shape.seq_len, shape.global_batch
+    n_sb, tail, pattern = _layer_list(cfg)
+    per_tok = sum(_sublayer_flops_per_token(cfg, s, kind, S) for s in pattern)
+    per_tok_tail = sum(_sublayer_flops_per_token(cfg, pattern[i], kind, S)
+                       for i in range(tail))
+    layers_per_tok = per_tok * n_sb + per_tok_tail
+    if cfg.n_enc_layers:
+        enc_sub = type(pattern[0])("attn", "dense", "global")
+        layers_per_tok += _sublayer_flops_per_token(
+            cfg, enc_sub, "prefill", S // 2) * cfg.n_enc_layers
+
+    head = 2 * cfg.d_model * cfg.vocab_size
+    if kind == "train":
+        tokens = B * S
+        fwd = layers_per_tok * tokens + head * tokens
+        total = 3.0 * fwd                 # fwd + remat-fwd + dL/dx bwd
+    elif kind == "prefill":
+        tokens = B * S
+        total = layers_per_tok * tokens + head * B
+    else:                                 # decode: one token per sequence
+        tokens = B
+        total = layers_per_tok * tokens + head * B
+    return {"flops_global": float(total), "tokens": float(tokens)}
+
+
+def param_counts(cfg: ArchConfig, abstract_params) -> dict:
+    import jax
+    total = 0
+    expert = 0
+    embed_head = 0
+    for p, x in jax.tree_util.tree_leaves_with_path(abstract_params):
+        n = int(np.prod(x.shape))
+        total += n
+        path = "/".join(str(getattr(k, "key", k)) for k in p)
+        if "experts" in path:
+            expert += n
+        if path.startswith(("embed/", "lm_head/")):
+            embed_head += n
+    active = total - expert
+    if cfg.n_experts:
+        active += expert * cfg.top_k / cfg.n_experts
+    return {"n_params": total, "n_active": int(active),
+            "n_active_body": int(active - embed_head),
+            "embed_head_params": embed_head,
+            "expert_params": expert}
+
+
+def analytic_step_bytes(cfg: ArchConfig, shape: InputShape, n_params: int,
+                        n_devices: int, cache_bytes_global: int = 0) -> dict:
+    """Per-device HBM traffic model (documented, coarse but stated):
+
+      train:   3 passes over resident params (fwd, remat, bwd)
+               + activation traffic ≈ L · T_dev · D · 2B · 12
+      prefill: 1 pass over params + activations + cache write
+      decode:  1 pass over params + cache read   (weights+cache bound)
+    """
+    pbytes_dev = n_params * 2 / n_devices * _param_replication(cfg)
+    S, B = shape.seq_len, shape.global_batch
+    L = cfg.n_layers + cfg.n_enc_layers
+    D = cfg.d_model
+    if shape.kind == "train":
+        t_dev = B * S / n_devices
+        act = L * t_dev * D * 2 * 12
+        total = 3 * pbytes_dev + act
+    elif shape.kind == "prefill":
+        t_dev = B * S / n_devices
+        act = L * t_dev * D * 2 * 8
+        total = pbytes_dev + act + cache_bytes_global / n_devices
+    else:
+        total = pbytes_dev + cache_bytes_global / n_devices
+    return {"hbm_bytes_dev": float(total),
+            "param_bytes_dev": float(pbytes_dev)}
+
+
+def _param_replication(cfg: ArchConfig) -> float:
+    """Non-expert params are replicated across the data axes (16×) but the
+    per-device RESIDENT bytes are what one step reads — replication factor
+    1 for traffic purposes."""
+    return 1.0
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+
+def roofline_terms(flops_global: float, hbm_bytes_dev: float,
+                   coll_bytes_dev: float, n_devices: int) -> Roofline:
+    return Roofline(
+        compute_s=flops_global / n_devices / PEAK_FLOPS,
+        memory_s=hbm_bytes_dev / HBM_BW,
+        collective_s=coll_bytes_dev / ICI_BW,
+    )

@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) combination on the production mesh, with no real allocation, and
+record memory/cost/collective analysis for the roofline.
+
+MUST be run as its own process (the XLA_FLAGS above lock in 512 host
+devices before jax initializes):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+        --shape train_4k [--multipod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, shape_supported)
+from repro.launch import analysis as AN
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh, dp_size, data_axes
+from repro.launch.serve import make_prefill_step, make_decode_step
+from repro.launch.train import (TrainSettings, make_fed_train_step,
+                                pick_micro_batches)
+from repro.models import model as M
+from repro.utils.sharding import DEFAULT_PARAM_RULES
+from repro.utils import pytree as pt
+
+
+def _mem_dict(mem) -> dict:
+    return {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        # donated buffers alias inputs — don't double-count them
+        "peak_estimate_bytes": mem.argument_size_in_bytes
+        + mem.temp_size_in_bytes + mem.output_size_in_bytes
+        - mem.alias_size_in_bytes,
+    }
+
+
+def _loop_trips(cfg, shape) -> tuple[int, ...]:
+    n_sb, tail, pattern = cfg.blocks_layout()
+    if cfg.n_enc_layers:
+        n_sb = cfg.n_layers
+    trips = [max(n_sb, 1)]
+    if shape.kind in ("train", "prefill") and shape.seq_len >= 2048:
+        trips.append(shape.seq_len // 512)     # chunked-attention q scan
+    return tuple(trips)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            variant: str = "baseline") -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    seq_shard_kv = False
+    remat = True
+    if variant == "seqshard_kv":
+        seq_shard_kv = True
+    elif variant == "cf1":
+        cfg = dataclasses.replace(cfg, capacity_factor=1.0)
+    elif variant == "remat_dots":
+        remat = "dots"
+    elif variant == "swa_global":     # beyond-paper: window the attn layers
+        cfg = dataclasses.replace(cfg, sliding_window=4096)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "n_devices": n_dev, "variant": variant}
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        abs_base = SP.abstract_params(cfg)
+        base_shardings = SP.param_specs(cfg, mesh, abs_base)
+
+        if shape.kind == "train":
+            C = dp_size(mesh)
+            settings = TrainSettings(
+                micro_batches=pick_micro_batches(
+                    cfg, shape.global_batch // C, shape.seq_len),
+                remat=remat)
+            rec["n_clients"] = C
+            rec["micro_batches"] = settings.micro_batches
+            step_fn, opt_init = make_fed_train_step(cfg, mesh, settings)
+            abs_ad = SP.abstract_adapters(cfg, n_clients=C)
+            ad_shardings = SP.adapter_specs(mesh, abs_ad, client_axis=True)
+            abs_ost = jax.eval_shape(opt_init, abs_ad)
+            ost_shardings = jax.tree.map(
+                lambda x, s: s if False else NamedSharding(
+                    mesh, P(_bax(mesh), *([None] * (len(x.shape) - 1)))),
+                abs_ost, abs_ost)
+            batch_args, batch_shardings = SP.train_batch_specs(
+                cfg, shape, mesh, C)
+            step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(base_shardings, ad_shardings, ost_shardings,
+                              NamedSharding(mesh, P()), batch_shardings),
+                out_shardings=(ad_shardings, ost_shardings, None),
+                donate_argnums=(1, 2),   # adapters/opt state update in place
+            ).lower(abs_base, abs_ad, abs_ost, step_abs, batch_args)
+        elif shape.kind == "prefill":
+            fn = make_prefill_step(cfg, mesh)
+            batch_args, batch_shardings = SP.serve_batch_specs(cfg, shape, mesh)
+            lowered = jax.jit(
+                fn, in_shardings=(base_shardings, batch_shardings),
+                out_shardings=None,
+            ).lower(abs_base, batch_args)
+        else:
+            fn = make_decode_step(cfg, mesh)
+            args, shardings = SP.decode_specs(cfg, shape, mesh,
+                                              seq_shard_kv=seq_shard_kv)
+            in_sh = [base_shardings, shardings["new_token"],
+                     shardings["cache"], shardings["cache_index"]]
+            in_args = [abs_base, args["new_token"], args["cache"],
+                       args["cache_index"]]
+            if cfg.n_enc_layers:
+                in_sh.append(shardings["enc_out"])
+                in_args.append(args["enc_out"])
+            lowered = jax.jit(
+                fn, in_shardings=tuple(in_sh), out_shardings=None,
+                donate_argnums=(2,),     # KV cache updates in place
+            ).lower(*in_args)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = _mem_dict(mem)
+        rec["fits_16g"] = rec["memory"]["peak_estimate_bytes"] < 16e9
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {
+            "flops_per_device_raw": ca.get("flops", 0.0),
+            "bytes_accessed_raw": ca.get("bytes accessed", 0.0),
+            "note": "XLA counts while bodies once; see analysis.py",
+        }
+        txt = compiled.as_text()
+        rec["hlo_lines"] = len(txt.splitlines())
+        colls = AN.parse_collectives(txt, _loop_trips(cfg, shape))
+        rec["collectives"] = colls
+        # archive the HLO (gzip) so collective accounting can be re-derived
+        # without recompiling
+        import gzip
+        hdir = os.path.join("experiments", "hlo")
+        os.makedirs(hdir, exist_ok=True)
+        tagname = (f"{arch}__{shape_name}__"
+                   f"{'2x16x16' if multi_pod else '16x16'}"
+                   + ("" if variant == "baseline" else f"__{variant}"))
+        with gzip.open(os.path.join(hdir, tagname + ".hlo.gz"), "wt") as fh:
+            fh.write(txt)
+
+        # analytic roofline
+        fl = AN.analytic_step_flops(cfg, shape)
+        pc = AN.param_counts(cfg, abs_base)
+        cache_bytes = 0
+        if shape.kind == "decode":
+            cache = SP.abstract_cache(
+                cfg, shape.global_batch,
+                shape.seq_len // 2 if cfg.n_enc_layers else shape.seq_len)
+            cache_bytes = pt.tree_bytes(cache)
+        by = AN.analytic_step_bytes(cfg, shape, pc["n_params"], n_dev,
+                                    cache_bytes)
+        terms = AN.roofline_terms(fl["flops_global"], by["hbm_bytes_dev"],
+                                  colls["total"] / n_dev, n_dev)
+        # MODEL_FLOPS: body params see every token; the lm_head sees every
+        # token only in training (serve computes last-position logits), and
+        # the embedding gather is not FLOPs.
+        head_p = cfg.d_model * cfg.vocab_size
+        factor = 6 if shape.kind == "train" else 2
+        head_tokens = fl["tokens"] if shape.kind == "train" \
+            else shape.global_batch
+        model_flops = factor * pc["n_active_body"] * fl["tokens"] \
+            + factor * head_p * head_tokens
+        rec.update({
+            "params": pc,
+            "analytic": {**fl, **by, "cache_bytes_global": cache_bytes},
+            "roofline": {
+                "compute_s": terms.compute_s,
+                "memory_s": terms.memory_s,
+                "collective_s": terms.collective_s,
+                "dominant": terms.dominant,
+                "model_flops": model_flops,
+                "useful_flops_ratio":
+                    model_flops / max(fl["flops_global"], 1.0),
+            },
+        })
+    return rec
+
+
+def _bax(mesh):
+    ax = data_axes(mesh)
+    return ax if len(ax) > 1 else ax[0]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    if args.all:
+        for mp in (False, True):   # full single-pod table first
+            for a in ARCH_IDS:
+                if a == "llama2-7b":
+                    continue       # paper target, not an assigned pair
+                for s in SHAPES:
+                    if not shape_supported(a, s):
+                        continue
+                    combos.append((a, s, mp))
+    else:
+        meshes = [False, True] if args.both_meshes else [args.multipod]
+        for mp in meshes:
+            combos.append((args.arch, args.shape, mp))
+    variant = getattr(args, "variant", "baseline")
+
+    results = []
+    for arch, shape, mp in combos:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        if variant != "baseline":
+            tag += f"__{variant}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            rec = run_one(arch, shape, mp, variant=variant)
+            rec["status"] = "ok"
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(rec["error"][:400])
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"  ok: compile={rec['compile_s']}s "
+                  f"mem={rec['memory']['peak_estimate_bytes']/1e9:.2f}GB "
+                  f"terms(c/m/coll)={r['compute_s']:.2e}/{r['memory_s']:.2e}/"
+                  f"{r['collective_s']:.2e} dom={r['dominant']}", flush=True)
+        results.append(rec)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving steps: batched prefill + one-token decode under pjit.
+
+Per-tenant adapters: the decomposed-LoRA overlay merges into the
+(model-sharded) backbone; personalized ΔB_M vectors are a few hundred
+bytes per tenant, so a pod can hold thousands of personalized variants of
+one backbone — the deployment story the paper's local optimizer implies.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.utils import pytree as pt
+
+Params = Any
+
+
+def make_prefill_step(cfg: ArchConfig, mesh=None):
+    def prefill_step(params, batch):
+        logits, cache = M.prefill(params, batch, cfg, mesh=mesh)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh=None):
+    def decode_step(params, new_token, cache, cache_index, enc_out=None):
+        return M.decode_step(params, new_token, cache, cache_index, cfg,
+                             mesh=mesh, enc_out=enc_out)
+
+    return decode_step
+
+
+def greedy_generate(params, prompt_batch: dict, cfg: ArchConfig,
+                    n_new: int = 16, mesh=None):
+    """Simple greedy loop for the examples (prefill → decode)."""
+    S = prompt_batch["tokens"].shape[1]
+    logits, cache = M.prefill(params, prompt_batch, cfg, mesh=mesh,
+                              cache_len=S + n_new)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    step = make_decode_step(cfg, mesh)
+    idx = S
+    for _ in range(n_new - 1):
+        logits, cache = step(params, tok, cache, jnp.asarray(idx, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+        idx += 1
+    return jnp.stack(out, axis=1)
+
+
+def merge_adapters(base: Params, adapters: Params) -> Params:
+    return pt.merge_trees(base, adapters)

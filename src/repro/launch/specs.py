@@ -1,0 +1,231 @@
+"""ShapeDtypeStruct input specs + sharding specs for every
+(architecture × input-shape × mesh) combination — no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape
+from repro.core import peft
+from repro.launch.mesh import data_axes, dp_size
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.utils import pytree as pt
+from repro.utils.sharding import DEFAULT_PARAM_RULES, spec_for
+
+Params = Any
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _bspec(mesh):
+    ax = data_axes(mesh)
+    return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+
+# ---------------------------------------------------------------------------
+# abstract param / adapter / cache trees (eval_shape — zero allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_adapters(cfg: ArchConfig, n_clients: int = 0):
+    base = abstract_params(cfg)
+
+    def build():
+        # eval_shape can't thread real PRNG use cheaply; adapters are tiny
+        # but still built abstractly for uniformity.
+        ad = peft.add_lora(base_concrete, cfg, jax.random.PRNGKey(0),
+                           decomposed=True)
+        return ad
+
+    # peft.add_lora only reads shapes from base leaves; give it structs.
+    base_concrete = base
+    ad = jax.eval_shape(build)
+    if n_clients:
+        ad = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((n_clients,) + x.shape, x.dtype), ad)
+    return ad
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: M.init_cache(cfg, batch, seq_len))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ArchConfig, mesh, tree):
+    return pt.tree_map_with_path(
+        lambda p, x: NamedSharding(
+            mesh, spec_for(p, len(x.shape), DEFAULT_PARAM_RULES, mesh)), tree)
+
+
+def adapter_specs(mesh, tree, client_axis: bool):
+    """Adapters: tiny → replicated, except the leading client axis (if any)
+    which is sharded over the data axes (1 client per data shard)."""
+    b = _bspec(mesh)
+
+    def fn(p, x):
+        if client_axis:
+            return NamedSharding(mesh, P(b, *([None] * (len(x.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return pt.tree_map_with_path(fn, tree)
+
+
+def cache_specs(cfg: ArchConfig, mesh, tree, batch: int,
+                seq_shard_kv: bool = False):
+    """KV caches: batch over data axes when batch ≥ dp, else shard the seq
+    axis (long-context, batch=1).  Head/state dims over 'model' when they
+    divide.
+
+    seq_shard_kv (hillclimb variant): shard the cache SEQ dim over 'model'
+    instead of splitting head_dim — when kv_heads < tp the baseline layout
+    forces XLA to all-gather the whole cache every layer (measured 68 GB
+    per decode step on qwen3-32b); flash-decoding-style sequence sharding
+    replaces that with small softmax-stat/partial-output reductions."""
+    b = _bspec(mesh)
+    dp = dp_size(mesh)
+    tp = mesh.shape["model"]
+
+    def fn(path, x):
+        shp = x.shape
+        stacked = len(shp) >= 5 or (len(shp) == 4 and "conv" in path)
+        if path.endswith("/k") or path.endswith("/v"):
+            # (n_sb?, B, S, K, dh)
+            B, S, K, dh = shp[-4], shp[-3], shp[-2], shp[-1]
+            lead = [None] * (len(shp) - 4)
+            if batch >= dp and B % dp == 0:
+                if seq_shard_kv and K % tp and S % tp == 0:
+                    spec = lead + [b, "model", None, None]
+                else:
+                    spec = lead + [b, None,
+                                   "model" if K % tp == 0 else None,
+                                   "model" if (K % tp and dh % tp == 0) else None]
+                    if spec[-2] == "model":
+                        spec[-1] = None
+            else:
+                spec = lead + [None, b, None,
+                               "model" if dh % tp == 0 else None]
+            return NamedSharding(mesh, P(*spec))
+        if path.endswith("/state"):
+            # (n_sb?, B, H, P, N)
+            B, H = shp[-4], shp[-3]
+            lead = [None] * (len(shp) - 4)
+            spec = lead + [b if (batch >= dp and B % dp == 0) else None,
+                           "model" if H % tp == 0 else None, None, None]
+            return NamedSharding(mesh, P(*spec))
+        if "conv" in path:
+            B, C = shp[-3], shp[-1]
+            lead = [None] * (len(shp) - 3)
+            spec = lead + [b if (batch >= dp and B % dp == 0) else None,
+                           None, "model" if C % tp == 0 else None]
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return pt.tree_map_with_path(fn, tree)
+
+
+# ---------------------------------------------------------------------------
+# input specs per shape kind
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepSpec:
+    """Everything dryrun needs: fn args as ShapeDtypeStructs + shardings."""
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape, mesh,
+                      n_clients: int):
+    """Stacked federated batch (C, B_c, S) + frontend embeddings."""
+    b = _bspec(mesh)
+    B_c = shape.global_batch // n_clients
+    S = shape.seq_len
+    S_tok = S
+    extras = {}
+    if cfg.frontend and not cfg.n_enc_layers:
+        S_mm = min(cfg.frontend_tokens, S // 2)
+        S_tok = S - S_mm
+        extras["frontend_emb"] = (
+            jax.ShapeDtypeStruct((n_clients, B_c, S_mm, cfg.d_model), _dt(cfg)),
+            NamedSharding(mesh, P(b, None, None, None)))
+    if cfg.n_enc_layers:
+        S_tok = S // 2
+        extras["frontend_emb"] = (
+            jax.ShapeDtypeStruct((n_clients, B_c, S // 2, cfg.d_model), _dt(cfg)),
+            NamedSharding(mesh, P(b, None, None, None)))
+    batch = {
+        "tokens": (jax.ShapeDtypeStruct((n_clients, B_c, S_tok), jnp.int32),
+                   NamedSharding(mesh, P(b, None, None))),
+        "loss_mask": (jax.ShapeDtypeStruct((n_clients, B_c, S_tok), jnp.float32),
+                      NamedSharding(mesh, P(b, None, None))),
+        **extras,
+    }
+    args = {k: v[0] for k, v in batch.items()}
+    shardings = {k: v[1] for k, v in batch.items()}
+    return args, shardings
+
+
+def serve_batch_specs(cfg: ArchConfig, shape: InputShape, mesh):
+    """Prefill inputs (B, S)."""
+    b = _bspec(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    dp = dp_size(mesh)
+    bs = b if B % dp == 0 and B >= dp else None
+    S_tok = S
+    extras = {}
+    if cfg.frontend and not cfg.n_enc_layers:
+        S_mm = min(cfg.frontend_tokens, S // 2)
+        S_tok = S - S_mm
+        extras["frontend_emb"] = (
+            jax.ShapeDtypeStruct((B, S_mm, cfg.d_model), _dt(cfg)),
+            NamedSharding(mesh, P(bs, None, None)))
+    if cfg.n_enc_layers:
+        S_tok = S // 2
+        extras["frontend_emb"] = (
+            jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), _dt(cfg)),
+            NamedSharding(mesh, P(bs, None, None)))
+    batch = {
+        "tokens": (jax.ShapeDtypeStruct((B, S_tok), jnp.int32),
+                   NamedSharding(mesh, P(bs, None))),
+        **extras,
+    }
+    args = {k: v[0] for k, v in batch.items()}
+    shardings = {k: v[1] for k, v in batch.items()}
+    return args, shardings
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape, mesh,
+                 seq_shard_kv: bool = False):
+    """One-token decode: token ids, cache, index (+ enc_out for enc-dec)."""
+    b = _bspec(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    dp = dp_size(mesh)
+    bs = b if B % dp == 0 and B >= dp else None
+    S_cache = S // 2 if cfg.n_enc_layers else S
+    cache = abstract_cache(cfg, B, S_cache)
+    cspecs = cache_specs(cfg, mesh, cache, B, seq_shard_kv=seq_shard_kv)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    args = {"new_token": tok, "cache": cache, "cache_index": idx}
+    shardings = {"new_token": NamedSharding(mesh, P(bs)),
+                 "cache": cspecs,
+                 "cache_index": NamedSharding(mesh, P())}
+    if cfg.n_enc_layers:
+        args["enc_out"] = jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), _dt(cfg))
+        shardings["enc_out"] = NamedSharding(mesh, P(bs, None, None))
+    return args, shardings

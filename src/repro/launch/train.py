@@ -1,0 +1,196 @@
+"""Production federated train step.
+
+TPU-native mapping of the paper's round (DESIGN.md §4):
+
+  · clients ↔ slices of the ('pod','data') axes — ONE client per data
+    shard; each client's decomposed-LoRA adapters live only on its shard;
+  · local SGD ↔ per-shard grad/update inside a shard_map that is MANUAL
+    over ('pod','data') and AUTO over 'model' (XLA still does tensor
+    parallelism inside each client);
+  · aggregation (Eqs. 5–8) ↔ an explicit jax.lax.pmean over the data axes
+    of the decomposed components — the only cross-client (and the only
+    cross-pod) traffic, a few MB of adapter state;
+  · ΔB_M stays client-local (personalization is never averaged).
+
+Gradient accumulation: the per-client batch is split into micro-batches
+(a lax.scan, so HLO stays one body deep) so scan-boundary activations of
+an 88-layer model fit HBM; LoRA grads are accumulated in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import peft
+from repro.launch.mesh import data_axes, dp_size
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.optim import adamw, masked
+from repro.optim.optimizers import apply_updates, clip_by_global_norm
+from repro.utils import pytree as pt
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    lr: float = 1e-4
+    micro_batches: int = 1
+    clip: float = 1.0
+    remat: object = True          # True (full) | "dots" | False
+    # stage: which components train (paper pipeline stages)
+    stage: str = "local_pretrain"   # | "global" | "local"
+
+
+def pick_micro_batches(cfg: ArchConfig, per_client_batch: int,
+                       seq_len: int, budget_bytes: float = 1.0e9) -> int:
+    """Choose grad-accumulation depth so scan-boundary activations
+    (n_superblocks × mb × S × D × 2B) stay under budget."""
+    n_sb, tail, pattern = cfg.blocks_layout()
+    per_mb = (n_sb + 1) * seq_len * cfg.d_model * 2 * len(pattern)
+    mb_max = max(1, int(budget_bytes // max(per_mb, 1)))
+    micro = max(1, -(-per_client_batch // mb_max))
+    while per_client_batch % micro:
+        micro += 1
+    return min(micro, per_client_batch)
+
+
+def _stage_mask(adapters, stage: str):
+    if stage == "global":
+        return peft.mask_stage_global(adapters)
+    if stage == "local":
+        return peft.mask_stage_local(adapters)
+    return peft.mask_stage_local_pretrain(adapters)
+
+
+def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
+    """Returns (train_step, opt_init).  train_step signature:
+
+        train_step(base, adapters, opt_state, step, batch)
+            → (adapters, opt_state, metrics)
+
+    base: global param tree (model-sharded, replicated over data axes).
+    adapters: leading client axis C = dp_size(mesh), sharded 1-per-shard.
+    batch: {"tokens": (C, B_c, S), ...} sharded likewise.
+    """
+    daxes = data_axes(mesh)
+    dp = dp_size(mesh)
+    bspec = daxes if len(daxes) > 1 else daxes[0]
+    micro = settings.micro_batches
+    is_moe = cfg.n_experts > 0
+
+    def client_body(base, adapters, opt_state, step, batch):
+        # ---- inside the manual region: one client per shard -------------
+        adapters = jax.tree.map(lambda x: x[0], adapters)   # drop C axis
+        opt_state = jax.tree.map(lambda x: x[0], opt_state)
+        batch = {k: v[0] for k, v in batch.items()}
+        mesh_tag = ("manual", mesh.shape["data"]) if is_moe else None
+
+        def loss_fn(ad, mb):
+            params = pt.merge_trees(base, ad)
+            loss, met = M.loss_and_metrics(params, mb, cfg,
+                                           mesh=mesh_tag,
+                                           remat=settings.remat)
+            return loss, met
+
+        # gradient accumulation over micro-batches via lax.scan: one HLO
+        # body regardless of depth (an unrolled loop made 88-layer compiles
+        # explode), forward-only carry (grads), no cross-step residuals.
+        B_c = batch["tokens"].shape[0]
+        mb_sz = B_c // micro
+        mbatch = {k: v.reshape((micro, mb_sz) + v.shape[1:])
+                  for k, v in batch.items()}
+        g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                          adapters)
+
+        def acc_body(g_acc, mb):
+            (_, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                adapters, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g_acc, g)
+            return g_acc, met
+
+        g_acc, mets = jax.lax.scan(acc_body, g0, mbatch)
+        met_acc = jax.tree.map(lambda x: jnp.sum(x, axis=0), mets)
+        g_acc = jax.tree.map(lambda x: x / micro, g_acc)
+        g_acc = clip_by_global_norm(g_acc, settings.clip)
+
+        upd, opt_state = opt.update(g_acc, opt_state, adapters, step)
+        adapters = apply_updates(adapters, upd)
+
+        # ---- decomposed aggregation (Eqs. 5-8): pmean of every component
+        # EXCEPT the personal ΔB_M — the only cross-client collective.
+        agg = jax.tree.map(lambda x: jax.lax.pmean(x, daxes), adapters)
+        adapters = _select_personal(adapters, agg, re.compile(r"dB_mag$"))
+        met_acc = jax.tree.map(lambda x: jax.lax.pmean(x / micro, daxes),
+                               met_acc)
+
+        adapters = jax.tree.map(lambda x: x[None], adapters)
+        opt_state = jax.tree.map(lambda x: x[None], opt_state)
+        return adapters, opt_state, met_acc
+
+    def _select_personal(local, agg, rx):
+        return pt.tree_map_with_path(
+            lambda p, leaf_agg: _pick(local, p) if rx.search(p) else leaf_agg,
+            agg)
+
+    def _pick(tree, path):
+        node = tree
+        for k in path.split("/"):
+            node = node[k]
+        return node
+
+    # trainable mask from an abstract adapter tree
+    abs_ad = jax.eval_shape(
+        lambda: peft.add_lora(abstract_base(cfg), cfg, jax.random.PRNGKey(0),
+                              decomposed=True))
+    mask = _stage_mask(abs_ad, settings.stage)
+    opt = masked(adamw(settings.lr), mask)
+
+    ad_spec = jax.tree.map(lambda _: P(bspec), abs_ad)
+    ost_abs = jax.eval_shape(opt.init, abs_ad)
+    ost_spec = jax.tree.map(lambda _: P(bspec), ost_abs)
+
+    def batch_spec_of(batch):
+        return {k: P(bspec) for k in batch}
+
+    def train_step(base, adapters, opt_state, step, batch):
+        body = jax.shard_map(
+            partial(client_body),
+            mesh=mesh,
+            in_specs=(base_manual_specs(base, cfg), ad_spec, ost_spec, P(),
+                      batch_spec_of(batch)),
+            out_specs=(ad_spec, ost_spec, P()),
+            axis_names=set(daxes),
+            check_vma=False,
+        )
+        return body(base, adapters, opt_state, step, batch)
+
+    def opt_init(adapters_c):
+        return jax.vmap(opt.init)(adapters_c)
+
+    return train_step, opt_init
+
+
+def abstract_base(cfg: ArchConfig):
+    return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def base_manual_specs(base, cfg: ArchConfig):
+    """Manual specs for the base tree over the DATA axes only: MoE expert
+    slots are expert-parallel (manual over 'data'); everything else is
+    replicated across clients ('model'-axis sharding stays auto)."""
+    def fn(path, x):
+        if cfg.n_experts and re.search(r"moe/experts/", path):
+            # (n_sb, E_slots, D, F) — E_slots manual over 'data'
+            lead = [None] * (len(x.shape) - 3)
+            return P(*lead, "data", None, None)
+        return P(*([None] * len(x.shape)))
+
+    return pt.tree_map_with_path(fn, base)

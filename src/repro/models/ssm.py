@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+TPU adaptation of the CUDA selective-scan: the sequence is split into
+chunks; *intra-chunk* terms are batched matmuls (MXU work, fully visible
+to the compiler — no while loop), and the *inter-chunk* recurrence is a
+log-depth ``jax.lax.associative_scan`` over chunk states.  This keeps the
+HLO loop-free so the dry-run cost analysis sees every FLOP, and it is the
+same decomposition the Pallas kernel tiles into VMEM (kernels/ssd_scan).
+
+Parameterization (separate projections instead of mamba_ssm's fused
+in_proj so tensor-parallel sharding splits cleanly — depthwise convs over
+concat(x,B,C) factor into per-segment convs, so the math is unchanged):
+
+  z_proj (D, d_inner)   gate
+  x_proj (D, d_inner)
+  B_proj (D, G*N)   C_proj (D, G*N)   dt_proj (D, H)
+  conv_x (d_inner, k)  conv_B (G*N, k)  conv_C (G*N, k)   [depthwise causal]
+  A_log (H,)  D_skip (H,)  dt_bias (H,)  norm_w (d_inner,)
+  out_proj (d_inner, D)
+
+with d_inner = expand*D, H = d_inner/headdim heads, G groups, N state dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear, rms_norm
+
+Params = Any
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, C); w: (C, k).
+    state: (B, k-1, C) trailing context (decode) or None (zero-pad)."""
+    B, S, C = x.shape
+    k = w.shape[-1]
+    if state is None:
+        pad = jnp.zeros((B, k - 1, C), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, S+k-1, C)
+    # sum of k shifted elementwise products (avoids an (B,S,k,C) gather)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for j in range(k):
+        y = y + xp[:, j:j + S, :].astype(jnp.float32) * w[:, j].astype(jnp.float32)
+    y = y.astype(x.dtype)
+    new_state = jax.lax.dynamic_slice_in_dim(xp, xp.shape[1] - (k - 1), k - 1, 1)
+    return y, new_state
+
+
+def _ssd_chunked(x, dt, A_log, B, C, chunk: int):
+    """SSD forward.  x: (b, S, H, P); dt: (b, S, H); B,C: (b, S, G, N).
+    Returns y: (b, S, H, P) and final state (b, H, P, N)."""
+    b, S, H, Pd = x.shape
+    cdt = x.dtype                                          # compute dtype for
+    G, N = B.shape[2], B.shape[3]                          # the Q×Q tensors
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(cdt)            # (b,S,H,N)
+    Ch = jnp.repeat(C, rep, axis=2).astype(cdt)
+    dtf = dt.astype(jnp.float32)
+    a = -jnp.exp(A_log.astype(jnp.float32)) * dtf          # (b,S,H) log-decay
+    xdt = (x.astype(jnp.float32) * dtf[..., None]).astype(cdt)  # (b,S,H,P)
+
+    nc = S // chunk
+    shp = lambda t, *rest: t.reshape(b, nc, chunk, *rest)
+    ac, xc = shp(a, H), shp(xdt, H, Pd)
+    Bc, Cc = shp(Bh, H, N), shp(Ch, H, N)
+
+    # intra-chunk: cumulative log-decay within chunk
+    l = jnp.cumsum(ac, axis=2)                             # (b,nc,Q,H)
+    # L[i,j] = exp(l_i - l_j) for i >= j else 0
+    li = l[:, :, :, None, :]                               # (b,nc,Q,1,H)
+    lj = l[:, :, None, :, :]                               # (b,nc,1,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None],
+                      jnp.exp(li - lj), 0.0).astype(cdt)
+    cb = jnp.einsum("bnihd,bnjhd->bnijh", Cc, Bc)          # (b,nc,Q,Q,H)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", cb * decay, xc,
+                         preferred_element_type=jnp.float32)
+
+    # per-chunk end state: sum_j exp(l_last - l_j) B_j x_j^T
+    seg = jnp.exp(l[:, :, -1:, :] - l).astype(cdt)         # (b,nc,Q,H)
+    states = jnp.einsum("bnjh,bnjhd,bnjhp->bnhdp", seg, Bc, xc,
+                        preferred_element_type=jnp.float32)  # (b,nc,H,N,P)
+    chunk_decay = jnp.exp(l[:, :, -1, :])                  # (b,nc,H)
+
+    # inter-chunk recurrence via log-depth associative scan:
+    #   S_c = d_c * S_{c-1} + states_c
+    def comb(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s2 + d2[..., None, None] * s1
+
+    dcum, scum = jax.lax.associative_scan(
+        comb, (chunk_decay, states), axis=1)
+    # state entering chunk c = scum[c-1]
+    s_in = jnp.concatenate(
+        [jnp.zeros_like(scum[:, :1]), scum[:, :-1]], axis=1)   # (b,nc,H,N,P)
+    y_inter = jnp.einsum("bnihd,bnih,bnhdp->bnihp",
+                         Cc, jnp.exp(l), s_in)
+    y = (y_intra + y_inter).reshape(b, S, H, Pd)
+    final_state = scum[:, -1].transpose(0, 1, 3, 2)         # (b,H,P,N)
+    return y, final_state
+
+
+def mamba2_mixer(p: Params, x, cfg, *, cache: Optional[dict] = None,
+                 cache_index=None, lora_scale: float = 0.0,
+                 dropout_rng=None, return_cache: bool = False):
+    """Full Mamba-2 block body (pre-norm applied by caller).
+
+    Adapters (the paper's technique, adapted per DESIGN §8) attach to the
+    x_proj ("in") and out_proj projections when the config's lora_targets
+    name them.
+    """
+    B, S, D = x.shape
+    H, Pd = cfg.d_model * cfg.ssm_expand // cfg.ssm_headdim, cfg.ssm_headdim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    d_inner = H * Pd
+
+    tgt = cfg.lora_targets
+    z = linear(p["z_proj"], x)
+    xi = linear(p["x_proj"], x,
+                lora_scale=lora_scale if "x_proj" in tgt or "in_proj" in tgt else 0.0,
+                dropout_rng=dropout_rng, dropout=cfg.lora_dropout)
+    Bv = linear(p["B_proj"], x)
+    Cv = linear(p["C_proj"], x)
+    dt = linear(p["dt_proj"], x)
+
+    if cache is None:
+        xi, cx = _causal_conv(xi, p["conv_x"])
+        Bv, cB = _causal_conv(Bv, p["conv_B"])
+        Cv, cC = _causal_conv(Cv, p["conv_C"])
+        new_conv = (cx, cB, cC) if return_cache else None
+    else:
+        xi, cx = _causal_conv(xi, p["conv_x"], cache["conv_x"])
+        Bv, cB = _causal_conv(Bv, p["conv_B"], cache["conv_B"])
+        Cv, cC = _causal_conv(Cv, p["conv_C"], cache["conv_C"])
+        new_conv = (cx, cB, cC)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+    Bv = jax.nn.silu(Bv.astype(jnp.float32)).astype(x.dtype)
+    Cv = jax.nn.silu(Cv.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B,S,H)
+    xh = xi.reshape(B, S, H, Pd)
+    Bh = Bv.reshape(B, S, G, N)
+    Ch = Cv.reshape(B, S, G, N)
+
+    if cache is None:
+        chunk = min(cfg.ssm_chunk, S)
+        if S % chunk:                                       # pad to chunk
+            padlen = chunk - S % chunk
+            padf = lambda t: jnp.pad(t, [(0, 0), (0, padlen)] + [(0, 0)] * (t.ndim - 2))
+            y, st = _ssd_chunked(padf(xh), padf(dt), p["A_log"], padf(Bh),
+                                 padf(Ch), chunk)
+            y = y[:, :S]
+        else:
+            y, st = _ssd_chunked(xh, dt, p["A_log"], Bh, Ch, chunk)
+        new_cache = None
+        if return_cache:
+            new_cache = {"state": st.astype(x.dtype), "conv_x": new_conv[0],
+                         "conv_B": new_conv[1], "conv_C": new_conv[2]}
+    else:
+        # one-token recurrent update: state (B,H,P,N)
+        st = cache["state"].astype(jnp.float32)
+        af = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32)) * dt[:, 0])  # (B,H)
+        rep = H // G
+        Bt = jnp.repeat(Bh[:, 0], rep, axis=1).astype(jnp.float32)   # (B,H,N)
+        Ct = jnp.repeat(Ch[:, 0], rep, axis=1).astype(jnp.float32)
+        xt = xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None]      # (B,H,P)
+        st = af[..., None, None] * st + jnp.einsum("bhp,bhn->bhpn", xt, Bt)
+        yt = jnp.einsum("bhpn,bhn->bhp", st, Ct)
+        y = yt[:, None]                                     # (B,1,H,P)
+        new_cache = {"state": st.astype(cache["state"].dtype),
+                     "conv_x": new_conv[0], "conv_B": new_conv[1],
+                     "conv_C": new_conv[2]}
+
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z)) * w
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    y = linear(p["out_proj"], y,
+               lora_scale=lora_scale if "out_proj" in tgt else 0.0)
+    return y, new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    H = cfg.d_model * cfg.ssm_expand // cfg.ssm_headdim
+    d_inner = H * cfg.ssm_headdim
+    GN = cfg.ssm_groups * cfg.ssm_state
+    k = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((batch, H, cfg.ssm_headdim, cfg.ssm_state), dtype),
+        "conv_x": jnp.zeros((batch, k - 1, d_inner), dtype),
+        "conv_B": jnp.zeros((batch, k - 1, GN), dtype),
+        "conv_C": jnp.zeros((batch, k - 1, GN), dtype),
+    }

@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adamw,
+    sgd,
+    OptState,
+    Optimizer,
+    masked,
+    chain_clip,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+)

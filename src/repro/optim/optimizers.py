@@ -1,0 +1,149 @@
+"""From-scratch optimizers (no optax offline).
+
+An ``Optimizer`` is a pair of pure functions:
+
+  init(params) -> opt_state
+  update(grads, opt_state, params, step) -> (updates, new_opt_state)
+
+``updates`` are *deltas* to add to params.  ``masked`` wraps an optimizer so
+that leaves where the bool-mask pytree is False get zero updates and carry no
+optimizer state (crucial for LoRA: frozen base params must not allocate
+AdamW moments — that is the PEFT memory story).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree as pt
+
+Pytree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple[Pytree, Pytree]]
+
+
+class AdamWState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return AdamWState(
+            mu=jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params),
+            nu=jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params),
+        )
+
+    def update(grads, state, params, step):
+        step = step + 1  # bias correction uses 1-indexed step
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = sched(step)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    mom: Pytree
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return SGDState(mom=())
+        return SGDState(mom=jax.tree.map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), params))
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        g = grads
+        if weight_decay:
+            g = jax.tree.map(lambda gi, p: gi + weight_decay * p, g, params)
+        if momentum == 0.0:
+            updates = jax.tree.map(lambda gi, p: (-lr_t * gi).astype(p.dtype), g, params)
+            return updates, state
+        mom = jax.tree.map(lambda m, gi: momentum * m + gi.astype(jnp.float32),
+                           state.mom, g)
+        updates = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype), mom, params)
+        return updates, SGDState(mom=mom)
+
+    return Optimizer(init=init, update=update)
+
+
+def masked(inner: Optimizer, mask: Pytree) -> Optimizer:
+    """Apply ``inner`` only where the bool-mask pytree is True.
+
+    Masked-out leaves are replaced by zero-size sentinel arrays before the
+    inner optimizer sees them, so frozen params carry **zero bytes** of
+    optimizer state (the PEFT memory story) while pytree structure stays
+    intact for jit/pjit.
+    """
+    _sent = lambda: jnp.zeros((0,), jnp.float32)
+
+    def init(params):
+        selected = jax.tree.map(lambda m, p: p if m else _sent(), mask, params)
+        return inner.init(selected)
+
+    def update(grads, state, params, step):
+        g_sel = jax.tree.map(lambda m, g: g if m else _sent(), mask, grads)
+        p_sel = jax.tree.map(lambda m, p: p if m else _sent(), mask, params)
+        upd, new_state = inner.update(g_sel, state, p_sel, step)
+        full_upd = jax.tree.map(
+            lambda m, u, p: u if m else jnp.zeros_like(p), mask, upd, params)
+        return full_upd, new_state
+
+    return Optimizer(init=init, update=update)
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    norm = pt.global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def chain_clip(inner: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params, step):
+        return inner.update(clip_by_global_norm(grads, max_norm), state,
+                            params, step)
+
+    return Optimizer(init=inner.init, update=update)
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+OptState = Any

@@ -1,0 +1,31 @@
+"""Learning-rate schedules (pure fns of an int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return fn
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.0):
+    def fn(step):
+        warm = lr * jnp.minimum(1.0, step / max(warmup, 1))
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = lr * (final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn

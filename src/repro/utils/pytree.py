@@ -1,0 +1,137 @@
+"""Pytree utilities: path-aware maps, masks, norms, flattening.
+
+The whole framework represents model/optimizer state as nested dicts of
+jnp arrays.  Paths are "/"-joined key strings, e.g.
+``"blocks/attn/q_proj/lora_A"`` — every selection mechanism (trainable
+masks, sharding rules, aggregation filters) keys off these paths.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)
+
+
+def path_str(path) -> str:
+    return "/".join(_key_str(k) for k in path)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Pytree) -> Pytree:
+    """Map ``fn(path, leaf)`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: fn(path_str(p), x), tree
+    )
+
+
+def tree_paths(tree: Pytree) -> list[str]:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return [path_str(p) for p, _ in leaves]
+
+
+def path_mask(tree: Pytree, predicate: Callable[[str], bool]) -> Pytree:
+    """Boolean mask pytree: True where predicate(path)."""
+    return tree_map_with_path(lambda p, x: bool(predicate(p)), tree)
+
+
+def regex_mask(tree: Pytree, pattern: str) -> Pytree:
+    rx = re.compile(pattern)
+    return path_mask(tree, lambda p: rx.search(p) is not None)
+
+
+def tree_select(tree: Pytree, mask: Pytree, other: Pytree) -> Pytree:
+    """Per-leaf select: mask ? tree : other  (mask is a bool pytree)."""
+    return jax.tree.map(lambda m, a, b: a if m else b, mask, tree, other)
+
+
+def tree_zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_dot(a: Pytree, b: Pytree):
+    parts = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(parts)
+
+
+def global_norm(tree: Pytree):
+    sq = jax.tree.leaves(jax.tree.map(lambda x: jnp.sum(jnp.square(x)), tree))
+    return jnp.sqrt(sum(sq))
+
+
+def tree_count_params(tree: Pytree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: Pytree) -> int:
+    return int(
+        sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+    )
+
+
+def filter_tree(tree: Mapping, predicate: Callable[[str], bool]) -> dict:
+    """Return a nested-dict subtree containing only leaves whose path
+    satisfies ``predicate``; empty dicts are pruned."""
+    out: dict = {}
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    for p, leaf in leaves:
+        ps = path_str(p)
+        if not predicate(ps):
+            continue
+        keys = ps.split("/")
+        cur = out
+        for k in keys[:-1]:
+            cur = cur.setdefault(k, {})
+        cur[keys[-1]] = leaf
+    return out
+
+
+def merge_trees(base: Mapping, overlay: Mapping) -> dict:
+    """Deep merge: overlay leaves replace base leaves."""
+    out = dict(base)
+    for k, v in overlay.items():
+        if k in out and isinstance(out[k], Mapping) and isinstance(v, Mapping):
+            out[k] = merge_trees(out[k], v)
+        else:
+            out[k] = v
+    return out
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def tree_all_finite(tree: Pytree):
+    leaves = jax.tree.leaves(tree)
+    oks = [jnp.all(jnp.isfinite(x)) for x in leaves if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not oks:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack(oks))

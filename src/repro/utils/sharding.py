@@ -1,0 +1,135 @@
+"""Sharding rules: map param paths → PartitionSpec via ordered regex rules.
+
+Rules are (regex, spec-template) pairs.  A spec template is a tuple whose
+entries are either None, a mesh-axis name, or a tuple of axis names.  Axis
+names that do not exist in the mesh are dropped (so the same rule table
+works for the single-pod ("data","model") mesh and the multi-pod
+("pod","data","model") mesh).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Sequence[tuple[str, tuple]]
+
+
+def _filter_axes(entry, mesh_axes: set[str]):
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in mesh_axes else None
+    # tuple of axes: keep only present ones
+    kept = tuple(a for a in entry if a in mesh_axes)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def spec_for(path: str, ndim: int, rules: Rules, mesh: Mesh) -> P:
+    mesh_axes = set(mesh.axis_names)
+    for rx, template in rules:
+        if re.search(rx, path):
+            entries = [_filter_axes(e, mesh_axes) for e in template]
+            # pad/trim template to the array rank (templates are written
+            # for the unstacked rank; scan-stacking prepends dims).
+            if len(entries) < ndim:
+                entries = [None] * (ndim - len(entries)) + entries
+            elif len(entries) > ndim:
+                entries = entries[len(entries) - ndim:]
+            return P(*entries)
+    return P()  # replicated
+
+
+def tree_shardings(tree, rules: Rules, mesh: Mesh):
+    """NamedSharding pytree for a pytree of arrays/ShapeDtypeStructs."""
+    from repro.utils.pytree import tree_map_with_path
+
+    def fn(path, x):
+        return NamedSharding(mesh, spec_for(path, len(x.shape), rules, mesh))
+
+    return tree_map_with_path(fn, tree)
+
+
+def tree_specs(tree, rules: Rules, mesh: Mesh):
+    from repro.utils.pytree import tree_map_with_path
+
+    return tree_map_with_path(
+        lambda p, x: spec_for(p, len(x.shape), rules, mesh), tree
+    )
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch_axis: int = 0) -> P:
+    """Shard the batch dim over every data-like axis present in the mesh."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    entries: list[Any] = [None] * ndim
+    entries[batch_axis] = data_axes if len(data_axes) > 1 else (
+        data_axes[0] if data_axes else None
+    )
+    return P(*entries)
+
+
+def local_device_count_for(mesh: Mesh) -> int:
+    return mesh.devices.size
+
+
+# ---------------------------------------------------------------------------
+# Default rule table for the model zoo.  Paths look like:
+#   embed/embedding                         (vocab, d)
+#   blocks/<i>/attn/{q,k,v,o}_proj/kernel   (d, heads*dh) stacked → (L, d, H*dh)
+#   blocks/<i>/mlp/{up,gate}_proj/kernel    (d, ff)
+#   blocks/<i>/mlp/down_proj/kernel         (ff, d)
+#   blocks/<i>/moe/experts/{up,gate}        (E, d, ff)
+#   blocks/<i>/moe/experts/down             (E, ff, d)
+#   blocks/<i>/moe/router/kernel            (d, E)
+#   blocks/<i>/ssm/...                      mamba mixer params
+#   lm_head/kernel                          (d, vocab)
+#   .../lora_A  (r, d_in) — replicated (tiny) ; .../lora_B (d_out, r)
+# ---------------------------------------------------------------------------
+
+DEFAULT_PARAM_RULES: Rules = (
+    # adapters: tiny, replicated (may carry a leading per-client axis which
+    # is sharded by the fed runtime, not these rules)
+    (r"lora_|prompt_|adapter_|_mag$|_dir$", ()),
+    # MoE experts: expert-parallel over data axis, d_ff tensor-parallel
+    (r"moe/experts/(up|gate)", ("data", None, "model")),
+    (r"moe/experts/down", ("data", "model", None)),
+    (r"moe/router", (None, None)),
+    # attention projections: head dim tensor-parallel
+    (r"attn/(q_proj|k_proj|v_proj)/kernel", (None, "model")),
+    (r"attn/o_proj/kernel", ("model", None)),
+    # dense mlp
+    (r"mlp/(up_proj|gate_proj)/kernel", (None, "model")),
+    (r"mlp/down_proj/kernel", ("model", None)),
+    # mamba mixer: inner dim tensor-parallel
+    (r"ssm/in_proj/kernel", (None, "model")),
+    (r"ssm/out_proj/kernel", ("model", None)),
+    (r"ssm/(conv_w|A_log|D|dt_bias|norm_w)", ("model",)),
+    # embeddings / unembedding: vocab tensor-parallel
+    (r"embed/embedding", ("model", None)),
+    (r"lm_head/kernel", (None, "model")),
+    # norms etc: replicated
+    (r".*", ()),
+)
+
+# FSDP overlay: additionally shard the *frozen* big tensors over the data
+# axis (ZeRO-3 style) for archs that do not fit with pure tensor-parallel.
+FSDP_PARAM_RULES: Rules = (
+    (r"lora_|prompt_|adapter_|_mag$|_dir$", ()),
+    (r"moe/experts/(up|gate)", ("data", None, "model")),
+    (r"moe/experts/down", ("data", "model", None)),
+    (r"moe/router", (None, None)),
+    (r"attn/(q_proj|k_proj|v_proj)/kernel", ("data", "model")),
+    (r"attn/o_proj/kernel", (("data", "model"), None)),
+    (r"mlp/(up_proj|gate_proj)/kernel", ("data", "model")),
+    (r"mlp/down_proj/kernel", (("data", "model"), None)),
+    (r"ssm/in_proj/kernel", ("data", "model")),
+    (r"ssm/out_proj/kernel", (("data", "model"), None)),
+    (r"ssm/(conv_w|A_log|D|dt_bias|norm_w)", ("model",)),
+    (r"embed/embedding", (("data", "model"), None)),
+    (r"lm_head/kernel", ("data", "model")),
+    (r".*", ()),
+)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run owns the 512-device env); keep any
+# inherited XLA_FLAGS from leaking in.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

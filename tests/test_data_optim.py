@@ -1,0 +1,105 @@
+"""Synthetic-data correctness + optimizer unit tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.partition import dirichlet_task_partition, specialist_partition
+from repro.data.synthetic import (ANS, SyntheticInstructionDataset,
+                                  TASK_TYPES, make_dataset_family)
+from repro.optim import adamw, masked, sgd
+from repro.optim.optimizers import apply_updates, clip_by_global_norm
+
+
+@pytest.mark.parametrize("family", ["dolly", "ni"])
+@pytest.mark.parametrize("task", TASK_TYPES)
+def test_answer_is_recoverable(family, task):
+    """The answer token must follow the ANS marker and be marked by the
+    loss mask one position earlier (next-token alignment)."""
+    fam = make_dataset_family(family)
+    ds = SyntheticInstructionDataset(fam, [0.25] * 4, client_seed=3)
+    rng = np.random.default_rng(0)
+    b = ds.sample_task_batch(rng, 16, 48, task)
+    toks, mask = b["tokens"], b["loss_mask"]
+    aux = SyntheticInstructionDataset.AUX_LM_WEIGHT
+    for i in range(16):
+        full = np.where(mask[i] >= 0.999)[0]
+        assert len(full) == 1               # exactly one answer position
+        pos = int(full[0])
+        assert toks[i, pos] == ANS          # mask position predicts next tok
+        assert toks[i, pos + 1] >= 4        # the answer token
+        # context carries only the auxiliary LM weight; padding none
+        near = np.abs(mask[i][:, None]
+                      - np.asarray([0.0, aux, 1.0], np.float32)[None, :])
+        assert np.all(near.min(axis=1) < 1e-6)
+
+
+def test_causal_task_consistent_mapping():
+    fam = make_dataset_family("dolly")
+    ds = SyntheticInstructionDataset(fam, [1, 0, 0, 0], client_seed=5)
+    rng = np.random.default_rng(0)
+    qa = {}
+    for _ in range(200):
+        toks, mask, _ = ds.sample(rng, 48)
+        pos = int(np.argmax(mask))
+        q, a = int(toks[pos - 1]), int(toks[pos + 1])
+        assert qa.setdefault(q, a) == a     # same client ⇒ same mapping
+
+
+def test_dirichlet_partition_rows_stochastic():
+    p = dirichlet_task_partition(8, 4, 0.5, seed=1)
+    assert p.shape == (8, 4)
+    np.testing.assert_allclose(p.sum(1), 1.0, rtol=1e-6)
+
+
+def test_specialist_partition_one_hot():
+    p = specialist_partition(8, 4)
+    assert (p.sum(1) == 1).all() and (p.max(1) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    opt = adamw(0.1)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    ost = opt.init(params)
+    for i in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        upd, ost = opt.update(g, ost, params, jnp.asarray(i))
+        params = apply_updates(params, upd)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_masked_optimizer_freezes_and_saves_memory():
+    params = {"a": jnp.ones((4, 4)), "b": jnp.ones((4, 4))}
+    mask = {"a": True, "b": False}
+    opt = masked(adamw(0.1), mask)
+    ost = opt.init(params)
+    # frozen leaf carries zero-size moments
+    assert ost.mu["b"].size == 0 and ost.mu["a"].size == 16
+    g = {"a": jnp.ones((4, 4)), "b": jnp.ones((4, 4))}
+    upd, _ = opt.update(g, ost, params, jnp.asarray(0))
+    assert float(jnp.max(jnp.abs(upd["b"]))) == 0.0
+    assert float(jnp.max(jnp.abs(upd["a"]))) > 0.0
+
+
+def test_clip_by_global_norm():
+    g = {"x": jnp.full((10,), 10.0)}
+    c = clip_by_global_norm(g, 1.0)
+    n = float(jnp.linalg.norm(c["x"]))
+    assert abs(n - 1.0) < 1e-4
+
+
+@hypothesis.given(st.floats(1e-4, 1e-1))
+@hypothesis.settings(deadline=None, max_examples=10)
+def test_sgd_step_is_lr_scaled_gradient(lr):
+    opt = sgd(lr)
+    params = {"w": jnp.asarray([1.0])}
+    ost = opt.init(params)
+    g = {"w": jnp.asarray([2.0])}
+    upd, _ = opt.update(g, ost, params, jnp.asarray(0))
+    np.testing.assert_allclose(float(upd["w"][0]), -lr * 2.0, rtol=1e-5)

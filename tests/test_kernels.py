@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (attention_ref, flash_attention, fused_dora,
+                           fused_dora_ref, ssd_naive, ssd_ref, ssd_scan)
+
+RNG = np.random.default_rng(7)
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("M,K,N,r", [(128, 256, 128, 8), (256, 512, 256, 16),
+                                     (64, 128, 384, 4), (128, 128, 128, 32)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_fused_dora_sweep(M, K, N, r, dt):
+    x = jnp.asarray(RNG.normal(size=(M, K)), dt)
+    w0 = jnp.asarray(RNG.normal(size=(K, N)) * 0.05, dt)
+    ad = jnp.asarray(RNG.normal(size=(K, r)) * 0.3, jnp.float32)
+    am = jnp.asarray(RNG.uniform(0.5, 1.5, size=(K,)), jnp.float32)
+    bd = jnp.asarray(RNG.normal(size=(r, N)) * 0.3, jnp.float32)
+    bm = jnp.asarray(RNG.uniform(0.1, 0.5, size=(r,)), jnp.float32)
+    dad = jnp.asarray(RNG.normal(size=(K, r)) * 0.05, jnp.float32)
+    dbm = jnp.asarray(RNG.normal(size=(r,)) * 0.05, jnp.float32)
+    y = fused_dora(x, w0, ad, am, bd, bm, dad, dbm, scale=2.0)
+    yr = fused_dora_ref(x, w0, ad, am, bd, bm, dad, dbm, 2.0)
+    scale = float(jnp.max(jnp.abs(yr))) + 1e-6
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32) - yr.astype(jnp.float32))))
+    tol = 2e-2 if dt == jnp.bfloat16 else 1e-4
+    assert err / scale < tol, (err, scale)
+
+
+def test_fused_dora_batched_input():
+    x = jnp.asarray(RNG.normal(size=(2, 64, 128)), jnp.float32)
+    w0 = jnp.asarray(RNG.normal(size=(128, 128)) * 0.05, jnp.float32)
+    ad = jnp.asarray(RNG.normal(size=(128, 8)), jnp.float32)
+    am = jnp.ones((128,), jnp.float32)
+    bd = jnp.asarray(RNG.normal(size=(8, 128)), jnp.float32)
+    bm = jnp.ones((8,), jnp.float32)
+    y = fused_dora(x, w0, ad, am, bd, bm)
+    assert y.shape == (2, 64, 128)
+
+
+@pytest.mark.parametrize("case", [
+    dict(B=2, Sq=256, Sk=256, H=4, K=2, dh=64, causal=True, window=None),
+    dict(B=1, Sq=128, Sk=128, H=4, K=4, dh=32, causal=True, window=48),
+    dict(B=2, Sq=256, Sk=256, H=8, K=1, dh=64, causal=False, window=None),
+    dict(B=1, Sq=512, Sk=512, H=2, K=2, dh=128, causal=True, window=128),
+    dict(B=1, Sq=128, Sk=256, H=2, K=2, dh=64, causal=True, window=None),
+])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dt):
+    c = case
+    q = jnp.asarray(RNG.normal(size=(c["B"], c["Sq"], c["H"], c["dh"])), dt)
+    k = jnp.asarray(RNG.normal(size=(c["B"], c["Sk"], c["K"], c["dh"])), dt)
+    v = jnp.asarray(RNG.normal(size=(c["B"], c["Sk"], c["K"], c["dh"])), dt)
+    y = flash_attention(q, k, v, causal=c["causal"], window=c["window"])
+    yr = attention_ref(q, k, v, causal=c["causal"], window=c["window"])
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32) - yr.astype(jnp.float32))))
+    assert err < (2e-2 if dt == jnp.bfloat16 else 2e-5)
+
+
+@pytest.mark.parametrize("b,S,H,G,P,N,Q", [
+    (2, 64, 4, 2, 16, 8, 16),
+    (1, 128, 2, 1, 32, 16, 32),
+    (2, 32, 4, 4, 8, 8, 8),
+    (1, 64, 2, 2, 16, 16, 64),   # single chunk
+])
+def test_ssd_scan_sweep(b, S, H, G, P, N, Q):
+    x = jnp.asarray(RNG.normal(size=(b, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, S, H)), jnp.float32)
+    A_log = jnp.asarray(np.log(RNG.uniform(0.5, 4.0, size=(H,))), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, S, G, N)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, S, G, N)), jnp.float32)
+    y_k, st_k = ssd_scan(x, dt, A_log, B, C, chunk=Q)
+    y_n, st_n = ssd_naive(x, dt, A_log, B, C)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_n),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_n),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_ssd_model_ref_matches_naive():
+    b, S, H, G, P, N = 1, 48, 2, 1, 8, 4
+    x = jnp.asarray(RNG.normal(size=(b, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.05, 0.3, size=(b, S, H)), jnp.float32)
+    A_log = jnp.zeros((H,), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, S, G, N)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, S, G, N)), jnp.float32)
+    y_r, st_r = ssd_ref(x, dt, A_log, B, C, 16)
+    y_n, st_n = ssd_naive(x, dt, A_log, B, C)
+    np.testing.assert_allclose(np.asarray(y_r), np.asarray(y_n),
+                               rtol=1e-3, atol=1e-4)

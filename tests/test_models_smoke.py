@@ -1,0 +1,112 @@
+"""Per-assigned-architecture smoke tests: reduced same-family variant,
+one forward + one LoRA train step on CPU, asserting shapes + finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core import peft
+from repro.models import model as M
+from repro.optim import adamw, masked
+from repro.optim.optimizers import apply_updates
+from repro.utils import pytree as pt
+
+B, S = 2, 32
+
+
+def _batch(cfg):
+    rng = np.random.default_rng(0)
+    S_tok = S
+    extras = {}
+    if cfg.frontend and not cfg.n_enc_layers:
+        S_mm = cfg.frontend_tokens
+        S_tok = S - S_mm
+        extras["frontend_emb"] = jnp.asarray(
+            rng.normal(size=(B, S_mm, cfg.d_model)), jnp.float32)
+    if cfg.n_enc_layers:
+        S_tok = S
+        extras["frontend_emb"] = jnp.asarray(
+            rng.normal(size=(B, 16, cfg.d_model)), jnp.float32)
+    return {
+        "tokens": jnp.asarray(
+            rng.integers(5, cfg.vocab_size, size=(B, S_tok)), jnp.int32),
+        "loss_mask": jnp.ones((B, S_tok), jnp.float32),
+        **extras,
+    }
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 512 and cfg.n_layers <= 8
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+
+    # forward: shapes + finite
+    hidden, _, aux = M.forward(params, batch, cfg)
+    S_tok = batch["tokens"].shape[1]
+    S_exp = S_tok + (batch["frontend_emb"].shape[1]
+                     if (cfg.frontend and not cfg.n_enc_layers) else 0)
+    assert hidden.shape == (B, S_exp, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(hidden)))
+
+    # one LoRA train step: loss finite, adapters move, base frozen
+    adapters = peft.add_lora(params, cfg, jax.random.PRNGKey(1),
+                             decomposed=True)
+    assert pt.tree_count_params(adapters) > 0
+    mask = peft.mask_stage_local_pretrain(adapters)
+    opt = masked(adamw(1e-3), mask)
+    ost = opt.init(adapters)
+
+    def loss_fn(ad):
+        p = pt.merge_trees(params, ad)
+        return M.loss_and_metrics(p, batch, cfg)[0]
+
+    loss, g = jax.value_and_grad(loss_fn)(adapters)
+    assert bool(jnp.isfinite(loss)), arch
+    upd, _ = opt.update(g, ost, adapters, jnp.zeros((), jnp.int32))
+    new_ad = apply_updates(adapters, upd)
+    moved = pt.global_norm(pt.tree_sub(new_ad, adapters))
+    assert float(moved) > 0, "adapters did not move"
+    # pipeline deltas must stay zero during stage-1
+    for path, leaf in zip(pt.tree_paths(new_ad), jax.tree.leaves(new_ad)):
+        if path.endswith("dA_dir") or path.endswith("dB_mag"):
+            assert float(jnp.max(jnp.abs(leaf))) == 0.0
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "mamba2-2.7b",
+                                  "jamba-v0.1-52b", "mixtral-8x22b",
+                                  "seamless-m4t-large-v2"])
+def test_smoke_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(5, cfg.vocab_size, size=(B, 24)), jnp.int32)
+    batch = {"tokens": toks}
+    enc_out = None
+    if cfg.n_enc_layers:
+        batch["frontend_emb"] = jnp.asarray(
+            rng.normal(size=(B, 16, cfg.d_model)), jnp.float32)
+    hidden, _, _ = M.forward(params, batch, cfg)
+    full_logits = hidden[:, -1] @ M._head_kernel(params, cfg)
+    pre, cache = M.prefill(params, {**batch, "tokens": toks[:, :-1]}, cfg,
+                           cache_len=24)
+    if cfg.n_enc_layers:
+        from repro.models.layers import rms_norm
+        from repro.models.config import SubLayer
+        from repro.models.model import _run_blocks
+        e_pos = jnp.broadcast_to(jnp.arange(16)[None], (B, 16))
+        enc_out, _, _ = _run_blocks(
+            params["encoder"]["blocks"], {}, batch["frontend_emb"],
+            [SubLayer("attn", "dense", "global")], cfg, positions=e_pos,
+            causal=False)
+        enc_out = rms_norm(enc_out, params["encoder"]["final_norm"],
+                           cfg.norm_eps)
+    logits, _ = M.decode_step(params, toks[:, -1], cache,
+                              jnp.asarray(23), cfg, enc_out=enc_out)
+    err = float(jnp.max(jnp.abs(logits - full_logits)))
+    assert err < 5e-4, (arch, err)
