@@ -1,0 +1,9 @@
+.PHONY: test perf
+
+# tier-1 verify (ROADMAP.md)
+test:
+	bash scripts/ci.sh
+
+# fed-round + per-arch microbenchmarks
+perf:
+	PYTHONPATH=src python -m benchmarks.perf_micro

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify (ROADMAP.md): the full test suite with src on PYTHONPATH.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

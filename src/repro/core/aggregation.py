@@ -52,16 +52,59 @@ def decomposed_fedavg(client_adapters: Params, weights=None) -> Params:
     return fedavg(client_adapters, weights)
 
 
+def trimmed_fedavg(client_adapters: Params, weights=None, *,
+                   trim_ratio: float = 0.25) -> Params:
+    """Coordinate-wise trimmed mean over the client axis.
+
+    Robust aggregation (cf. Koo et al., "Towards Robust and Efficient
+    Federated Low-Rank Adaptation with Heterogeneous Clients"): per
+    coordinate, drop the k lowest and k highest client values with
+    k = ⌊trim_ratio · C⌋ and average the rest.  Falls back to the plain
+    mean when trimming would leave nothing (2k ≥ C).  ``weights`` are
+    ignored — order statistics do not compose with client weighting.
+    """
+    def tmean(x):
+        C = x.shape[0]
+        k = int(trim_ratio * C)
+        if k == 0 or 2 * k >= C:
+            return jnp.mean(x, axis=0)
+        xs = jnp.sort(x, axis=0)
+        return jnp.mean(xs[k:C - k], axis=0)
+
+    return jax.tree.map(tmean, client_adapters)
+
+
 def broadcast_to_clients(agg: Params, n_clients: int) -> Params:
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), agg)
 
 
 def comm_bytes_per_round(adapters_one_client: Params,
-                         aggregated_paths=(r".",)) -> int:
+                         exclude_rx: str | None = None) -> int:
     """Uplink+downlink bytes for one client-round (adapter leaves only —
-    the frozen backbone never moves; the PEFT communication story)."""
-    return 2 * pt.tree_bytes(adapters_one_client)
+    the frozen backbone never moves; the PEFT communication story).
+    Leaves matching ``exclude_rx`` stay client-local (a method's
+    keep-local set, e.g. dB_mag or FedALT's individual pair) and are
+    never transmitted, so they don't count."""
+    import re
+    tree = adapters_one_client
+    if exclude_rx is not None:
+        rx = re.compile(exclude_rx)
+        tree = pt.filter_tree(tree, lambda p: not rx.search(p))
+    return 2 * pt.tree_bytes(tree)
+
+
+def fedavg_excluding(client_adapters: Params, weights=None, *,
+                     exclude_rx: str) -> Params:
+    """FedAvg that zeroes the mean for leaves matching ``exclude_rx`` —
+    those leaves are client-personal and must not appear in the server's
+    aggregated/global model (the engine's rebroadcast restores each
+    client's own values, so the zeros never reach a client)."""
+    import re
+    rx = re.compile(exclude_rx)
+    out = fedavg(client_adapters, weights)
+    return pt.tree_map_with_path(
+        lambda p, x: jnp.zeros_like(x) if rx.search(p) else x, out)
 
 
 def keep_components(tree: Params, component_rx: str) -> Params:

@@ -41,8 +41,8 @@ def decompose_lora_pair(lora_A, lora_B):
     lora_A: (..., d_in, r) → (A_mag (..., d_in), A_dir)
     lora_B: (..., r, d_out) → (B_mag (..., r),  B_dir)
     """
-    A_mag, A_dir = decompose(lora_A)[0], decompose(lora_A)[1]
-    B_mag, B_dir = decompose(lora_B)[0], decompose(lora_B)[1]
+    A_mag, A_dir = decompose(lora_A)
+    B_mag, B_dir = decompose(lora_B)
     return {"A_mag": A_mag, "A_dir": A_dir, "B_mag": B_mag, "B_dir": B_dir}
 
 

@@ -22,6 +22,7 @@ from typing import Callable, Sequence
 import jax
 import numpy as np
 
+from repro.core.methods import get_method
 from repro.data.loader import client_batch, eval_batches
 from repro.data.synthetic import SyntheticInstructionDataset, TASK_TYPES
 from repro.fed.simulate import FedSim, FedHyper
@@ -47,6 +48,7 @@ def run_federated(cfg: ArchConfig, hp: FedHyper,
     """Run any method (ours or baseline) through the same round loop so the
     comparisons in benchmarks/table1 are apples-to-apples."""
     sim = FedSim(cfg, hp, base=base)
+    method = get_method(hp.method)
     rng = np.random.default_rng(hp.seed + 1)
     history = []
     aggregated = None
@@ -55,12 +57,12 @@ def run_federated(cfg: ArchConfig, hp: FedHyper,
         batches = [client_batch(client_datasets, rng, hp.batch, hp.seq_len)
                    for _ in range(hp.local_steps)]
         mets = sim.local_round(batches, jrng)
-        if hp.pipeline or hp.method != "fedlora_opt":
+        if hp.pipeline or not method.pipeline:
             aggregated = sim.aggregate()
         else:
             # non-pipeline ablation: clients keep their own adapters
             aggregated = jax.tree.map(lambda x: x[0], sim.client_adapters)
-        if hp.pipeline and hp.method == "fedlora_opt":
+        if hp.pipeline and method.pipeline:
             sbatches = [
                 {k: jax.numpy.asarray(v) for k, v in
                  server_dataset.sample_batch(rng, hp.batch, hp.seq_len).items()}

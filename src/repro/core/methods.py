@@ -1,0 +1,169 @@
+"""Federated method strategy registry.
+
+A federated PEFT method is fully described by a ``FedMethod``: how to
+build its adapter overlay, which leaves train in each pipeline stage,
+how client adapters aggregate, which loss extras apply (FedProx prox
+term, the paper's Eq. 11 Frobenius regularizer), and which leaves stay
+client-local when the aggregate is rebroadcast.  The round engine
+(``fed/simulate.py``), the production train step (``launch/train.py``)
+and the benchmark driver (``core/fedlora.py``) consume only this
+interface — adding a baseline is one ``register(...)`` call, never an
+``if hp.method == ...`` branch.
+
+Built-ins:
+
+  fedlora_opt   the paper's pipeline: decomposed adapters, Eqs. 5–8
+                aggregation, stage masks, dB_mag kept client-local
+  lora          raw LoRA + FedAvg (FedIT-style)
+  ffa_lora      raw LoRA with A frozen (Sun et al.)
+  fedprox       raw LoRA + proximal term (Li et al.)
+  prompt        prompt-tuning (Lester et al.)
+  adapter       Houlsby bottleneck adapters
+  fedalt        dual local+global LoRA pairs; the individual pair is
+                never aggregated (FedALT-style)
+  lora_trimmed  raw LoRA + coordinate-wise trimmed-mean aggregation
+                (robust to client outliers, cf. Koo et al.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+from repro.core import aggregation as agg
+from repro.core import peft
+
+Params = Any
+MaskFn = Callable[[Params], Params]
+
+
+@dataclasses.dataclass(frozen=True)
+class FedMethod:
+    """Everything the engine needs to know about one federated method."""
+    name: str
+    # adapter factory: (base_params, ArchConfig, rng) -> adapter overlay
+    make_adapter: Callable[[Params, Any, Any], Params]
+    # stage-1 trainable mask (client local training)
+    train_mask: MaskFn
+    # stage-2 / stage-3 masks; None → same leaves as stage 1
+    global_mask: Optional[MaskFn] = None
+    local_mask: Optional[MaskFn] = None
+    # aggregation over the leading client axis: (client_adapters) -> tree
+    aggregate: Callable[[Params], Params] = agg.fedavg
+    # regex over leaf paths; matching leaves are NEVER overwritten when the
+    # aggregate is rebroadcast (personalized state stays client-local)
+    keep_local: Optional[str] = None
+    # loss extras
+    prox: bool = False                       # FedProx ½µ‖θ−θ_ref‖² term
+    personal_reg: Optional[MaskFn] = None    # Eq. 11 ½λ‖·‖²_F mask (stage 3)
+    # True → the method runs the paper's staged pipeline (aggregate →
+    # global stage on the server mixture → final per-client stage)
+    pipeline: bool = False
+    description: str = ""
+
+    def stage_global_mask(self, adapters: Params) -> Params:
+        return (self.global_mask or self.train_mask)(adapters)
+
+    def stage_local_mask(self, adapters: Params) -> Params:
+        return (self.local_mask or self.train_mask)(adapters)
+
+
+_REGISTRY: dict[str, FedMethod] = {}
+
+
+def register(method: FedMethod, *, overwrite: bool = False) -> FedMethod:
+    """Add a method to the registry (returns it, so usable inline)."""
+    if method.name in _REGISTRY and not overwrite:
+        raise ValueError(f"method {method.name!r} already registered")
+    _REGISTRY[method.name] = method
+    return method
+
+
+def get_method(name: str) -> FedMethod:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown federated method {name!r}; available: "
+            f"{', '.join(available_methods())}") from None
+
+
+def available_methods() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# built-ins
+# ---------------------------------------------------------------------------
+
+register(FedMethod(
+    name="fedlora_opt",
+    make_adapter=partial(peft.add_lora, decomposed=True),
+    train_mask=peft.mask_stage_local_pretrain,
+    global_mask=peft.mask_stage_global,
+    local_mask=peft.mask_stage_local,
+    aggregate=agg.decomposed_fedavg,
+    keep_local=r"dB_mag$",
+    personal_reg=peft.reg_mask_dB,
+    pipeline=True,
+    description="the paper's global+local optimizer pipeline (Fig. 2)",
+))
+
+register(FedMethod(
+    name="lora",
+    make_adapter=partial(peft.add_lora, decomposed=False),
+    train_mask=peft.mask_all,
+    description="raw LoRA + FedAvg (FedIT-style baseline)",
+))
+
+register(FedMethod(
+    name="ffa_lora",
+    make_adapter=partial(peft.add_lora, decomposed=False),
+    train_mask=peft.mask_ffa,
+    description="LoRA with A frozen (FFA-LoRA, Sun et al.)",
+))
+
+register(FedMethod(
+    name="fedprox",
+    make_adapter=partial(peft.add_lora, decomposed=False),
+    train_mask=peft.mask_all,
+    prox=True,
+    description="LoRA + proximal term to the round reference (FedProx)",
+))
+
+register(FedMethod(
+    name="prompt",
+    make_adapter=peft.add_prompt_tuning,
+    train_mask=peft.mask_all,
+    description="prompt-tuning (Lester et al.)",
+))
+
+register(FedMethod(
+    name="adapter",
+    make_adapter=peft.add_adapter_tuning,
+    train_mask=peft.mask_all,
+    description="Houlsby bottleneck adapters",
+))
+
+register(FedMethod(
+    name="fedalt",
+    make_adapter=peft.add_dual_lora,
+    train_mask=peft.mask_all,
+    # the individual pair never reaches the server: zeroed in the
+    # aggregate (global/eval model = shared pair only) and restored
+    # per client by the keep-local rebroadcast
+    aggregate=partial(agg.fedavg_excluding, exclude_rx=r"local_[AB]$"),
+    keep_local=r"local_[AB]$",
+    description=("dual adapters: shared rest-of-world LoRA pair is "
+                 "aggregated, the individual local_A/local_B pair never "
+                 "leaves the client (FedALT-style)"),
+))
+
+register(FedMethod(
+    name="lora_trimmed",
+    make_adapter=partial(peft.add_lora, decomposed=False),
+    train_mask=peft.mask_all,
+    aggregate=partial(agg.trimmed_fedavg, trim_ratio=0.25),
+    description=("LoRA + coordinate-wise trimmed-mean aggregation — "
+                 "robust to adversarial/outlier clients (cf. Koo et al.)"),
+))

@@ -94,6 +94,31 @@ def add_lora(base: Params, cfg: ArchConfig, rng, *, decomposed: bool = False,
     return overlay
 
 
+def add_dual_lora(base: Params, cfg: ArchConfig, rng, *,
+                  rank: int = 0) -> Params:
+    """FedALT-style dual adapters on every target projection.
+
+    The shared "rest-of-world" pair {lora_A, lora_B} is aggregated like
+    raw LoRA; the individual pair {local_A, local_B} carries the client's
+    personal delta and never leaves the client (the method's keep-local
+    regex excludes it from rebroadcast).  local_B starts at exact zero so
+    the personal delta is 0 at init — these leaves are never D-M
+    decomposed, so the raw-LoRA near-zero trick is unnecessary.
+    """
+    r = rank or cfg.lora_rank
+    r_shared, r_local = jax.random.split(rng)
+    overlay = add_lora(base, cfg, r_shared, decomposed=False, rank=r)
+    for i, (path, kern) in enumerate(_target_kernels(base, cfg.lora_targets)):
+        *lead, d_in, d_out = kern.shape
+        k1, _ = jax.random.split(jax.random.fold_in(r_local, i))
+        A = jax.random.normal(k1, (*lead, d_in, r), jnp.float32) / jnp.sqrt(r)
+        prefix = path.rsplit("/", 1)[0]
+        _set_path(overlay, f"{prefix}/local_A", A)
+        _set_path(overlay, f"{prefix}/local_B",
+                  jnp.zeros((*lead, r, d_out), jnp.float32))
+    return overlay
+
+
 def add_prompt_tuning(base: Params, cfg: ArchConfig, rng,
                       n_prompt: int = 16) -> Params:
     return {"prompt_embed": jax.random.normal(

@@ -6,23 +6,32 @@ over ('pod','data') so aggregation lowers to an all-reduce carrying only
 adapter bytes (see launch/train.py for the pjit'd variant); on CPU this
 same code runs on one device for the paper-scale benchmarks.
 
-The engine is method-agnostic: the paper's FedLoRA-Optimizer and every
-baseline (LoRA/FedIT, FFA-LoRA, FedProx, prompt-, adapter-tuning) are
-(adapter-type, trainable-mask, loss-extras) triples on top of it.
+The engine is method-agnostic: every method — the paper's
+FedLoRA-Optimizer and all baselines — is a ``FedMethod`` strategy from
+``core/methods.py`` (adapter factory, stage masks, aggregate fn, loss
+extras, keep-local regex).  Adding a baseline is one ``register(...)``
+call; this module contains zero per-method branches.
+
+Hot loops (stage-1 local round, stage-2 global, stage-3 personalize)
+are each ONE jitted ``lax.scan`` over local steps with the adapter /
+optimizer-state buffers donated — no per-step Python dispatch and no
+per-step device→host sync.  ``local_round_reference`` keeps the
+per-step host-synced loop as the parity oracle and the perf baseline
+(see benchmarks/perf_micro.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import re
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
-from repro.core import peft
+from repro.core.methods import get_method
 from repro.models import model as M
 from repro.models.config import ArchConfig
 from repro.optim import adamw, masked, chain_clip
@@ -34,7 +43,7 @@ Params = Any
 
 @dataclasses.dataclass(frozen=True)
 class FedHyper:
-    method: str = "fedlora_opt"   # lora | ffa_lora | fedprox | prompt | adapter
+    method: str = "fedlora_opt"   # any name in core.methods.available_methods()
     n_clients: int = 4
     rounds: int = 10
     local_steps: int = 5
@@ -55,52 +64,45 @@ class FedSim:
     """Federated simulation over one ArchConfig + per-client datasets."""
 
     def __init__(self, cfg: ArchConfig, hp: FedHyper, base=None):
+        if cfg.use_fused_dora:
+            raise ValueError(
+                "use_fused_dora is forward/serving-only (the Pallas kernel "
+                "defines no VJP); training through FedSim requires the jnp "
+                "adapter path — construct with use_fused_dora=False")
         self.cfg, self.hp = cfg, hp
+        self.method = get_method(hp.method)
         rng = jax.random.PRNGKey(hp.seed)
         r_base, r_ad = jax.random.split(rng)
         self.base = M.init_params(r_base, cfg) if base is None else base
 
-        m = hp.method
-        if m in ("fedlora_opt",):
-            ad = peft.add_lora(self.base, cfg, r_ad, decomposed=True)
-            self.train_mask = peft.mask_stage_local_pretrain(ad)
-        elif m in ("lora", "fedprox"):
-            ad = peft.add_lora(self.base, cfg, r_ad, decomposed=False)
-            self.train_mask = peft.mask_all(ad)
-        elif m == "ffa_lora":
-            ad = peft.add_lora(self.base, cfg, r_ad, decomposed=False)
-            self.train_mask = peft.mask_ffa(ad)
-        elif m == "prompt":
-            ad = peft.add_prompt_tuning(self.base, cfg, r_ad)
-            self.train_mask = peft.mask_all(ad)
-        elif m == "adapter":
-            ad = peft.add_adapter_tuning(self.base, cfg, r_ad)
-            self.train_mask = peft.mask_all(ad)
-        else:
-            raise ValueError(m)
+        ad = self.method.make_adapter(self.base, cfg, r_ad)
         self.adapter_template = ad
-        self.reg_mask = peft.reg_mask_dB(ad)
-        self.global_mask = (peft.mask_stage_global(ad)
-                            if m == "fedlora_opt" else self.train_mask)
-        self.local_mask = (peft.mask_stage_local(ad)
-                           if m == "fedlora_opt" else self.train_mask)
+        self.train_mask = self.method.train_mask(ad)
+        self.global_mask = self.method.stage_global_mask(ad)
+        self.local_mask = self.method.stage_local_mask(ad)
+        self.reg_mask = (self.method.personal_reg(ad)
+                         if self.method.personal_reg else None)
+        self._keep_rx = (re.compile(self.method.keep_local)
+                         if self.method.keep_local else None)
 
         C = hp.n_clients
         self.client_adapters = agg.broadcast_to_clients(ad, C)
         self._build_steps()
         self.opt_state = jax.vmap(self.opt.init)(self.client_adapters)
-        self.step_count = jnp.zeros((C,), jnp.int32)
+        self._step = jnp.zeros((), jnp.int32)
         self.comm_bytes = 0
-        self._round_ref = self.client_adapters
+        # round reference for the FedProx proximal term (aliases the
+        # current client adapters; prox methods never donate them)
+        self._round_ref = self.client_adapters if self.method.prox else None
 
     # ------------------------------------------------------------------
     def _loss(self, base, adapters, batch, rng, lam, prox_ref, prox_mu):
-        mask_reg = self.reg_mask
         params = pt.merge_trees(base, adapters)
         loss, met = M.loss_and_metrics(params, batch, self.cfg, rng=rng)
         if lam:
             reg = sum(jnp.sum(jnp.square(x)) for m, x in zip(
-                jax.tree.leaves(mask_reg), jax.tree.leaves(adapters)) if m)
+                jax.tree.leaves(self.reg_mask), jax.tree.leaves(adapters))
+                if m)
             loss = loss + 0.5 * lam * reg
         if prox_mu and prox_ref is not None:
             prox = pt.tree_dot(pt.tree_sub(adapters, prox_ref),
@@ -109,7 +111,8 @@ class FedSim:
         return loss, met
 
     def _build_steps(self):
-        hp, cfg = self.hp, self.cfg
+        hp, cfg, method = self.hp, self.cfg, self.method
+        C = hp.n_clients
         self.opt = chain_clip(masked(adamw(hp.lr), self.train_mask), hp.clip)
         self.opt_global = chain_clip(masked(adamw(hp.server_lr),
                                             self.global_mask), hp.clip)
@@ -124,19 +127,67 @@ class FedSim:
             upd, opt_state = opt.update(g, opt_state, adapters, step)
             return apply_updates(adapters, upd), opt_state, met
 
-        prox_mu = hp.prox_mu if hp.method == "fedprox" else 0.0
+        prox_mu = hp.prox_mu if method.prox else 0.0
+        lam_pers = hp.lam if method.personal_reg is not None else 0.0
         step_train = partial(one_client_step, opt=self.opt, lam=0.0,
                              prox_mu=prox_mu)
-        self._vstep = jax.jit(jax.vmap(
-            step_train, in_axes=(None, 0, 0, 0, 0, 0, 0)))
-        step_pers = partial(one_client_step, opt=self.opt_local,
-                            lam=hp.lam if hp.method == "fedlora_opt" else 0.0,
+        vstep = jax.vmap(step_train, in_axes=(None, 0, 0, 0, 0, 0, 0))
+        self._vstep = jax.jit(vstep)          # per-step oracle / perf baseline
+        step_pers = partial(one_client_step, opt=self.opt_local, lam=lam_pers,
                             prox_mu=0.0)
-        self._vstep_pers = jax.jit(jax.vmap(
-            step_pers, in_axes=(None, 0, 0, 0, 0, 0, 0)))
+        vstep_pers = jax.vmap(step_pers, in_axes=(None, 0, 0, 0, 0, 0, 0))
         step_glob = partial(one_client_step, opt=self.opt_global, lam=0.0,
                             prox_mu=0.0)
-        self._gstep = jax.jit(step_glob)
+
+        # ---- jitted lax.scan over local steps ------------------------
+        # Per-step rng folds the *traced* step counter, so host sync is
+        # gone yet the key sequence matches the reference loop exactly.
+        # Short rounds (the paper setting: 5 local steps) are fully
+        # unrolled inside the jit — XLA fuses across steps and reuses
+        # activation buffers; long stages keep a rolled scan so compile
+        # time stays bounded.
+        def _unroll(batches):
+            t = jax.tree.leaves(batches)[0].shape[0]
+            return t if t <= 8 else 1
+
+        def make_scan(vstep_fn, fold_offset, with_prox):
+            def scan_fn(base, adapters, opt_state, step0, batches, rng,
+                        *prox):
+                def body(carry, b):
+                    ad, ost, step = carry
+                    rngs = jax.random.split(
+                        jax.random.fold_in(rng, fold_offset + step), C)
+                    steps = jnp.full((C,), step, jnp.int32)
+                    ref = prox[0] if with_prox else ad
+                    ad, ost, met = vstep_fn(base, ad, ost, b, rngs, steps,
+                                            ref)
+                    return (ad, ost, step + 1), met
+                (ad, ost, step), mets = jax.lax.scan(
+                    body, (adapters, opt_state, step0), batches,
+                    unroll=_unroll(batches))
+                return ad, ost, step, jax.tree.map(lambda m: m[-1], mets)
+            return scan_fn
+
+        # prox methods keep the round reference aliased to the adapters,
+        # so only the optimizer state is donated for them
+        self._round_scan = jax.jit(
+            make_scan(vstep, 0, method.prox),
+            donate_argnums=(2,) if method.prox else (1, 2))
+        self._pers_scan = jax.jit(make_scan(vstep_pers, 31, False),
+                                  donate_argnums=(2,))
+
+        def global_fn(base, aggregated, opt_state, batches, rng):
+            def body(carry, b):
+                ad, ost, step = carry
+                ad, ost, _ = step_glob(base, ad, ost, b,
+                                       jax.random.fold_in(rng, step), step,
+                                       ad)
+                return (ad, ost, step + 1), None
+            (ad, ost, _), _ = jax.lax.scan(
+                body, (aggregated, opt_state, jnp.zeros((), jnp.int32)),
+                batches)
+            return ad, ost
+        self._global_scan = jax.jit(global_fn, donate_argnums=(2,))
 
         def eval_fn(base, adapters, batch):
             params = pt.merge_trees(base, adapters)
@@ -144,38 +195,54 @@ class FedSim:
             return met
         self._eval = jax.jit(eval_fn)
         self._veval = jax.jit(jax.vmap(eval_fn, in_axes=(None, 0, 0)))
-        self._agg = jax.jit(
-            lambda ca: agg.decomposed_fedavg(ca)
-            if hp.method == "fedlora_opt" else agg.fedavg(ca))
+        self._agg = jax.jit(method.aggregate)
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _stack_batches(batches: list[dict]) -> dict:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
     def local_round(self, batches: list[dict], rng) -> dict:
-        """One round of stage-1 local training.  batches: list (per local
-        step) of stacked (C, B, S) dicts."""
+        """One round of stage-1 local training: a single jitted lax.scan
+        over local steps.  batches: list (per local step) of stacked
+        (C, B, S) dicts."""
+        stacked = self._stack_batches(batches)
+        args = (self.base, self.client_adapters, self.opt_state, self._step,
+                stacked, rng)
+        if self.method.prox:
+            args = args + (self._round_ref,)
+        self.client_adapters, self.opt_state, self._step, mets = \
+            self._round_scan(*args)
+        return {k: np.asarray(v) for k, v in mets.items()}
+
+    def local_round_reference(self, batches: list[dict], rng) -> dict:
+        """Seed-style per-step loop (host-synced step counter, Python
+        dispatch per step).  Produces the same adapters as local_round —
+        kept as the parity oracle and the perf_micro baseline."""
         C = self.hp.n_clients
         mets = None
         for b in batches:
-            rngs = jax.random.split(jax.random.fold_in(rng, int(self.step_count[0])), C)
+            rngs = jax.random.split(
+                jax.random.fold_in(rng, int(self._step)), C)
+            steps = jnp.full((C,), self._step, jnp.int32)
+            ref = self._round_ref if self.method.prox else self.client_adapters
             self.client_adapters, self.opt_state, mets = self._vstep(
                 self.base, self.client_adapters, self.opt_state, b, rngs,
-                self.step_count, self._round_ref)
-            self.step_count = self.step_count + 1
+                steps, ref)
+            self._step = self._step + 1
         return {k: np.asarray(v) for k, v in (mets or {}).items()}
 
     def aggregate(self) -> Params:
-        """Eqs. 5–8 (or plain FedAvg) + comm accounting; broadcasts the
-        aggregate back (dB_mag stays local for the paper method)."""
+        """Method aggregation (Eqs. 5–8 for ours, FedAvg/trimmed-mean for
+        baselines) + comm accounting; broadcasts the aggregate back with
+        keep-local leaves (e.g. dB_mag) preserved per client."""
         aggregated = self._agg(self.client_adapters)
         self.comm_bytes += self.hp.n_clients * agg.comm_bytes_per_round(
-            self.adapter_template)
-        bcast = agg.broadcast_to_clients(aggregated, self.hp.n_clients)
-        if self.hp.method == "fedlora_opt":
-            rx = re.compile(r"dB_mag$")
-            bcast = pt.tree_map_with_path(
-                lambda p, leaf: self._leaf(self.client_adapters, p)
-                if rx.search(p) else leaf, bcast)
+            self.adapter_template, exclude_rx=self.method.keep_local)
+        bcast = self._rebroadcast_keep_personal(aggregated)
         self.client_adapters = bcast
-        self._round_ref = bcast
+        if self.method.prox:
+            self._round_ref = bcast
         return aggregated
 
     @staticmethod
@@ -185,39 +252,35 @@ class FedSim:
             node = node[k]
         return node
 
-    def global_stage(self, aggregated: Params, server_batches: list[dict],
-                     rng) -> Params:
-        """Stage 2 — train ΔA_D on the global task mixture (Eq. 9)."""
-        opt_state = self.opt_global.init(aggregated)
-        step = jnp.zeros((), jnp.int32)
-        for i, b in enumerate(server_batches):
-            aggregated, opt_state, _ = self._gstep(
-                self.base, aggregated, opt_state, b,
-                jax.random.fold_in(rng, i), step, aggregated)
-            step = step + 1
-        self.client_adapters = agg.broadcast_to_clients(
-            aggregated, self.hp.n_clients) if self.hp.method != "fedlora_opt" \
-            else self._rebroadcast_keep_personal(aggregated)
-        return aggregated
-
     def _rebroadcast_keep_personal(self, aggregated):
+        """Broadcast the aggregate to every client; leaves matching the
+        method's keep-local regex retain each client's own value (the one
+        place this logic lives — aggregate() and global_stage() share it)."""
         bcast = agg.broadcast_to_clients(aggregated, self.hp.n_clients)
-        rx = re.compile(r"dB_mag$")
+        if self._keep_rx is None:
+            return bcast
         return pt.tree_map_with_path(
             lambda p, leaf: self._leaf(self.client_adapters, p)
-            if rx.search(p) else leaf, bcast)
+            if self._keep_rx.search(p) else leaf, bcast)
+
+    def global_stage(self, aggregated: Params, server_batches: list[dict],
+                     rng) -> Params:
+        """Stage 2 — train the global-stage leaves (ΔA_D for the paper,
+        Eq. 9) on the server task mixture, as one jitted scan."""
+        opt_state = self.opt_global.init(aggregated)
+        aggregated, _ = self._global_scan(
+            self.base, aggregated, opt_state,
+            self._stack_batches(server_batches), rng)
+        self.client_adapters = self._rebroadcast_keep_personal(aggregated)
+        return aggregated
 
     def personalize(self, batches: list[dict], rng) -> None:
-        """Stage 3 — per-client ΔB_M fine-tune with Eq. 11 regularizer."""
-        C = self.hp.n_clients
+        """Stage 3 — per-client fine-tune of the local-stage leaves
+        (ΔB_M with the Eq. 11 regularizer for the paper)."""
         opt_state = jax.vmap(self.opt_local.init)(self.client_adapters)
-        steps = jnp.zeros((C,), jnp.int32)
-        for b in batches:
-            rngs = jax.random.split(jax.random.fold_in(rng, 31 + int(steps[0])), C)
-            self.client_adapters, opt_state, _ = self._vstep_pers(
-                self.base, self.client_adapters, opt_state, b, rngs, steps,
-                self.client_adapters)
-            steps = steps + 1
+        self.client_adapters, _, _, _ = self._pers_scan(
+            self.base, self.client_adapters, opt_state,
+            jnp.zeros((), jnp.int32), self._stack_batches(batches), rng)
 
     # ------------------------------------------------------------------
     def eval_global(self, aggregated: Params, batches: list[dict]) -> dict:

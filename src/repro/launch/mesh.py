@@ -7,7 +7,13 @@ dryrun.py sets XLA_FLAGS for 512 placeholder devices before any import.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+    _AXIS_KW = lambda n: {"axis_types": (AxisType.Auto,) * n}
+except ImportError:      # older jax: no explicit axis types — meshes are
+    _AXIS_KW = lambda n: {}          # Auto by default, importing must work
+    AxisType = None
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,11 +32,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     n = int(np.prod(shape))
     devs = jax.devices()
     if len(devs) == n:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+        return jax.make_mesh(shape, axes, **_AXIS_KW(len(axes)))
     assert len(devs) >= n, f"need {n} devices, have {len(devs)}"
     return Mesh(np.asarray(devs[:n]).reshape(shape), axes,
-                axis_types=(AxisType.Auto,) * len(axes))
+                **_AXIS_KW(len(axes)))
 
 
 def make_debug_mesh(n_data: int = 4, n_model: int = 2, *,
@@ -38,10 +43,9 @@ def make_debug_mesh(n_data: int = 4, n_model: int = 2, *,
     """Small mesh for CI-scale distributed tests (8 host devices)."""
     if multi_pod:
         return jax.make_mesh((2, n_data // 2, n_model),
-                             ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+                             ("pod", "data", "model"), **_AXIS_KW(3))
     return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+                         **_AXIS_KW(2))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

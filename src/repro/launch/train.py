@@ -27,7 +27,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import peft
+import functools
+
+from repro.core import aggregation as fedagg
+from repro.core.methods import get_method
 from repro.launch.mesh import data_axes, dp_size
 from repro.models import model as M
 from repro.models.config import ArchConfig
@@ -46,6 +49,9 @@ class TrainSettings:
     remat: object = True          # True (full) | "dots" | False
     # stage: which components train (paper pipeline stages)
     stage: str = "local_pretrain"   # | "global" | "local"
+    # federated method (core.methods registry) — drives the adapter
+    # factory, the per-stage trainable mask, and the keep-local leaves
+    method: str = "fedlora_opt"
 
 
 def pick_micro_batches(cfg: ArchConfig, per_client_batch: int,
@@ -61,12 +67,24 @@ def pick_micro_batches(cfg: ArchConfig, per_client_batch: int,
     return min(micro, per_client_batch)
 
 
-def _stage_mask(adapters, stage: str):
+def _pmean_equivalent(method) -> bool:
+    """True when the method's aggregate is a plain client mean (what the
+    shard_map pmean computes) — directly, or via fedavg_excluding whose
+    excluded leaves the keep-local restore keeps per-client anyway."""
+    a = method.aggregate
+    if a in (fedagg.fedavg, fedagg.decomposed_fedavg):
+        return True
+    return (isinstance(a, functools.partial)
+            and a.func is fedagg.fedavg_excluding
+            and a.keywords.get("exclude_rx") == method.keep_local)
+
+
+def _stage_mask(method, adapters, stage: str):
     if stage == "global":
-        return peft.mask_stage_global(adapters)
+        return method.stage_global_mask(adapters)
     if stage == "local":
-        return peft.mask_stage_local(adapters)
-    return peft.mask_stage_local_pretrain(adapters)
+        return method.stage_local_mask(adapters)
+    return method.train_mask(adapters)
 
 
 def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
@@ -79,11 +97,27 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
     adapters: leading client axis C = dp_size(mesh), sharded 1-per-shard.
     batch: {"tokens": (C, B_c, S), ...} sharded likewise.
     """
+    if cfg.use_fused_dora:
+        raise ValueError(
+            "use_fused_dora is forward/serving-only (the Pallas kernel "
+            "defines no VJP); the train step requires the jnp adapter path")
     daxes = data_axes(mesh)
     dp = dp_size(mesh)
     bspec = daxes if len(daxes) > 1 else daxes[0]
     micro = settings.micro_batches
     is_moe = cfg.n_experts > 0
+    method = get_method(settings.method)
+    keep_rx = re.compile(method.keep_local) if method.keep_local else None
+    # this step's cross-client collective is a pmean with keep-local
+    # leaves restored — i.e. client-weighted FedAvg.  Refuse methods whose
+    # aggregation or loss semantics that collective cannot express, so a
+    # method never silently trains with different math than the simulator.
+    if method.prox or not _pmean_equivalent(method):
+        raise ValueError(
+            f"method {method.name!r} needs aggregation/loss semantics "
+            "(custom aggregate or proximal term) that the pmean-based "
+            "production train step does not implement; use fed/simulate.py "
+            "or extend make_fed_train_step")
 
     def client_body(base, adapters, opt_state, step, batch):
         # ---- inside the manual region: one client per shard -------------
@@ -125,9 +159,11 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
         adapters = apply_updates(adapters, upd)
 
         # ---- decomposed aggregation (Eqs. 5-8): pmean of every component
-        # EXCEPT the personal ΔB_M — the only cross-client collective.
+        # EXCEPT the method's keep-local leaves (the paper: personal ΔB_M)
+        # — the only cross-client collective.
         agg = jax.tree.map(lambda x: jax.lax.pmean(x, daxes), adapters)
-        adapters = _select_personal(adapters, agg, re.compile(r"dB_mag$"))
+        adapters = (_select_personal(adapters, agg, keep_rx)
+                    if keep_rx is not None else agg)
         met_acc = jax.tree.map(lambda x: jax.lax.pmean(x / micro, daxes),
                                met_acc)
 
@@ -148,9 +184,9 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
 
     # trainable mask from an abstract adapter tree
     abs_ad = jax.eval_shape(
-        lambda: peft.add_lora(abstract_base(cfg), cfg, jax.random.PRNGKey(0),
-                              decomposed=True))
-    mask = _stage_mask(abs_ad, settings.stage)
+        lambda: method.make_adapter(abstract_base(cfg), cfg,
+                                    jax.random.PRNGKey(0)))
+    mask = _stage_mask(method, abs_ad, settings.stage)
     opt = masked(adamw(settings.lr), mask)
 
     ad_spec = jax.tree.map(lambda _: P(bspec), abs_ad)

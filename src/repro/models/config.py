@@ -63,6 +63,10 @@ class ArchConfig:
     lora_alpha: float = 32.0
     lora_dropout: float = 0.1
     lora_targets: Sequence[str] = ("q_proj", "v_proj")
+    use_fused_dora: bool = False  # fuse base+adapter matmul via the Pallas
+                                  # kernel (interpret off-TPU); forward-only
+                                  # — the kernel has no VJP, so keep False
+                                  # for training
     # --- misc ---
     tie_embeddings: bool = False
     norm_eps: float = 1e-6

@@ -104,7 +104,11 @@ def lora_delta(p: Params, x, scale: float, dropout_rng=None,
         x = jnp.where(keep, x / (1.0 - dropout), 0.0).astype(x.dtype)
     if "lora_A" in p:                                    # raw LoRA
         h = x @ p["lora_A"].astype(x.dtype)
-        return (h @ p["lora_B"].astype(x.dtype)) * scale
+        y = (h @ p["lora_B"].astype(x.dtype)) * scale
+        if "local_A" in p:                               # FedALT dual pair
+            hl = x @ p["local_A"].astype(x.dtype)
+            y = y + (hl @ p["local_B"].astype(x.dtype)) * scale
+        return y
     # DoRA-decomposed LoRA (the paper's form):
     #   A = (A_dir + dA_dir) * A_mag[:, None]
     #   B = B_dir * (B_mag + dB_mag)[:, None]
@@ -115,7 +119,17 @@ def lora_delta(p: Params, x, scale: float, dropout_rng=None,
 
 
 def linear(p: Params, x, *, lora_scale: float = 0.0, dropout_rng=None,
-           dropout: float = 0.0):
+           dropout: float = 0.0, fused: bool = False):
+    if (fused and "A_dir" in p and lora_scale
+            and (dropout_rng is None or dropout == 0.0)
+            and "bias" not in p and p["kernel"].ndim == 2):
+        # fused base+adapter matmul (Pallas; interpret mode off-TPU).
+        # Forward/serving only: pallas_call has no VJP here, so training
+        # paths keep fused=False.
+        from repro.kernels import fused_dora
+        return fused_dora(x, p["kernel"], p["A_dir"], p["A_mag"],
+                          p["B_dir"], p["B_mag"], p.get("dA_dir"),
+                          p.get("dB_mag"), scale=lora_scale)
     y = x @ p["kernel"].astype(x.dtype)
     if "bias" in p:
         y = y + p["bias"].astype(y.dtype)
@@ -217,12 +231,15 @@ def attention(p: Params, x, positions, cfg, *, kind: str = "global",
     scale = 1.0 / math.sqrt(dh)
 
     q = linear(p["q_proj"], x, lora_scale=lora_scale if "q_proj" in cfg.lora_targets else 0.0,
-               dropout_rng=dropout_rng, dropout=cfg.lora_dropout)
+               dropout_rng=dropout_rng, dropout=cfg.lora_dropout,
+               fused=cfg.use_fused_dora)
     kv_in = x if kv_source is None else kv_source
     k = linear(p["k_proj"], kv_in, lora_scale=lora_scale if "k_proj" in cfg.lora_targets else 0.0,
-               dropout_rng=dropout_rng, dropout=cfg.lora_dropout)
+               dropout_rng=dropout_rng, dropout=cfg.lora_dropout,
+               fused=cfg.use_fused_dora)
     v = linear(p["v_proj"], kv_in, lora_scale=lora_scale if "v_proj" in cfg.lora_targets else 0.0,
-               dropout_rng=dropout_rng, dropout=cfg.lora_dropout)
+               dropout_rng=dropout_rng, dropout=cfg.lora_dropout,
+               fused=cfg.use_fused_dora)
     Skv = kv_in.shape[1]
     q = q.reshape(B, S, H, dh)
     k = k.reshape(B, Skv, Kh, dh)
@@ -286,7 +303,8 @@ def attention(p: Params, x, positions, cfg, *, kind: str = "global",
             new_cache = {"k": kk, "v": vv}
 
     y = linear(p["o_proj"], out.reshape(B, S, H * dh),
-               lora_scale=lora_scale if "o_proj" in cfg.lora_targets else 0.0)
+               lora_scale=lora_scale if "o_proj" in cfg.lora_targets else 0.0,
+               fused=cfg.use_fused_dora)
     return y, new_cache
 
 
@@ -303,12 +321,15 @@ def init_attn_cache(cfg, batch: int, seq_len: int, kind: str, dtype):
 
 def dense_ffn(p: Params, x, cfg, lora_scale: float = 0.0):
     g = linear(p["gate_proj"], x,
-               lora_scale=lora_scale if "gate_proj" in cfg.lora_targets else 0.0)
+               lora_scale=lora_scale if "gate_proj" in cfg.lora_targets else 0.0,
+               fused=cfg.use_fused_dora)
     u = linear(p["up_proj"], x,
-               lora_scale=lora_scale if "up_proj" in cfg.lora_targets else 0.0)
+               lora_scale=lora_scale if "up_proj" in cfg.lora_targets else 0.0,
+               fused=cfg.use_fused_dora)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     y = linear(p["down_proj"], h,
-               lora_scale=lora_scale if "down_proj" in cfg.lora_targets else 0.0)
+               lora_scale=lora_scale if "down_proj" in cfg.lora_targets else 0.0,
+               fused=cfg.use_fused_dora)
     if "adapter_down" in p:                                # Houlsby adapter
         a = jax.nn.gelu((y @ p["adapter_down"]).astype(jnp.float32)).astype(y.dtype)
         y = y + a @ p["adapter_up"]

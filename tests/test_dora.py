@@ -1,7 +1,8 @@
-"""Property tests for the D-M decomposition + decomposed aggregation."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+"""Property tests for the D-M decomposition + decomposed aggregation.
+
+``hypothesis`` is optional: without it the property tests run over a
+deterministic sample of random matrices instead of generated cases.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,32 +11,58 @@ import pytest
 from repro.core import dora
 from repro.core import aggregation as agg
 
-hypothesis.settings.register_profile(
-    "ci", deadline=None, max_examples=30,
-    suppress_health_check=list(hypothesis.HealthCheck))
-hypothesis.settings.load_profile("ci")
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=30,
+        suppress_health_check=list(hypothesis.HealthCheck))
+    hypothesis.settings.load_profile("ci")
+
+    mats = hnp.arrays(
+        np.float32, st.tuples(st.integers(2, 8), st.integers(2, 8)),
+        elements=st.floats(-4, 4, width=32).filter(lambda v: abs(v) > 1e-3))
+
+    def given_mats(check):
+        return hypothesis.given(mats)(check)
+else:
+    def _fallback_mats(n=12):
+        rng = np.random.default_rng(42)
+        out = []
+        for i in range(n):
+            shape = (int(rng.integers(2, 9)), int(rng.integers(2, 9)))
+            x = rng.uniform(-4, 4, size=shape).astype(np.float32)
+            x[np.abs(x) <= 1e-3] = 1e-2
+            out.append(x)
+        return out
+
+    def given_mats(check):
+        return pytest.mark.parametrize(
+            "x", _fallback_mats(),
+            ids=[f"mat{i}" for i in range(12)])(check)
 
 
-mats = hnp.arrays(
-    np.float32, st.tuples(st.integers(2, 8), st.integers(2, 8)),
-    elements=st.floats(-4, 4, width=32).filter(lambda v: abs(v) > 1e-3))
-
-
-@hypothesis.given(mats)
+@given_mats
 def test_decompose_recompose_identity(x):
     m, d = dora.decompose(jnp.asarray(x))
     back = dora.recompose(m, d)
     np.testing.assert_allclose(np.asarray(back), x, rtol=2e-5, atol=2e-5)
 
 
-@hypothesis.given(mats)
+@given_mats
 def test_direction_unit_norm(x):
     _, d = dora.decompose(jnp.asarray(x))
     norms = np.linalg.norm(np.asarray(d), axis=-1)
     np.testing.assert_allclose(norms, 1.0, atol=1e-4)
 
 
-@hypothesis.given(mats)
+@given_mats
 def test_magnitude_nonnegative(x):
     m, _ = dora.decompose(jnp.asarray(x))
     assert np.all(np.asarray(m) >= 0)

@@ -61,7 +61,10 @@ def test_comm_accounting_counts_adapters_only():
     hp = FedHyper(method="fedlora_opt", n_clients=4)
     sim = FedSim(CFG, hp)
     sim.aggregate()
-    per_client = 2 * pt.tree_bytes(sim.adapter_template)
+    # keep-local leaves (dB_mag) never move, so they don't count
+    shared = pt.filter_tree(sim.adapter_template,
+                            lambda p: not p.endswith("dB_mag"))
+    per_client = 2 * pt.tree_bytes(shared)
     assert sim.comm_bytes == 4 * per_client
     assert sim.comm_bytes < pt.tree_bytes(sim.base) / 2   # « backbone
 

@@ -1,0 +1,203 @@
+"""Strategy-registry + scanned-round-engine tests.
+
+Covers: scan/per-step parity, registry round-trip for every built-in,
+keep-local leaves surviving aggregate AND global-stage rebroadcast, the
+FedALT-style dual-adapter baseline, and trimmed-mean robustness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core import methods
+from repro.core import peft
+from repro.fed.simulate import FedHyper, FedSim
+from repro.models.config import ArchConfig
+from repro.utils import pytree as pt
+
+CFG = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                 dtype="float32", lora_rank=4, lora_dropout=0.0)
+
+
+def _batches(C, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"tokens": jnp.asarray(rng.integers(5, 256, size=(C, 4, 32)),
+                                   jnp.int32),
+             "loss_mask": jnp.ones((C, 4, 32), jnp.float32)}
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_roundtrips_every_builtin():
+    names = methods.available_methods()
+    assert {"fedlora_opt", "lora", "ffa_lora", "fedprox", "prompt",
+            "adapter", "fedalt", "lora_trimmed"} <= set(names)
+    for name in names:
+        m = methods.get_method(name)
+        assert m.name == name
+        assert callable(m.make_adapter) and callable(m.train_mask)
+
+
+def test_unknown_method_raises_with_available_list():
+    with pytest.raises(ValueError, match="fedlora_opt"):
+        methods.get_method("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        methods.register(methods.get_method("lora"))
+
+
+def test_duplicate_register_overwrite_roundtrip():
+    m = methods.get_method("lora")
+    assert methods.register(m, overwrite=True) is m
+
+
+@pytest.mark.parametrize("name", ["fedalt", "lora_trimmed"])
+def test_registry_only_baselines_step_and_aggregate(name):
+    """New baselines ride the engine with zero engine changes."""
+    hp = FedHyper(method=name, n_clients=4, local_steps=2)
+    sim = FedSim(CFG, hp)
+    mets = sim.local_round(_batches(4, 2), jax.random.PRNGKey(0))
+    assert np.isfinite(mets["ce"]).all()
+    sim.aggregate()
+    assert sim.comm_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# scan engine vs per-step reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fedlora_opt", "fedprox"])
+def test_scanned_round_matches_per_step_reference(method):
+    """The single-scan round must produce (near-)identical adapters and
+    optimizer state to the seed-style per-step host-synced loop."""
+    hp = FedHyper(method=method, n_clients=2, local_steps=3, lr=1e-2,
+                  prox_mu=0.01)
+    b = _batches(2, 3, seed=7)
+    rng = jax.random.PRNGKey(3)
+    sim_scan, sim_ref = FedSim(CFG, hp), FedSim(CFG, hp)
+    sim_scan.local_round(b, rng)
+    sim_ref.local_round_reference(b, rng)
+    assert int(sim_scan._step) == int(sim_ref._step) == 3
+    for path, a, r in zip(pt.tree_paths(sim_scan.client_adapters),
+                          jax.tree.leaves(sim_scan.client_adapters),
+                          jax.tree.leaves(sim_ref.client_adapters)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=1e-5, atol=1e-6, err_msg=path)
+    # and across a second round (step counter continuity)
+    b2 = _batches(2, 2, seed=9)
+    sim_scan.local_round(b2, rng)
+    sim_ref.local_round_reference(b2, rng)
+    for a, r in zip(jax.tree.leaves(sim_scan.client_adapters),
+                    jax.tree.leaves(sim_ref.client_adapters)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# keep-local rebroadcast
+# ---------------------------------------------------------------------------
+
+def _desync(sim):
+    sim.client_adapters = jax.tree.map(
+        lambda x: x + jnp.arange(x.shape[0], dtype=x.dtype).reshape(
+            (-1,) + (1,) * (x.ndim - 1)), sim.client_adapters)
+
+
+def test_keep_local_regex_survives_aggregate_and_global_stage():
+    hp = FedHyper(method="fedlora_opt", n_clients=3, global_steps=2,
+                  server_lr=1e-2)
+    sim = FedSim(CFG, hp)
+    _desync(sim)
+    personal = {p: np.asarray(FedSim._leaf(sim.client_adapters, p))
+                for p in pt.tree_paths(sim.client_adapters)
+                if p.endswith("dB_mag")}
+    aggregated = sim.aggregate()
+    for p, ref in personal.items():
+        np.testing.assert_allclose(
+            np.asarray(FedSim._leaf(sim.client_adapters, p)), ref,
+            err_msg=f"aggregate clobbered {p}")
+    sb = [{k: v[0] for k, v in b.items()} for b in _batches(1, 2, seed=3)]
+    sim.global_stage(aggregated, sb, jax.random.PRNGKey(0))
+    for p, ref in personal.items():
+        np.testing.assert_allclose(
+            np.asarray(FedSim._leaf(sim.client_adapters, p)), ref,
+            err_msg=f"global_stage rebroadcast clobbered {p}")
+
+
+def test_fedalt_local_pair_stays_personal_shared_pair_averages():
+    hp = FedHyper(method="fedalt", n_clients=3)
+    sim = FedSim(CFG, hp)
+    _desync(sim)
+    before = sim.client_adapters
+    aggregated = sim.aggregate()
+    after = sim.client_adapters
+    # the server-side aggregate never contains the personal pair: the
+    # global/eval model is the shared rest-of-world adapter only
+    for path in pt.tree_paths(aggregated):
+        if path.endswith("local_A") or path.endswith("local_B"):
+            assert float(jnp.abs(FedSim._leaf(aggregated, path)).max()) == 0.0
+    for path, leaf in zip(pt.tree_paths(after), jax.tree.leaves(after)):
+        arr = np.asarray(leaf)
+        if path.endswith("local_A") or path.endswith("local_B"):
+            np.testing.assert_allclose(
+                arr, np.asarray(FedSim._leaf(before, path)), err_msg=path)
+        else:
+            for c in range(1, arr.shape[0]):
+                np.testing.assert_allclose(arr[c], arr[0], rtol=1e-5,
+                                           err_msg=path)
+
+
+def test_fedalt_local_pair_contributes_to_forward():
+    from repro.models.layers import lora_delta
+    rng = np.random.default_rng(0)
+    p = {"lora_A": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+         "lora_B": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+         "local_A": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+         "local_B": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
+    y = lora_delta(p, x, 2.0)
+    y_shared = (x @ p["lora_A"]) @ p["lora_B"] * 2.0
+    y_local = (x @ p["local_A"]) @ p["local_B"] * 2.0
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(y_shared + y_local),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# trimmed-mean aggregation
+# ---------------------------------------------------------------------------
+
+def test_trimmed_fedavg_drops_outlier_client():
+    C = 4
+    x = jnp.asarray(np.stack([np.full((3,), v, np.float32)
+                              for v in (1.0, 2.0, 3.0, 1e6)]))
+    out = agg.trimmed_fedavg({"w": x}, trim_ratio=0.25)["w"]
+    np.testing.assert_allclose(np.asarray(out), np.full((3,), 2.5), rtol=1e-6)
+    # plain fedavg is destroyed by the same outlier
+    assert float(agg.fedavg({"w": x})["w"][0]) > 1e5
+
+
+def test_trimmed_fedavg_degenerate_falls_back_to_mean():
+    x = jnp.asarray([[1.0], [3.0]], jnp.float32)   # C=2: 2k >= C
+    out = agg.trimmed_fedavg({"w": x}, trim_ratio=0.5)["w"]
+    np.testing.assert_allclose(np.asarray(out), [2.0])
+
+
+# ---------------------------------------------------------------------------
+# dual-LoRA adapter factory
+# ---------------------------------------------------------------------------
+
+def test_add_dual_lora_leaf_layout():
+    from repro.models import model as M
+    base = M.init_params(jax.random.PRNGKey(0), CFG)
+    ad = peft.add_dual_lora(base, CFG, jax.random.PRNGKey(1))
+    paths = pt.tree_paths(ad)
+    suffixes = {p.rsplit("/", 1)[-1] for p in paths}
+    assert suffixes == {"lora_A", "lora_B", "local_A", "local_B"}
+    for p in paths:
+        if p.endswith("local_B"):
+            assert float(jnp.abs(FedSim._leaf(ad, p)).max()) == 0.0
