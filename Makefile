@@ -1,9 +1,17 @@
-.PHONY: test perf
+.PHONY: test test-serve perf serve-bench
 
 # tier-1 verify (ROADMAP.md)
 test:
 	bash scripts/ci.sh
 
+# multi-tenant serving subsystem only (BGMV kernel, store, engine)
+test-serve:
+	bash scripts/ci.sh --serve
+
 # fed-round + per-arch microbenchmarks
 perf:
 	PYTHONPATH=src python -m benchmarks.perf_micro
+
+# mixed-tenant batch vs naive merge-per-tenant serving loop
+serve-bench:
+	PYTHONPATH=src python -m benchmarks.serve_multitenant

@@ -12,7 +12,7 @@ import json
 import os
 import time
 
-ALL = ("table1", "table2", "fig1", "fig3", "perf", "roofline")
+ALL = ("table1", "table2", "fig1", "fig3", "perf", "serve", "roofline")
 
 
 def main():
@@ -77,6 +77,13 @@ def main():
         for r in rows:
             csv_lines.append(f"perf/{r['arch']}/fwd,{r['fwd_us']:.0f},smoke_cpu")
             csv_lines.append(f"perf/{r['arch']}/decode,{r['dec_us']:.0f},smoke_cpu")
+    if "serve" in which:
+        from benchmarks import serve_multitenant
+        rows = cached("serve", lambda: serve_multitenant.run()[0])
+        results["serve"] = rows
+        for r in rows:
+            csv_lines.append(f"{r['arch']},{r['us']:.0f},"
+                             f"tokens_s={r['tokens_s']:.1f}")
     if "roofline" in which:
         from benchmarks import roofline
         recs = roofline.load_records()

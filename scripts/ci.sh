@@ -1,6 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): the full test suite with src on PYTHONPATH.
+#
+#   scripts/ci.sh              # full suite (includes the serving tests)
+#   scripts/ci.sh --serve      # fast path: multi-tenant serving subsystem
+#                              # only (BGMV kernel, AdapterStore, engine)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--serve" ]]; then
+  shift
+  exec python -m pytest -x -q tests/test_batched_lora.py \
+    tests/test_adapter_store.py tests/test_serve_engine.py "$@"
+fi
 exec python -m pytest -x -q "$@"

@@ -3,7 +3,10 @@
   fused_dora       — base matmul + DoRA-decomposed LoRA adapter, one pass
   flash_attention  — causal/sliding-window online-softmax attention, GQA
   ssd_scan         — Mamba-2 SSD chunked scan with VMEM-resident state
+  batched_lora     — BGMV: per-row adapter gather for mixed-tenant serving
 """
 from repro.kernels.fused_dora.ops import fused_dora, fused_dora_ref  # noqa: F401
 from repro.kernels.flash_attention.ops import flash_attention, attention_ref  # noqa: F401
 from repro.kernels.ssd_scan.ops import ssd_scan, ssd_ref, ssd_naive  # noqa: F401
+from repro.kernels.batched_lora.ops import (bgmv, bgmv_mag,  # noqa: F401
+                                            bgmv_mag_ref, bgmv_ref)

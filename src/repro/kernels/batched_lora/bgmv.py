@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: batched-gather LoRA (BGMV, Punica / S-LoRA style).
+
+One mixed batch crosses many tenants: row i of ``x`` carries the tokens
+of the tenant whose adapter occupies pool slot ``idx[i]``.  The kernel
+computes, per row,
+
+    y[i] = scale · (x[i] @ A[idx[i]]) @ B[idx[i]]
+
+without ever merging an adapter into the backbone and without
+materializing gathered per-row adapter copies: the index vector rides in
+scalar-prefetch memory, so each grid step's BlockSpec index map selects
+the right pool slot and the DMA engine streams exactly one
+(d_in, r) + (r, d_out) adapter pair per row into VMEM.
+
+Grid: (B, S/bs) — token blocks innermost, so a row's adapter pair keeps
+the same block index across its token blocks and Pallas skips the
+re-fetch (revisiting an unchanged block index is a no-op DMA).
+
+A second entry point covers the paper's decomposed-DoRA deployment
+shape, where tenants share every *direction* factor and differ only in
+the per-rank magnitude vector (ΔB_M — a few hundred bytes per tenant):
+
+    y[i] = scale · (((x[i] ⊙ A_mag) @ A_dir) ⊙ mag[idx[i]]) @ B_dir
+
+Here only the tiny (1, r) magnitude block is gathered per row; the
+shared factors load once and stay VMEM-resident across the whole grid.
+
+VMEM working set (bs=256, d=1024, r=16, f32): x(256·1024) + a(1024·16)
++ b(16·1024) + out(256·1024) ≈ 2.2 MB « 16 MB v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bgmv_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref, *, scale: float):
+    del idx_ref  # consumed by the BlockSpec index maps
+    x = x_ref[0]                                          # (bs, d_in)
+    h = jax.lax.dot_general(
+        x, a_ref[0].astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bs, r)
+    y = jax.lax.dot_general(
+        h.astype(x.dtype), b_ref[0].astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bs, d_out)
+    o_ref[0] = (y * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bs", "interpret"))
+def bgmv_matmul(x, a_pool, b_pool, idx, *, scale: float = 1.0,
+                bs: int = 256, interpret: bool = False):
+    """x (B, S, d_in), pools (n_slots, d_in, r) / (n_slots, r, d_out),
+    idx (B,) int32 → (B, S, d_out) per-row adapter deltas."""
+    B, S, d_in = x.shape
+    r = a_pool.shape[-1]
+    d_out = b_pool.shape[-1]
+    bs = min(bs, S)
+    assert S % bs == 0, (S, bs)
+    grid = (B, S // bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, d_in), lambda i, s, idx_ref: (i, s, 0)),
+            pl.BlockSpec((1, d_in, r),
+                         lambda i, s, idx_ref: (idx_ref[i], 0, 0)),
+            pl.BlockSpec((1, r, d_out),
+                         lambda i, s, idx_ref: (idx_ref[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, d_out), lambda i, s, idx_ref: (i, s, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_bgmv_kernel, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, d_out), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x, a_pool, b_pool)
+
+
+def _bgmv_mag_kernel(idx_ref, x_ref, adir_ref, amag_ref, mag_ref, bdir_ref,
+                     o_ref, *, scale: float):
+    del idx_ref
+    x = x_ref[0]                                          # (bs, d_in)
+    xs = x * amag_ref[...][None, :].astype(x.dtype)
+    h = jax.lax.dot_general(
+        xs, adir_ref[...].astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bs, r)
+    h = h * mag_ref[0][None, :]
+    y = jax.lax.dot_general(
+        h.astype(x.dtype), bdir_ref[...].astype(x.dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bs, d_out)
+    o_ref[0] = (y * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bs", "interpret"))
+def bgmv_mag_matmul(x, a_dir, a_mag, mag_pool, b_dir, idx, *,
+                    scale: float = 1.0, bs: int = 256,
+                    interpret: bool = False):
+    """Decomposed-DoRA magnitude path: shared a_dir (d_in, r) /
+    a_mag (d_in,) / b_dir (r, d_out); mag_pool (n_slots, r) gathered
+    per row via idx (B,).  x (B, S, d_in) → (B, S, d_out)."""
+    B, S, d_in = x.shape
+    r = a_dir.shape[-1]
+    d_out = b_dir.shape[-1]
+    bs = min(bs, S)
+    assert S % bs == 0, (S, bs)
+    grid = (B, S // bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, d_in), lambda i, s, idx_ref: (i, s, 0)),
+            pl.BlockSpec((d_in, r), lambda i, s, idx_ref: (0, 0)),
+            pl.BlockSpec((d_in,), lambda i, s, idx_ref: (0,)),
+            pl.BlockSpec((1, r), lambda i, s, idx_ref: (idx_ref[i], 0)),
+            pl.BlockSpec((r, d_out), lambda i, s, idx_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, d_out), lambda i, s, idx_ref: (i, s, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_bgmv_mag_kernel, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, d_out), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x, a_dir, a_mag.astype(jnp.float32),
+      mag_pool.astype(jnp.float32), b_dir)

@@ -1,0 +1,82 @@
+"""Public dispatchers for the batched-LoRA (BGMV) kernels.
+
+``bgmv`` / ``bgmv_mag`` route to the Pallas TPU kernel on TPU backends
+and to the vectorized einsum oracle elsewhere.  Unlike ``fused_dora``
+(validation-oriented), the CPU default here is the *oracle*, not
+interpret mode: these ops sit on the serving hot path and the Pallas
+interpreter is orders of magnitude slower than XLA.  Tests force the
+kernel body with ``impl="interpret"``.
+
+Inputs accept (B, S, d_in) token blocks or (B, d_in) single-token decode
+rows; ``idx`` is the (B,) int32 pool-slot vector from the AdapterStore.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.batched_lora.bgmv import bgmv_matmul, bgmv_mag_matmul
+from repro.kernels.batched_lora.ref import bgmv_ref, bgmv_mag_ref
+
+_BS = 256                       # token-block size for the Pallas grid
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl):
+    if impl is None:
+        return "pallas" if _on_tpu() else "einsum"
+    if impl not in ("pallas", "interpret", "einsum"):
+        raise ValueError(f"unknown bgmv impl {impl!r}")
+    return impl
+
+
+def _pad_tokens(x):
+    """Pad S up to a block multiple for the Pallas grid (zero token rows
+    contribute zero delta and are sliced back off)."""
+    S = x.shape[1]
+    bs = min(_BS, S)
+    pad = -S % bs
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x, S, bs
+
+
+def bgmv(x, a_pool, b_pool, idx, *, scale: float = 1.0, impl=None):
+    """y[i] = scale · (x[i] @ a_pool[idx[i]]) @ b_pool[idx[i]]."""
+    impl = _resolve(impl)
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[:, None, :]
+    if impl == "einsum":
+        y = bgmv_ref(x, a_pool, b_pool, idx, scale)
+    else:
+        xp, S, bs = _pad_tokens(x)
+        y = bgmv_matmul(xp, a_pool, b_pool, idx, scale=scale, bs=bs,
+                        interpret=(impl == "interpret") or not _on_tpu())
+        y = y[:, :S]
+    return y[:, 0] if squeeze else y
+
+
+def bgmv_mag(x, a_dir, a_mag, mag_pool, b_dir, idx, *, scale: float = 1.0,
+             impl=None):
+    """Decomposed-DoRA magnitude path:
+    y[i] = scale · (((x[i] ⊙ a_mag) @ a_dir) ⊙ mag_pool[idx[i]]) @ b_dir."""
+    impl = _resolve(impl)
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[:, None, :]
+    if impl == "einsum":
+        y = bgmv_mag_ref(x, a_dir, a_mag, mag_pool, b_dir, idx, scale)
+    else:
+        xp, S, bs = _pad_tokens(x)
+        y = bgmv_mag_matmul(xp, a_dir, a_mag, mag_pool, b_dir, idx,
+                            scale=scale, bs=bs,
+                            interpret=(impl == "interpret") or not _on_tpu())
+        y = y[:, :S]
+    return y[:, 0] if squeeze else y
+
+
+__all__ = ["bgmv", "bgmv_mag", "bgmv_ref", "bgmv_mag_ref"]

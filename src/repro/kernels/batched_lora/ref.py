@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the batched-LoRA (BGMV) kernels.
+
+These double as the fast vectorized fallback on non-TPU backends (the
+Pallas interpreter is an emulator — fine for validation, far too slow
+for the serving hot path).  Op order deliberately mirrors
+``models.layers.lora_delta`` so a mixed-tenant batch through the pooled
+path reproduces the per-tenant merged-adapter path bit-for-bit in
+float32:
+
+  pairs      y[i] = (x[i] @ A[idx[i]]) @ B[idx[i]] · scale
+  magnitude  y[i] = (((x[i] ⊙ A_mag) @ A_dir) ⊙ mag[idx[i]]) @ B_dir · scale
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bgmv_ref(x, a_pool, b_pool, idx, scale: float = 1.0):
+    """x (B, S, d_in), a_pool (L, d_in, r), b_pool (L, r, d_out),
+    idx (B,) → (B, S, d_out)."""
+    a = jnp.take(a_pool, idx, axis=0).astype(x.dtype)     # (B, d_in, r)
+    b = jnp.take(b_pool, idx, axis=0).astype(x.dtype)     # (B, r, d_out)
+    h = jnp.einsum("bsd,bdr->bsr", x, a)
+    return jnp.einsum("bsr,bro->bso", h, b) * scale
+
+
+def bgmv_mag_ref(x, a_dir, a_mag, mag_pool, b_dir, idx, scale: float = 1.0):
+    """Decomposed-DoRA magnitude path; shared directions, per-row
+    magnitude gather.  Shapes as in bgmv_mag_matmul."""
+    h = (x * a_mag.astype(x.dtype)) @ a_dir.astype(x.dtype)   # (B, S, r)
+    m = jnp.take(mag_pool, idx, axis=0)                       # (B, r)
+    h = h * m[:, None, :].astype(x.dtype)
+    return (h @ b_dir.astype(x.dtype)) * scale

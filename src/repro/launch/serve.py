@@ -1,13 +1,23 @@
-"""Serving steps: batched prefill + one-token decode under pjit.
+"""Serving steps: batched prefill + scanned greedy decode under jit.
 
-Per-tenant adapters: the decomposed-LoRA overlay merges into the
-(model-sharded) backbone; personalized ΔB_M vectors are a few hundred
-bytes per tenant, so a pod can hold thousands of personalized variants of
-one backbone — the deployment story the paper's local optimizer implies.
+Per-tenant adapters, two deployment modes:
+
+  * merge-per-tenant (this module's ``merge_adapters`` + a generate call
+    per tenant) — the naive reference path;
+  * mixed-batch multi-tenant via ``repro.serve`` — one batch spanning
+    many tenants, adapters gathered per row from pooled storage by the
+    BGMV kernel (never merged into the backbone).
+
+``greedy_generate`` runs the decode loop as ONE jitted ``lax.scan`` with
+the KV cache donated — no per-token Python dispatch or host sync (same
+pattern as the scanned federated round engine).
+``greedy_generate_reference`` keeps the per-step Python loop as the
+parity oracle.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +45,53 @@ def make_decode_step(cfg: ArchConfig, mesh=None):
     return decode_step
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "n_new"))
+def _scan_decode(params, tok0, cache, start, cfg: ArchConfig, n_new: int,
+                 adapter_idx=None):
+    # (no cache donation: the final cache is not an output here, so the
+    # donated buffer would have nothing to alias — XLA already reuses it
+    # freely inside the scan)
+    """(n_new - 1) greedy decode steps as one scan.  tok0 (B,) is the
+    first generated token (from prefill logits); returns (B, n_new)."""
+    def body(carry, _):
+        tok, cache, idx = carry
+        logits, cache = M.decode_step(params, tok, cache, idx, cfg,
+                                      adapter_idx=adapter_idx)
+        ntok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (ntok, cache, idx + 1), ntok
+
+    (_, _, _), toks = jax.lax.scan(
+        body, (tok0, cache, jnp.asarray(start, jnp.int32)),
+        length=n_new - 1)
+    return jnp.concatenate([tok0[:, None], toks.T], axis=1)
+
+
 def greedy_generate(params, prompt_batch: dict, cfg: ArchConfig,
-                    n_new: int = 16, mesh=None):
-    """Simple greedy loop for the examples (prefill → decode)."""
+                    n_new: int = 16, mesh=None, adapter_idx=None):
+    """Greedy prefill → scanned decode.  adapter_idx (B,) routes rows to
+    pooled-adapter slots (mixed-tenant batches; see repro.serve)."""
+    if mesh is not None:
+        # multi-device meshes keep the explicit per-step loop (the scan
+        # would jit under whatever sharding context the caller set up)
+        if adapter_idx is not None:
+            raise NotImplementedError(
+                "pooled-adapter routing (adapter_idx) is single-mesh only; "
+                "the mesh fallback would silently serve the bare backbone")
+        return greedy_generate_reference(params, prompt_batch, cfg,
+                                         n_new=n_new, mesh=mesh)
+    S = prompt_batch["tokens"].shape[1]
+    if adapter_idx is not None:
+        prompt_batch = dict(prompt_batch, adapter_idx=adapter_idx)
+    logits, cache = M.prefill(params, prompt_batch, cfg, cache_len=S + n_new)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return _scan_decode(params, tok0, cache, S, cfg, n_new,
+                        adapter_idx=adapter_idx)
+
+
+def greedy_generate_reference(params, prompt_batch: dict, cfg: ArchConfig,
+                              n_new: int = 16, mesh=None):
+    """Per-step Python loop (the seed implementation) — parity oracle for
+    the scanned path and the multi-device fallback."""
     S = prompt_batch["tokens"].shape[1]
     logits, cache = M.prefill(params, prompt_batch, cfg, mesh=mesh,
                               cache_len=S + n_new)

@@ -118,11 +118,39 @@ def lora_delta(p: Params, x, scale: float, dropout_rng=None,
     return ((h * b_mag.astype(x.dtype)) @ p["B_dir"].astype(x.dtype)) * scale
 
 
+def lora_delta_batched(p: Params, x, adapter_idx, scale: float):
+    """Mixed-tenant adapter contribution: row i of x (B, ..., d_in) uses
+    the adapter in pool slot adapter_idx[i] (BGMV — see
+    kernels/batched_lora and serve/adapter_store).  Pooled leaves:
+
+      {pool_A, pool_B}                        — per-slot LoRA pairs
+      {bgmv_A_dir, bgmv_A_mag, bgmv_B_dir,
+       pool_B_mag}                            — decomposed-DoRA: shared
+                                                directions, per-slot
+                                                effective B magnitudes
+                                                (the paper's ΔB_M
+                                                deployment shape)
+    """
+    from repro.kernels import bgmv, bgmv_mag
+    if "pool_A" in p:
+        return bgmv(x, p["pool_A"], p["pool_B"], adapter_idx, scale=scale)
+    return bgmv_mag(x, p["bgmv_A_dir"], p["bgmv_A_mag"], p["pool_B_mag"],
+                    p["bgmv_B_dir"], adapter_idx, scale=scale)
+
+
+def _has_pooled(p: Params) -> bool:
+    return "pool_A" in p or "pool_B_mag" in p
+
+
 def linear(p: Params, x, *, lora_scale: float = 0.0, dropout_rng=None,
-           dropout: float = 0.0, fused: bool = False):
+           dropout: float = 0.0, fused: bool = False, adapter_idx=None):
     if (fused and "A_dir" in p and lora_scale
+            and (adapter_idx is None or not _has_pooled(p))
             and (dropout_rng is None or dropout == 0.0)
             and "bias" not in p and p["kernel"].ndim == 2):
+        # (pooled per-row routing outranks the fused single-adapter path:
+        # taking the fused branch here would silently serve every tenant
+        # the shared adapter)
         # fused base+adapter matmul (Pallas; interpret mode off-TPU).
         # Forward/serving only: pallas_call has no VJP here, so training
         # paths keep fused=False.
@@ -133,7 +161,9 @@ def linear(p: Params, x, *, lora_scale: float = 0.0, dropout_rng=None,
     y = x @ p["kernel"].astype(x.dtype)
     if "bias" in p:
         y = y + p["bias"].astype(y.dtype)
-    if ("lora_A" in p or "A_dir" in p) and lora_scale:
+    if adapter_idx is not None and lora_scale and _has_pooled(p):
+        y = y + lora_delta_batched(p, x, adapter_idx, lora_scale)
+    elif ("lora_A" in p or "A_dir" in p) and lora_scale:
         y = y + lora_delta(p, x, lora_scale, dropout_rng, dropout)
     return y
 
@@ -219,11 +249,14 @@ def attention(p: Params, x, positions, cfg, *, kind: str = "global",
               causal: bool = True, cache=None, cache_index=None,
               kv_source=None, lora_scale: float = 0.0, dropout_rng=None,
               chunk_q: bool = False, return_cache: bool = False,
-              cache_len: int = 0):
+              cache_len: int = 0, adapter_idx=None):
     """Full attention sublayer (pre-norm outside).  Returns (y, new_cache).
 
     cache: dict(k=(B,Sc,K,dh), v=...) — decode ring/linear buffer.
+    cache_index: () int32 shared write position, or (B,) int32 per-row
+    positions (mixed-tenant serving: rows admitted at different times).
     kv_source: encoder output for cross-attention (keys/values from there).
+    adapter_idx: (B,) int32 pool-slot per row for batched-LoRA serving.
     """
     B, S, D = x.shape
     H, Kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -232,14 +265,14 @@ def attention(p: Params, x, positions, cfg, *, kind: str = "global",
 
     q = linear(p["q_proj"], x, lora_scale=lora_scale if "q_proj" in cfg.lora_targets else 0.0,
                dropout_rng=dropout_rng, dropout=cfg.lora_dropout,
-               fused=cfg.use_fused_dora)
+               fused=cfg.use_fused_dora, adapter_idx=adapter_idx)
     kv_in = x if kv_source is None else kv_source
     k = linear(p["k_proj"], kv_in, lora_scale=lora_scale if "k_proj" in cfg.lora_targets else 0.0,
                dropout_rng=dropout_rng, dropout=cfg.lora_dropout,
-               fused=cfg.use_fused_dora)
+               fused=cfg.use_fused_dora, adapter_idx=adapter_idx)
     v = linear(p["v_proj"], kv_in, lora_scale=lora_scale if "v_proj" in cfg.lora_targets else 0.0,
                dropout_rng=dropout_rng, dropout=cfg.lora_dropout,
-               fused=cfg.use_fused_dora)
+               fused=cfg.use_fused_dora, adapter_idx=adapter_idx)
     Skv = kv_in.shape[1]
     q = q.reshape(B, S, H, dh)
     k = k.reshape(B, Skv, Kh, dh)
@@ -268,11 +301,21 @@ def attention(p: Params, x, positions, cfg, *, kind: str = "global",
             slot = cache_index % window                    # ring buffer
         else:
             slot = cache_index
-        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        if jnp.ndim(cache_index) == 1:
+            # per-row write positions (continuous batching: each row is
+            # at its own sequence offset) — scatter one slot per row.
+            rows = jnp.arange(B)
+            ck = cache["k"].at[rows, slot].set(k[:, 0])
+            cv = cache["v"].at[rows, slot].set(v[:, 0])
+            valid = (jnp.arange(Sc)[None, :]
+                     < jnp.minimum(cache_index + 1, Sc)[:, None])
+            mask = valid[:, None, None, :]                 # (B,1,1,Sc)
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+            valid = jnp.arange(Sc) < jnp.minimum(cache_index + 1, Sc)
+            mask = valid[None, None, None, :]              # (1,1,1,Sc)
         new_cache = {"k": ck, "v": cv}
-        valid = jnp.arange(Sc) < jnp.minimum(cache_index + 1, Sc)
-        mask = valid[None, None, None, :]                  # (1,1,1,Sc)
         out = _sdpa(q, ck, cv, mask, scale)
     elif cache is not None and kv_source is not None:
         # cross-attention during decode: kv from the (static) encoder output.
@@ -304,7 +347,7 @@ def attention(p: Params, x, positions, cfg, *, kind: str = "global",
 
     y = linear(p["o_proj"], out.reshape(B, S, H * dh),
                lora_scale=lora_scale if "o_proj" in cfg.lora_targets else 0.0,
-               fused=cfg.use_fused_dora)
+               fused=cfg.use_fused_dora, adapter_idx=adapter_idx)
     return y, new_cache
 
 
@@ -319,17 +362,17 @@ def init_attn_cache(cfg, batch: int, seq_len: int, kind: str, dtype):
 # dense FFN (SwiGLU)
 # ---------------------------------------------------------------------------
 
-def dense_ffn(p: Params, x, cfg, lora_scale: float = 0.0):
+def dense_ffn(p: Params, x, cfg, lora_scale: float = 0.0, adapter_idx=None):
     g = linear(p["gate_proj"], x,
                lora_scale=lora_scale if "gate_proj" in cfg.lora_targets else 0.0,
-               fused=cfg.use_fused_dora)
+               fused=cfg.use_fused_dora, adapter_idx=adapter_idx)
     u = linear(p["up_proj"], x,
                lora_scale=lora_scale if "up_proj" in cfg.lora_targets else 0.0,
-               fused=cfg.use_fused_dora)
+               fused=cfg.use_fused_dora, adapter_idx=adapter_idx)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     y = linear(p["down_proj"], h,
                lora_scale=lora_scale if "down_proj" in cfg.lora_targets else 0.0,
-               fused=cfg.use_fused_dora)
+               fused=cfg.use_fused_dora, adapter_idx=adapter_idx)
     if "adapter_down" in p:                                # Houlsby adapter
         a = jax.nn.gelu((y @ p["adapter_down"]).astype(jnp.float32)).astype(y.dtype)
         y = y + a @ p["adapter_up"]

@@ -158,7 +158,8 @@ def init_params(rng, cfg: ArchConfig) -> Params:
 def _apply_sublayer(p, x, sub: SubLayer, cfg, *, positions, cache=None,
                     cache_index=None, enc_out=None, lora_scale=0.0,
                     dropout_rng=None, mesh=None, causal=True,
-                    chunk_q=False, return_cache=False, cache_len=0):
+                    chunk_q=False, return_cache=False, cache_len=0,
+                    adapter_idx=None):
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
     h = L.rms_norm(x, p["input_norm"], cfg.norm_eps)
@@ -170,7 +171,8 @@ def _apply_sublayer(p, x, sub: SubLayer, cfg, *, positions, cache=None,
             causal=causal and sub.mixer != "cross_attn",
             cache=acache, cache_index=cache_index, kv_source=kv_src,
             lora_scale=lora_scale, dropout_rng=dropout_rng, chunk_q=chunk_q,
-            return_cache=return_cache, cache_len=cache_len)
+            return_cache=return_cache, cache_len=cache_len,
+            adapter_idx=adapter_idx)
         if nc is not None:
             new_cache["attn"] = nc
         x = x + y
@@ -185,7 +187,8 @@ def _apply_sublayer(p, x, sub: SubLayer, cfg, *, positions, cache=None,
         x = x + y
     if sub.ffn == "dense":
         h = L.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
-        x = x + L.dense_ffn(p["mlp"], h, cfg, lora_scale)
+        x = x + L.dense_ffn(p["mlp"], h, cfg, lora_scale,
+                            adapter_idx=adapter_idx)
     elif sub.ffn == "moe":
         h = L.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
         if isinstance(mesh, tuple) and mesh[0] == "manual":
@@ -201,7 +204,8 @@ def _apply_sublayer(p, x, sub: SubLayer, cfg, *, positions, cache=None,
 
 
 def _superblock_fn(pattern, cfg, *, causal=True, mesh=None, chunk_q=False,
-                   remat=False, return_cache=False, cache_len=0):
+                   remat=False, return_cache=False, cache_len=0,
+                   adapter_idx=None):
     """Returns body(x, p_sb, cache_sb, positions, cache_index, enc_out, rng)."""
 
     def body(x, p_sb, cache_sb, positions, cache_index, enc_out, rng):
@@ -219,7 +223,7 @@ def _superblock_fn(pattern, cfg, *, causal=True, mesh=None, chunk_q=False,
                 cache_index=cache_index, enc_out=enc_out,
                 lora_scale=scale, dropout_rng=r, mesh=mesh, causal=causal,
                 chunk_q=chunk_q, return_cache=return_cache,
-                cache_len=cache_len)
+                cache_len=cache_len, adapter_idx=adapter_idx)
             if nc:
                 new_cache[key] = nc
             aux = aux + a
@@ -242,11 +246,12 @@ def _superblock_fn(pattern, cfg, *, causal=True, mesh=None, chunk_q=False,
 def _run_blocks(blocks, tail, x, pattern, cfg, *, positions, cache=None,
                 cache_index=None, enc_out=None, rng=None, mesh=None,
                 causal=True, chunk_q=False, remat=False, return_cache=False,
-                cache_len=0):
+                cache_len=0, adapter_idx=None):
     """Scan over stacked superblocks, then unrolled tail."""
     body = _superblock_fn(pattern, cfg, causal=causal, mesh=mesh,
                           chunk_q=chunk_q, remat=remat,
-                          return_cache=return_cache, cache_len=cache_len)
+                          return_cache=return_cache, cache_len=cache_len,
+                          adapter_idx=adapter_idx)
     n_sb = 0
     if blocks:
         some_leaf = jax.tree.leaves(blocks)[0]
@@ -333,7 +338,7 @@ def forward(params, batch, cfg: ArchConfig, *, rng=None, mesh=None,
         params["blocks"], params.get("tail", {}), x, pattern, cfg,
         positions=positions, enc_out=enc_out, rng=rng, mesh=mesh,
         causal=causal, chunk_q=True, remat=remat, return_cache=return_cache,
-        cache_len=cache_len)
+        cache_len=cache_len, adapter_idx=batch.get("adapter_idx"))
 
     if "prompt_embed" in params:
         x = x[:, params["prompt_embed"].shape[0]:]
@@ -446,12 +451,18 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
 
 
 def decode_step(params, new_token, cache, cache_index, cfg: ArchConfig, *,
-                mesh=None, enc_out=None):
-    """One-token decode.  new_token: (B,) int32; cache_index: () int32.
+                mesh=None, enc_out=None, adapter_idx=None):
+    """One-token decode.  new_token: (B,) int32; cache_index: () int32
+    shared position or (B,) int32 per-row positions (mixed batching).
+    adapter_idx: optional (B,) pool slots for batched-LoRA serving.
     Returns (logits (B,V), new_cache)."""
     x = jnp.take(params["embed"]["embedding"], new_token[:, None], axis=0)
     B = x.shape[0]
-    positions = jnp.broadcast_to(cache_index[None, None], (B, 1)).astype(jnp.int32)
+    if jnp.ndim(cache_index) == 1:
+        positions = cache_index[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(cache_index[None, None],
+                                     (B, 1)).astype(jnp.int32)
 
     n_sb, tail, pattern = cfg.blocks_layout()
     if cfg.n_enc_layers:
@@ -461,7 +472,7 @@ def decode_step(params, new_token, cache, cache_index, cfg: ArchConfig, *,
     x, new_cache, _ = _run_blocks(
         params["blocks"], params.get("tail", {}), x, pattern, cfg,
         positions=positions, cache=cache, cache_index=cache_index,
-        enc_out=enc_out, mesh=mesh)
+        enc_out=enc_out, mesh=mesh, adapter_idx=adapter_idx)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = (x[:, 0] @ _head_kernel(params, cfg).astype(x.dtype)).astype(jnp.float32)
     return logits, new_cache

@@ -1,0 +1,14 @@
+"""Multi-tenant adapter serving engine (S-LoRA / Punica style).
+
+One frozen backbone, many tiny per-tenant adapters, one mixed batch:
+
+  adapter_store  — packs per-tenant LoRA / decomposed-DoRA adapters into
+                   stacked pools [n_slots, ...] with LRU register/evict
+  batcher        — continuous batcher: admits tenant-tagged requests
+                   into free rows of a persistent batch
+  engine         — prefill/decode loop threading per-row adapter_idx
+                   through the model (BGMV kernel or einsum fallback)
+"""
+from repro.serve.adapter_store import AdapterStore  # noqa: F401
+from repro.serve.batcher import ContinuousBatcher, Request  # noqa: F401
+from repro.serve.engine import ServeEngine  # noqa: F401

@@ -1,0 +1,300 @@
+"""AdapterStore: slot-pooled per-tenant adapters for mixed-batch serving.
+
+The store owns, per target projection, stacked pools with an ``L =
+n_slots + 1`` slot axis the BGMV kernel gathers over (slot ``n_slots``
+is the permanent all-zero null adapter — rows without a tenant adapter
+point there).  Targets under the model's scanned ``blocks`` keep their
+leading superblock axis *ahead of* the slot axis — ``(n_sb, L, ...)`` —
+so ``lax.scan`` slices off ``n_sb`` and every layer sees a clean
+``(L, ...)`` pool.  Two pool layouts:
+
+  kind="pairs"     pool_A (L, d_in, r) + pool_B (L, r, d_out): one
+                   effective LoRA pair per tenant.  Raw-LoRA adapters
+                   pack as-is; decomposed-DoRA adapters collapse to
+                   their effective pair (A_mag·(A_dir+dA_dir),
+                   (B_mag+dB_mag)·B_dir).
+
+  kind="dora_mag"  the paper's deployment shape: every tenant shares the
+                   direction factors (A_dir+dA_dir, A_mag, B_dir) and
+                   differs only in the effective per-rank magnitude
+                   B_mag+dB_mag — pool_B_mag (L, r).  Bytes per tenant =
+                   4·r per target (a few hundred bytes total), so one
+                   host holds millions of personalized variants.
+
+Register/evict is LRU over slots; ``save``/``load`` round-trip the pools
+plus the tenant table through ``checkpoint/ckpt.py`` (tenant ids are
+encoded as fixed-width uint8 rows so every checkpoint leaf stays a plain
+numeric array).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
+from repro.core.peft import _target_kernels
+from repro.models.config import ArchConfig
+from repro.utils import pytree as pt
+
+Params = Any
+
+_ID_BYTES = 64
+
+_DECOMPOSED = ("A_dir", "A_mag", "B_dir", "B_mag")
+
+# pool leaves carrying a slot axis (cleared on evict); the bgmv_* leaves
+# are shared across tenants and never change per slot
+_SLOT_KEYS = ("pool_A", "pool_B", "pool_B_mag")
+
+
+def _encode_id(tenant: str) -> np.ndarray:
+    raw = tenant.encode("utf-8")
+    if not raw or len(raw) > _ID_BYTES:
+        raise ValueError(f"tenant id must be 1..{_ID_BYTES} utf-8 bytes, "
+                         f"got {tenant!r}")
+    return np.frombuffer(raw.ljust(_ID_BYTES, b"\0"), np.uint8).copy()
+
+
+def _decode_id(row: np.ndarray) -> str:
+    return bytes(np.asarray(row, np.uint8)).rstrip(b"\0").decode("utf-8")
+
+
+_get = pt.tree_get
+
+
+class AdapterStore:
+    """Pools per-tenant adapters behind integer slots for BGMV serving."""
+
+    def __init__(self, base: Params, cfg: ArchConfig, *, n_slots: int = 8,
+                 kind: str = "pairs", rank: int = 0,
+                 shared: Optional[Params] = None):
+        if kind not in ("pairs", "dora_mag"):
+            raise ValueError(f"unknown AdapterStore kind {kind!r}")
+        if kind == "dora_mag" and shared is None:
+            raise ValueError("kind='dora_mag' needs the shared decomposed "
+                             "adapter tree (direction factors)")
+        self.cfg = cfg
+        self.kind = kind
+        self.rank = rank or cfg.lora_rank
+        self.n_slots = n_slots
+        self.null_slot = n_slots                      # all-zero identity slot
+        # target prefix (".../q_proj") → (lead_dims, d_in, d_out); lead is
+        # () for tail/unstacked params, (n_sb,) under the scanned blocks
+        self.targets: dict[str, tuple[tuple, int, int]] = {}
+        for path, kern in _target_kernels(base, cfg.lora_targets):
+            *lead, d_in, d_out = kern.shape
+            if len(lead) > 1:
+                raise ValueError(f"unsupported kernel layout at {path}: "
+                                 f"{kern.shape}")
+            self.targets[path.rsplit("/", 1)[0]] = (tuple(lead), d_in, d_out)
+        if not self.targets:
+            raise ValueError(f"no lora_targets {cfg.lora_targets} in base")
+
+        L, r = n_slots + 1, self.rank
+        self._pools: dict[str, dict[str, jnp.ndarray]] = {}
+        for prefix, (lead, d_in, d_out) in self.targets.items():
+            if kind == "pairs":
+                self._pools[prefix] = {
+                    "pool_A": jnp.zeros((*lead, L, d_in, r), jnp.float32),
+                    "pool_B": jnp.zeros((*lead, L, r, d_out), jnp.float32),
+                }
+            else:
+                sh = {k: _get(shared, f"{prefix}/{k}") for k in _DECOMPOSED}
+                if any(v is None for v in sh.values()):
+                    raise ValueError(f"shared tree missing decomposed leaves "
+                                     f"under {prefix}")
+                if sh["A_dir"].shape != (*lead, d_in, r):
+                    raise ValueError(
+                        f"shared rank mismatch at {prefix}: "
+                        f"{sh['A_dir'].shape} vs {(*lead, d_in, r)}")
+                da = _get(shared, f"{prefix}/dA_dir")
+                a_dir = sh["A_dir"] + (da if da is not None else 0.0)
+                self._pools[prefix] = {
+                    "bgmv_A_dir": jnp.asarray(a_dir, jnp.float32),
+                    "bgmv_A_mag": jnp.asarray(sh["A_mag"], jnp.float32),
+                    "bgmv_B_dir": jnp.asarray(sh["B_dir"], jnp.float32),
+                    "pool_B_mag": jnp.zeros((*lead, L, r), jnp.float32),
+                }
+        if kind == "dora_mag":
+            self._shared_B_mag = {
+                p: jnp.asarray(_get(shared, f"{p}/B_mag"), jnp.float32)
+                for p in self.targets}
+
+        self._slot_of: dict[str, int] = {}            # tenant → slot
+        self._tenant_of: dict[int, str] = {}          # slot → tenant
+        self._last_used = np.zeros((n_slots,), np.int64)
+        self._counter = 0
+
+    # ------------------------------------------------------------------
+    # slot management
+    # ------------------------------------------------------------------
+
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._slot_of
+
+    @property
+    def tenants(self) -> list[str]:
+        return sorted(self._slot_of)
+
+    def slot_of(self, tenant: str) -> int:
+        """Slot for a registered tenant; bumps LRU recency."""
+        slot = self._slot_of[tenant]
+        self._touch(slot)
+        return slot
+
+    def _touch(self, slot: int) -> None:
+        self._counter += 1
+        self._last_used[slot] = self._counter
+
+    def _alloc(self, tenant: str) -> int:
+        if tenant in self._slot_of:
+            return self._slot_of[tenant]
+        for slot in range(self.n_slots):
+            if slot not in self._tenant_of:
+                return slot
+        lru = min(self._tenant_of, key=lambda s: self._last_used[s])
+        self.evict(self._tenant_of[lru])
+        return lru
+
+    def _set_slot(self, prefix: str, key: str, slot: int, val):
+        pool = self._pools[prefix]
+        lead, _, _ = self.targets[prefix]
+        idx = (slice(None), slot) if lead else (slot,)
+        pool[key] = pool[key].at[idx].set(val)
+
+    def evict(self, tenant: str) -> None:
+        slot = self._slot_of.pop(tenant)
+        del self._tenant_of[slot]
+        self._last_used[slot] = 0
+        for prefix, pool in self._pools.items():
+            for key in _SLOT_KEYS:
+                if key in pool:
+                    self._set_slot(prefix, key, slot, 0.0)
+
+    # ------------------------------------------------------------------
+    # register
+    # ------------------------------------------------------------------
+
+    def register(self, tenant: str, adapter: Params) -> int:
+        """Pack one tenant's adapter tree into a pool slot (LRU evict when
+        full).  Accepts raw-LoRA {lora_A, lora_B} or decomposed-DoRA
+        leaves for kind='pairs'; a dB_mag overlay (or full decomposed
+        tree) for kind='dora_mag'.  Raises ValueError on rank/target
+        mismatch."""
+        _encode_id(tenant)                            # validate early
+        packed = {p: self._pack_one(p, adapter) for p in self.targets}
+        extra = [p for p in pt.tree_paths(adapter)
+                 if not any(p.startswith(t + "/") for t in self.targets)]
+        if extra:
+            raise ValueError(f"adapter has leaves outside the store's "
+                             f"targets: {extra[:3]}")
+        slot = self._alloc(tenant)
+        for prefix, leaves in packed.items():
+            for key, val in leaves.items():
+                self._set_slot(prefix, key, slot, val)
+        self._slot_of[tenant] = slot
+        self._tenant_of[slot] = tenant
+        self._touch(slot)
+        return slot
+
+    def _pack_one(self, prefix: str, adapter: Params) -> dict:
+        lead, d_in, d_out = self.targets[prefix]
+        r = self.rank
+        sub = _get(adapter, prefix)
+        if sub is None:
+            raise ValueError(f"adapter missing target {prefix} "
+                             f"(store targets: {list(self.targets)})")
+        if self.kind == "dora_mag":
+            db = sub.get("dB_mag")
+            if db is None:
+                raise ValueError(f"{prefix}: kind='dora_mag' needs a dB_mag "
+                                 f"leaf per target")
+            if db.shape != (*lead, r):
+                raise ValueError(f"{prefix}: dB_mag rank mismatch "
+                                 f"{db.shape} vs {(*lead, r)}")
+            # same single addition the merged lora_delta path performs
+            return {"pool_B_mag": self._shared_B_mag[prefix] + db}
+        if "lora_A" in sub:
+            A, B = sub["lora_A"], sub["lora_B"]
+        elif "A_dir" in sub:
+            da = sub.get("dA_dir")
+            db = sub.get("dB_mag")
+            A = sub["A_mag"][..., None] * (
+                sub["A_dir"] + (da if da is not None else 0.0))
+            B = (sub["B_mag"] + (db if db is not None else 0.0)
+                 )[..., None] * sub["B_dir"]
+        else:
+            raise ValueError(f"{prefix}: no lora_A/A_dir leaves in adapter")
+        if A.shape != (*lead, d_in, r) or B.shape != (*lead, r, d_out):
+            raise ValueError(f"{prefix}: shape mismatch A{A.shape} B{B.shape} "
+                             f"vs {(*lead, d_in, r)} / {(*lead, r, d_out)}")
+        return {"pool_A": jnp.asarray(A, jnp.float32),
+                "pool_B": jnp.asarray(B, jnp.float32)}
+
+    # ------------------------------------------------------------------
+    # serving views
+    # ------------------------------------------------------------------
+
+    def overlay(self) -> Params:
+        """Pooled overlay pytree to merge into the backbone params —
+        ``layers.linear`` consults these leaves when adapter_idx is set."""
+        out: dict = {}
+        for prefix, pool in self._pools.items():
+            keys = prefix.split("/")
+            cur = out
+            for k in keys:
+                cur = cur.setdefault(k, {})
+            cur.update(pool)
+        return out
+
+    def bytes_per_tenant(self) -> int:
+        """Marginal pool bytes one registered tenant occupies."""
+        total = 0
+        for prefix, (lead, d_in, d_out) in self.targets.items():
+            n = int(np.prod(lead)) if lead else 1
+            if self.kind == "dora_mag":
+                total += 4 * self.rank * n
+            else:
+                total += 4 * self.rank * (d_in + d_out) * n
+        return total
+
+    # ------------------------------------------------------------------
+    # checkpointing
+    # ------------------------------------------------------------------
+
+    def _meta_arrays(self) -> dict:
+        ids = np.zeros((self.n_slots, _ID_BYTES), np.uint8)
+        for slot, tenant in self._tenant_of.items():
+            ids[slot] = _encode_id(tenant)
+        return {"tenant_ids": ids,
+                "last_used": self._last_used.copy(),
+                "counter": np.asarray(self._counter, np.int64)}
+
+    def state_tree(self) -> dict:
+        return {"pools": {p.replace("/", "."): dict(v)
+                          for p, v in self._pools.items()},
+                "meta": self._meta_arrays()}
+
+    def save(self, path: str, step: int = 0) -> None:
+        save_checkpoint(path, self.state_tree(), step=step)
+
+    def load(self, path: str) -> int:
+        """Restore pools + tenant table saved by ``save`` into this store
+        (must be constructed with the same base/cfg/n_slots/kind)."""
+        tree, step = restore_checkpoint(path, self.state_tree())
+        for p in self._pools:
+            self._pools[p] = {k: jnp.asarray(v) for k, v in
+                              tree["pools"][p.replace("/", ".")].items()}
+        meta = tree["meta"]
+        ids = np.asarray(meta["tenant_ids"], np.uint8)
+        self._last_used = np.asarray(meta["last_used"], np.int64).copy()
+        self._counter = int(meta["counter"])
+        self._slot_of, self._tenant_of = {}, {}
+        for slot in range(self.n_slots):
+            tenant = _decode_id(ids[slot])
+            if tenant:
+                self._slot_of[tenant] = slot
+                self._tenant_of[slot] = tenant
+        return step

@@ -1,0 +1,194 @@
+"""Multi-tenant serving engine: one mixed batch, never-merged adapters.
+
+The engine keeps a persistent batch of ``max_rows`` rows over one frozen
+backbone merged (dict-merge, zero copies) with the AdapterStore's pooled
+overlay.  Each row carries its own adapter slot (``adapter_idx``) and
+its own sequence position, so tenants mix freely in a single forward
+pass — the BGMV path in ``layers.linear`` gathers each row's adapter
+from the pool instead of folding it into the weights.
+
+Two jitted programs cover the whole serving loop, both with fixed
+shapes so nothing recompiles as traffic flows:
+
+  prefill   full-width (R, W) forward over newly admitted rows (idle
+            rows compute throwaway work, a masked cache merge keeps
+            mid-decode rows untouched) → first greedy token per row
+  decode    one ``lax.scan`` of ``decode_chunk`` single-token steps with
+            per-row cache positions; retired rows freeze (their writes
+            are idempotent) until re-admission overwrites them
+
+Between chunks the host retires finished rows and lets the batcher
+admit queued requests into the free rows — continuous batching at
+chunk granularity.  Greedy decoding, matching ``launch.serve``'s
+reference generator bit-for-bit in float32.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.serve.adapter_store import AdapterStore
+from repro.serve.batcher import ContinuousBatcher
+from repro.utils import pytree as pt
+
+Params = Any
+
+
+def _merge_cache_rows(old, new, admit_mask):
+    """Take `new` cache rows where admit_mask, else keep `old`.  Batch
+    sits at axis 1 under the scanned ``blocks`` (leading superblock axis)
+    and axis 0 in the unstacked ``tail``."""
+    def sel(axis):
+        def f(o, n):
+            shape = [1] * o.ndim
+            shape[axis] = admit_mask.shape[0]
+            return jnp.where(admit_mask.reshape(shape), n, o)
+        return f
+    return {"blocks": jax.tree.map(sel(1), old["blocks"], new["blocks"]),
+            "tail": jax.tree.map(sel(0), old["tail"], new["tail"])}
+
+
+class ServeEngine:
+    def __init__(self, base: Params, cfg: ArchConfig, store: AdapterStore, *,
+                 max_rows: int = 8, max_prompt_len: int = 32,
+                 max_len: int = 64, decode_chunk: int = 8):
+        if cfg.family not in ("dense", "moe") or cfg.n_enc_layers:
+            raise ValueError(f"ServeEngine supports attention-cache "
+                             f"families, got {cfg.family!r}")
+        if cfg.sliding_window or cfg.local_global:
+            # ring-buffer caches index slots by (position % window); the
+            # padded full-width prefill and per-row valid masks here
+            # assume linear slot == position — serving a windowed config
+            # would silently drop real prefix tokens for short prompts
+            raise ValueError("sliding-window (local) attention is not "
+                             "supported by ServeEngine yet")
+        self.base, self.cfg, self.store = base, cfg, store
+        self.max_rows = max_rows
+        self.max_len = max_len
+        self.decode_chunk = decode_chunk
+        self.batcher = ContinuousBatcher(max_rows, max_prompt_len, max_len)
+        self._tenant_of_rid: dict[int, str] = {}
+
+        def prefill_fn(params, cache, tokens, lens, slots, admit_mask):
+            batch = {"tokens": tokens, "adapter_idx": slots}
+            hidden, fresh, _ = M.forward(params, batch, cfg,
+                                         return_cache=True, cache_len=max_len)
+            rows = jnp.arange(tokens.shape[0])
+            last = hidden[rows, lens - 1]               # per-row true last
+            logits = (last @ M._head_kernel(params, cfg).astype(last.dtype)
+                      ).astype(jnp.float32)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return tok, _merge_cache_rows(cache, fresh, admit_mask)
+
+        def chunk_fn(params, cache, tok, pos, slots, active):
+            def body(carry, _):
+                tok, cache, pos = carry
+                logits, cache = M.decode_step(params, tok, cache, pos, cfg,
+                                              adapter_idx=slots)
+                ntok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                ntok = jnp.where(active, ntok, tok)     # freeze retired rows
+                pos = pos + active.astype(jnp.int32)
+                return (ntok, cache, pos), ntok
+            (tok, cache, pos), toks = jax.lax.scan(
+                body, (tok, cache, pos), length=decode_chunk)
+            return tok, cache, pos, toks                # toks (chunk, R)
+
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(1,))
+        self._chunk = jax.jit(chunk_fn, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+
+    def submit(self, tenant: str, tokens, n_new: int) -> int:
+        """Queue one request.  The tenant must be registered in the store
+        (or be the empty-adapter pseudo-tenant None)."""
+        if tenant is not None and tenant not in self.store:
+            raise KeyError(f"tenant {tenant!r} not registered in the store")
+        rid = self.batcher.submit(tenant or "", tokens, n_new)
+        self._tenant_of_rid[rid] = tenant
+        return rid
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drain the queue, returning {rid: generated tokens (n_new,)}.
+
+        Adapter slots are snapshotted per admission — register/evict
+        between ``run`` calls, not during one.
+        """
+        cfg, R = self.cfg, self.max_rows
+        params = pt.merge_trees(self.base, self.store.overlay())
+        cache = M.init_cache(cfg, R, self.max_len)
+
+        active = np.zeros((R,), bool)
+        pos = jnp.zeros((R,), jnp.int32)
+        tok = jnp.zeros((R,), jnp.int32)
+        row_slots = np.full((R,), self.store.null_slot, np.int32)
+        remaining = np.zeros((R,), np.int64)
+        rid_of_row = np.full((R,), -1, np.int64)
+        outputs: dict[int, list[int]] = {}
+        results: dict[int, np.ndarray] = {}
+
+        def retire(row):
+            rid = int(rid_of_row[row])
+            results[rid] = np.asarray(outputs.pop(rid), np.int32)
+            self._tenant_of_rid.pop(rid, None)      # don't leak rid→tenant
+            active[row] = False
+            row_slots[row] = self.store.null_slot
+
+        while self.batcher.pending or active.any():
+            free = [r for r in range(R) if not active[r]]
+            admitted = self.batcher.admit(free)
+            if admitted:
+                slot_of_rid = {
+                    req.rid: (self.store.null_slot
+                              if self._tenant_of_rid[req.rid] is None else
+                              self.store.slot_of(self._tenant_of_rid[req.rid]))
+                    for _, req in admitted}
+                tokens, lens, row_slots = self.batcher.pack_prompts(
+                    admitted, slot_of_rid, self.store.null_slot, row_slots)
+                admit_mask = np.zeros((R,), bool)
+                for row, _ in admitted:
+                    admit_mask[row] = True
+                tok0, cache = self._prefill(
+                    params, cache, jnp.asarray(tokens),
+                    jnp.asarray(lens), jnp.asarray(row_slots),
+                    jnp.asarray(admit_mask))
+                tok0_h = np.asarray(tok0)
+                tok = jnp.where(jnp.asarray(admit_mask), tok0, tok)
+                new_pos = np.asarray(pos).copy()
+                for row, req in admitted:
+                    active[row] = True
+                    new_pos[row] = req.tokens.size
+                    remaining[row] = req.n_new - 1
+                    rid_of_row[row] = req.rid
+                    outputs[req.rid] = [int(tok0_h[row])]
+                    if remaining[row] == 0:
+                        retire(row)
+                pos = jnp.asarray(new_pos)
+
+            if active.any():
+                tok, cache, pos, toks = self._chunk(
+                    params, cache, tok, pos, jnp.asarray(row_slots),
+                    jnp.asarray(active))
+                toks_h = np.asarray(toks)               # (chunk, R)
+                for row in range(R):
+                    if not active[row]:
+                        continue
+                    take = int(min(self.decode_chunk, remaining[row]))
+                    outputs[int(rid_of_row[row])].extend(
+                        toks_h[:take, row].tolist())
+                    remaining[row] -= take
+                    if remaining[row] == 0:
+                        retire(row)
+        return results
+
+    def generate(self, requests, n_new: int = 16) -> list[np.ndarray]:
+        """Convenience: ``requests`` is a list of (tenant, prompt_tokens);
+        returns generated tokens per request, in order — one mixed batch
+        across all tenants."""
+        rids = [self.submit(tenant, toks, n_new) for tenant, toks in requests]
+        results = self.run()
+        return [results[rid] for rid in rids]

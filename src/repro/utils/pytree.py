@@ -94,6 +94,16 @@ def tree_bytes(tree: Pytree) -> int:
     )
 
 
+def tree_get(tree: Mapping, path: str, default=None):
+    """Fetch the node at a "/"-joined path, or ``default`` on a miss."""
+    node = tree
+    for k in path.split("/"):
+        if not isinstance(node, Mapping) or k not in node:
+            return default
+        node = node[k]
+    return node
+
+
 def filter_tree(tree: Mapping, predicate: Callable[[str], bool]) -> dict:
     """Return a nested-dict subtree containing only leaves whose path
     satisfies ``predicate``; empty dicts are pruned."""

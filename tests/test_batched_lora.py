@@ -1,0 +1,138 @@
+"""BGMV (batched-LoRA) kernel: Pallas interpret mode vs jnp oracle, plus
+the pooled-adapter path through ``layers.linear``."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import bgmv, bgmv_mag, bgmv_mag_ref, bgmv_ref
+
+RNG = np.random.default_rng(11)
+
+
+def _pairs(B, S, d, r, o, L, dt=jnp.float32):
+    x = jnp.asarray(RNG.normal(size=(B, S, d)), dt)
+    ap = jnp.asarray(RNG.normal(size=(L, d, r)) * 0.3, jnp.float32)
+    bp = jnp.asarray(RNG.normal(size=(L, r, o)) * 0.3, jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, L, size=(B,)), jnp.int32)
+    return x, ap, bp, idx
+
+
+@pytest.mark.parametrize("B,S,d,r,o,L", [
+    (4, 16, 64, 8, 96, 5),
+    (2, 8, 128, 4, 64, 3),
+    (8, 1, 32, 16, 32, 9),       # decode-shaped: one token per row
+    (3, 24, 48, 8, 48, 1),       # single-slot pool
+])
+def test_bgmv_pallas_vs_ref(B, S, d, r, o, L):
+    x, ap, bp, idx = _pairs(B, S, d, r, o, L)
+    y_ref = bgmv(x, ap, bp, idx, scale=2.0, impl="einsum")
+    y_pal = bgmv(x, ap, bp, idx, scale=2.0, impl="interpret")
+    assert y_pal.shape == (B, S, o)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,d,r,o,L", [
+    (4, 16, 64, 8, 96, 5),
+    (6, 4, 96, 4, 32, 7),
+])
+def test_bgmv_mag_pallas_vs_ref(B, S, d, r, o, L):
+    x = jnp.asarray(RNG.normal(size=(B, S, d)), jnp.float32)
+    ad = jnp.asarray(RNG.normal(size=(d, r)) * 0.3, jnp.float32)
+    am = jnp.asarray(RNG.uniform(0.5, 1.5, size=(d,)), jnp.float32)
+    mp = jnp.asarray(RNG.normal(size=(L, r)), jnp.float32)
+    bd = jnp.asarray(RNG.normal(size=(r, o)) * 0.3, jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, L, size=(B,)), jnp.int32)
+    y_ref = bgmv_mag(x, ad, am, mp, bd, idx, scale=4.0, impl="einsum")
+    y_pal = bgmv_mag(x, ad, am, mp, bd, idx, scale=4.0, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bgmv_gathers_the_right_slot():
+    """Row i must use pool slot idx[i] — checked against per-row math."""
+    B, S, d, r, o, L = 5, 6, 32, 4, 48, 4
+    x, ap, bp, idx = _pairs(B, S, d, r, o, L)
+    y = bgmv(x, ap, bp, idx, scale=1.5, impl="einsum")
+    for i in range(B):
+        s = int(idx[i])
+        want = (x[i] @ ap[s]) @ bp[s] * 1.5
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_bgmv_decode_shape():
+    """(B, d_in) single-token rows round-trip without the S axis."""
+    B, S, d, r, o, L = 4, 1, 64, 8, 64, 3
+    x, ap, bp, idx = _pairs(B, S, d, r, o, L)
+    y2 = bgmv(x[:, 0], ap, bp, idx, impl="einsum")
+    y3 = bgmv(x, ap, bp, idx, impl="einsum")
+    assert y2.shape == (B, o)
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y3[:, 0]))
+
+
+def test_bgmv_pallas_pads_nondivisible_seq():
+    """S not a multiple of the 256 token block must pad, not crash (the
+    TPU default path hits this for any prompt > 256 tokens)."""
+    B, S, d, r, o, L = 2, 300, 32, 4, 32, 3
+    x, ap, bp, idx = _pairs(B, S, d, r, o, L)
+    y_ref = bgmv(x, ap, bp, idx, scale=1.0, impl="einsum")
+    y_pal = bgmv(x, ap, bp, idx, scale=1.0, impl="interpret")
+    assert y_pal.shape == (B, S, o)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bgmv_bad_impl_rejected():
+    x, ap, bp, idx = _pairs(2, 4, 16, 4, 16, 2)
+    with pytest.raises(ValueError):
+        bgmv(x, ap, bp, idx, impl="cuda")
+
+
+def test_linear_pooled_matches_per_row_merged():
+    """layers.linear with pooled leaves + adapter_idx must equal the
+    merged per-tenant linear, row for row, for both pool layouts."""
+    from repro.models.layers import linear
+    d, r, o, L = 48, 4, 64, 3
+    kern = jnp.asarray(RNG.normal(size=(d, o)) * 0.05, jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(L, 5, d)), jnp.float32)
+    idx = jnp.arange(L, dtype=jnp.int32)
+
+    # pairs layout
+    ap = jnp.asarray(RNG.normal(size=(L, d, r)) * 0.3, jnp.float32)
+    bp = jnp.asarray(RNG.normal(size=(L, r, o)) * 0.3, jnp.float32)
+    y = linear({"kernel": kern, "pool_A": ap, "pool_B": bp}, x,
+               lora_scale=2.0, adapter_idx=idx)
+    for i in range(L):
+        yi = linear({"kernel": kern, "lora_A": ap[i], "lora_B": bp[i]},
+                    x[i:i + 1], lora_scale=2.0)
+        np.testing.assert_array_equal(np.asarray(y[i:i + 1]), np.asarray(yi))
+
+    # decomposed magnitude layout
+    ad = jnp.asarray(RNG.normal(size=(d, r)) * 0.3, jnp.float32)
+    am = jnp.asarray(RNG.uniform(0.5, 1.5, size=(d,)), jnp.float32)
+    bd = jnp.asarray(RNG.normal(size=(r, o)) * 0.3, jnp.float32)
+    mags = jnp.asarray(RNG.normal(size=(L, r)), jnp.float32)
+    y = linear({"kernel": kern, "bgmv_A_dir": ad, "bgmv_A_mag": am,
+                "bgmv_B_dir": bd, "pool_B_mag": mags}, x,
+               lora_scale=2.0, adapter_idx=idx)
+    for i in range(L):
+        p = {"kernel": kern, "A_dir": ad, "A_mag": am, "B_dir": bd,
+             "B_mag": mags[i]}
+        yi = linear(p, x[i:i + 1], lora_scale=2.0)
+        np.testing.assert_array_equal(np.asarray(y[i:i + 1]), np.asarray(yi))
+
+
+def test_linear_pooled_inert_without_adapter_idx():
+    """Pooled leaves must not perturb linear when no adapter_idx is
+    passed (training code never sees the pools)."""
+    from repro.models.layers import linear
+    d, o = 32, 32
+    kern = jnp.asarray(RNG.normal(size=(d, o)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(2, 3, d)), jnp.float32)
+    p = {"kernel": kern,
+         "pool_A": jnp.ones((2, d, 4), jnp.float32),
+         "pool_B": jnp.ones((2, 4, o), jnp.float32)}
+    np.testing.assert_array_equal(
+        np.asarray(linear(p, x, lora_scale=2.0)),
+        np.asarray(linear({"kernel": kern}, x, lora_scale=2.0)))
