@@ -1,4 +1,4 @@
-.PHONY: test test-serve perf serve-bench
+.PHONY: test test-serve test-het test-fast perf serve-bench
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -7,6 +7,15 @@ test:
 # multi-tenant serving subsystem only (BGMV kernel, store, engine)
 test-serve:
 	bash scripts/ci.sh --serve
+
+# heterogeneous-rank subsystem (aggregation properties, mixed-rank
+# round/serving parity, het checkpoints)
+test-het:
+	bash scripts/ci.sh --het
+
+# tier-1 minus the slow property/parity sweeps
+test-fast:
+	bash scripts/ci.sh --fast
 
 # fed-round + per-arch microbenchmarks
 perf:

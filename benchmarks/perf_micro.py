@@ -115,18 +115,71 @@ def run_fed_round(log=print, n_clients: int = 4, local_steps: int = 5,
             {"arch": "fed_round/per_step", "us": us_ref}], speedup
 
 
+def run_het_round(log=print, n_clients: int = 6, local_steps: int = 5,
+                  reps: int = 6):
+    """Masked mixed-rank round vs the uniform-rank round (same engine,
+    same allocated rank).  The heterogeneous fleet rides the identical
+    jitted lax.scan with per-client rank masks multiplied into the
+    updates — adapter-sized elementwise work, so the masked round should
+    sit within ~1.2× of the uniform one (the acceptance bar for not
+    paying a second program for scenario diversity)."""
+    from repro.fed.simulate import FedHyper, FedSim
+
+    ranks = tuple([2, 4, 8] * (n_clients // 3 + 1))[:n_clients]
+    hp_uni = FedHyper(method="fedlora_opt", n_clients=n_clients,
+                      local_steps=local_steps, batch=32, seq_len=64)
+    hp_het = FedHyper(method="fedlora_opt", n_clients=n_clients,
+                      local_steps=local_steps, batch=32, seq_len=64,
+                      client_ranks=ranks)
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(
+                    rng.integers(5, FED_CFG.vocab_size,
+                                 size=(n_clients, hp_uni.batch,
+                                       hp_uni.seq_len)), jnp.int32),
+                "loss_mask": jnp.ones((n_clients, hp_uni.batch,
+                                       hp_uni.seq_len), jnp.float32)}
+               for _ in range(local_steps)]
+    key = jax.random.PRNGKey(0)
+
+    def one(sim):
+        t0 = time.perf_counter()
+        sim.local_round(batches, key)
+        jax.block_until_ready(sim.client_adapters)
+        return time.perf_counter() - t0
+
+    sim_uni, sim_het = FedSim(FED_CFG, hp_uni), FedSim(FED_CFG, hp_het)
+    one(sim_uni), one(sim_het)                  # compile + warm
+    ts_uni, ts_het = [], []
+    for _ in range(reps):                        # interleave (box noise)
+        ts_uni.append(one(sim_uni))
+        ts_het.append(one(sim_het))
+    us_uni, us_het = min(ts_uni) * 1e6, min(ts_het) * 1e6
+    ratio = us_het / us_uni
+    log(f"[perf] fed_round/uniform    {us_uni:9.0f}us  "
+        f"({n_clients} clients x {local_steps} steps, r=8)")
+    log(f"[perf] fed_round/het_masked {us_het:9.0f}us  "
+        f"ranks={ranks} ratio={ratio:.2f}x (bar: 1.2x)")
+    return [{"arch": "fed_round/uniform", "us": us_uni, "ratio": 1.0},
+            {"arch": "fed_round/het_masked", "us": us_het,
+             "ratio": ratio}], ratio
+
+
 def main():
     rows = run()
     fed_rows, speedup = run_fed_round()
+    het_rows, het_ratio = run_het_round()
     print("name,us_per_call,derived")
     for r in rows:
         print(f"perf/{r['arch']}/fwd,{r['fwd_us']:.0f},smoke_cpu")
         print(f"perf/{r['arch']}/decode,{r['dec_us']:.0f},smoke_cpu")
     for r in fed_rows:
         print(f"perf/{r['arch']},{r['us']:.0f},smoke_cpu")
-    # ratio, not a timing — kept out of the us_per_call column
+    for r in het_rows:
+        print(f"perf/{r['arch']},{r['us']:.0f},smoke_cpu")
+    # ratios, not timings — kept out of the us_per_call column
     print(f"# fed_round speedup (per_step / scan): {speedup:.2f}x")
-    return rows + fed_rows
+    print(f"# het_round overhead (het_masked / uniform): {het_ratio:.2f}x")
+    return rows + fed_rows + het_rows
 
 
 if __name__ == "__main__":

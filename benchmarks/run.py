@@ -12,7 +12,8 @@ import json
 import os
 import time
 
-ALL = ("table1", "table2", "fig1", "fig3", "perf", "serve", "roofline")
+ALL = ("table1", "table2", "fig1", "fig3", "perf", "het", "serve",
+       "roofline")
 
 
 def main():
@@ -77,6 +78,13 @@ def main():
         for r in rows:
             csv_lines.append(f"perf/{r['arch']}/fwd,{r['fwd_us']:.0f},smoke_cpu")
             csv_lines.append(f"perf/{r['arch']}/decode,{r['dec_us']:.0f},smoke_cpu")
+    if "het" in which:
+        from benchmarks import perf_micro
+        rows = cached("het", lambda: perf_micro.run_het_round()[0])
+        results["het"] = rows
+        for r in rows:
+            csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},"
+                             f"ratio_vs_uniform={r['ratio']:.2f}")
     if "serve" in which:
         from benchmarks import serve_multitenant
         rows = cached("serve", lambda: serve_multitenant.run()[0])

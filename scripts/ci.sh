@@ -1,15 +1,32 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): the full test suite with src on PYTHONPATH.
 #
-#   scripts/ci.sh              # full suite (includes the serving tests)
+#   scripts/ci.sh              # full suite (includes serving + het tests)
 #   scripts/ci.sh --serve      # fast path: multi-tenant serving subsystem
 #                              # only (BGMV kernel, AdapterStore, engine)
+#   scripts/ci.sh --het        # heterogeneous-rank subsystem: aggregation
+#                              # property suite, mixed-rank round/serving
+#                              # parity, het checkpoint coverage
+#   scripts/ci.sh --fast       # tier-1 minus the slow property/parity
+#                              # sweeps (-m 'not slow')
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-if [[ "${1:-}" == "--serve" ]]; then
-  shift
-  exec python -m pytest -x -q tests/test_batched_lora.py \
-    tests/test_adapter_store.py tests/test_serve_engine.py "$@"
-fi
+case "${1:-}" in
+  --serve)
+    shift
+    exec python -m pytest -x -q tests/test_batched_lora.py \
+      tests/test_adapter_store.py tests/test_serve_engine.py "$@"
+    ;;
+  --het)
+    shift
+    exec python -m pytest -x -q tests/test_aggregation_properties.py \
+      tests/test_het_ckpt.py tests/test_methods.py \
+      tests/test_batched_lora.py tests/test_serve_engine.py "$@"
+    ;;
+  --fast)
+    shift
+    exec python -m pytest -x -q -m "not slow" "$@"
+    ;;
+esac
 exec python -m pytest -x -q "$@"

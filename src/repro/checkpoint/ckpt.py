@@ -47,21 +47,47 @@ def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
     os.replace(tmp, path)
 
 
-def restore_checkpoint(path: str, like: Any, shardings: Any = None):
+def restore_checkpoint(path: str, like: Any, shardings: Any = None,
+                       strict: bool = True, allow_missing: str | None = None):
     """Restore into the structure of ``like``; device_put with shardings if
-    given (sharding-aware restore for multi-host meshes)."""
+    given (sharding-aware restore for multi-host meshes).
+
+    Missing-leaf policy: a leaf of ``like`` absent from the checkpoint
+    raises, unless its path matches the ``allow_missing`` regex (the
+    schema-evolution escape hatch — e.g. adapter-pool checkpoints written
+    before the slot-rank table existed restore with the caller's default
+    ranks) or ``strict=False`` waives the check for every leaf.
+
+    Integer leaves whose dtype jnp would silently narrow (int64 under the
+    default x64-disabled config) are returned as host numpy arrays so
+    counters never wrap through a save/load cycle."""
+    import re
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
     recs = payload["leaves"]
+    miss_rx = re.compile(allow_missing) if allow_missing else None
 
     def fn(p, x):
+        if p not in recs:
+            if strict and not (miss_rx and miss_rx.search(p)):
+                raise KeyError(
+                    f"checkpoint {path} has no leaf {p!r} (present: "
+                    f"{len(recs)} leaves); pass strict=False or a matching "
+                    f"allow_missing regex to keep the caller's default")
+            return np.asarray(x)
         arr = _unpack_leaf(recs[p])
         assert tuple(arr.shape) == tuple(x.shape), (p, arr.shape, x.shape)
+        return arr
+
+    def to_device(x):
+        arr = jnp.asarray(x)
+        if arr.dtype != x.dtype and np.issubdtype(x.dtype, np.integer):
+            return np.asarray(x)          # keep host precision (no x64)
         return arr
 
     host_tree = tree_map_with_path(fn, like)
     if shardings is not None:
         host_tree = jax.tree.map(jax.device_put, host_tree, shardings)
     else:
-        host_tree = jax.tree.map(jnp.asarray, host_tree)
+        host_tree = jax.tree.map(to_device, host_tree)
     return host_tree, payload["step"]

@@ -9,7 +9,10 @@ exploits is therefore carried by the *parameterization*, and both
 aggregators share one collective (an all-reduce over the client/data axis
 on TPU).
 
-``aggregate`` returns (aggregated_tree_without_client_axis, comm_bytes).
+Every aggregator takes the client-stacked tree (plus optional weights,
+plus ``ranks`` for the rank-aware family) and returns the aggregated
+tree without the client axis; communication accounting lives separately
+in ``comm_bytes_per_round``.
 """
 from __future__ import annotations
 
@@ -74,24 +77,165 @@ def trimmed_fedavg(client_adapters: Params, weights=None, *,
     return jax.tree.map(tmean, client_adapters)
 
 
+# ---------------------------------------------------------------------------
+# rank-aware aggregation family (heterogeneous-rank fleets)
+# ---------------------------------------------------------------------------
+#
+# Mixed-rank client adapters live zero-padded at r_max (see
+# peft.client_rank_masks).  Three aggregation policies over that layout:
+#
+#   zeropad_fedavg      the naive baseline: a plain weighted mean IS
+#                       zero-pad averaging on padded trees (Koo et al.
+#                       show it dilutes high-rank rows);
+#   replication_fedavg  rows above a client's rank are treated as absent
+#                       rather than zero — each rank row averages only
+#                       over the clients that actually own it (the
+#                       replication-style re-weighting of Koo et al.);
+#   exact_fedavg        reconstructs Σ wᵢ·AᵢBᵢ exactly by stacking the
+#                       weighted pairs along the rank axis, then
+#                       re-factors to the server rank via truncated SVD
+#                       (Nguyen et al.: averaging A and B separately is
+#                       NOT the mean of the products).
+
+
+def zeropad_fedavg(client_adapters: Params, weights=None, *,
+                   ranks=None) -> Params:
+    """Naive mixed-rank baseline.  ``ranks`` is accepted for the family
+    signature but unused — the zero padding above each client's rank does
+    the zero-pad averaging by construction."""
+    del ranks
+    return fedavg(client_adapters, weights)
+
+
+def _client_weights(x0, weights):
+    C = x0.shape[0]
+    if weights is None:
+        return jnp.full((C,), 1.0 / C, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    return w / jnp.sum(w)
+
+
+def replication_fedavg(client_adapters: Params, weights=None, *,
+                       ranks) -> Params:
+    """Coverage-weighted mean over the client axis: rank row j of a
+    rank-axis leaf averages only the clients with rank > j, so low-rank
+    clients never dilute the rows they don't own.  On a uniform-rank
+    fleet this reduces exactly to ``fedavg``.  Coverage masks come from
+    ``peft.client_rank_masks`` — the one source of truth for which axis
+    of each leaf indexes rank (non-rank leaves get all-ones covers, i.e.
+    the plain weighted mean)."""
+    from repro.core import peft
+    leaves = jax.tree.leaves(client_adapters)
+    w = _client_weights(leaves[0], weights)
+    template = jax.tree.map(lambda x: x[0], client_adapters)
+    covers = peft.client_rank_masks(template, ranks)   # (C, 1.., r, ..1)
+
+    def one(x, cover):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        num = jnp.sum(x * cover * wb, axis=0)
+        den = jnp.sum(cover * wb, axis=0)
+        return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+    return jax.tree.map(one, client_adapters, covers)
+
+
+def _refactor_pair(a_cat, b_cat, r_out: int):
+    """Best rank-``r_out`` factorization of ``a_cat @ b_cat`` via QR-reduced
+    SVD.  a_cat (..., d_in, K), b_cat (..., K, d_out) with K = Σ rᵢ; exact
+    whenever rank(a_cat @ b_cat) ≤ r_out."""
+    qa, ra = jnp.linalg.qr(a_cat)                          # (.., d_in, k)(k, K)
+    qb, rb = jnp.linalg.qr(jnp.swapaxes(b_cat, -1, -2))    # (.., d_out, k)
+    m = ra @ jnp.swapaxes(rb, -1, -2)                      # (.., k, k)
+    u, s, vt = jnp.linalg.svd(m, full_matrices=False)
+    k = s.shape[-1]
+    take = min(r_out, k)
+    root = jnp.sqrt(s[..., :take])
+    a_new = (qa @ u[..., :, :take]) * root[..., None, :]
+    b_new = root[..., :, None] * (vt[..., :take, :] @ jnp.swapaxes(qb, -1, -2))
+    if take < r_out:                                       # pad back to r_out
+        pad_a = [(0, 0)] * (a_new.ndim - 1) + [(0, r_out - take)]
+        pad_b = ([(0, 0)] * (b_new.ndim - 2)
+                 + [(0, r_out - take), (0, 0)])
+        a_new, b_new = jnp.pad(a_new, pad_a), jnp.pad(b_new, pad_b)
+    return a_new, b_new
+
+
+def exact_fedavg(client_adapters: Params, weights=None, *, ranks=None,
+                 r_out: int | None = None) -> Params:
+    """Exact product aggregation for raw-LoRA pairs.
+
+    The weighted sum of client deltas Σ wᵢ·AᵢBᵢ equals the product of the
+    client-concatenated factors [w₁A₁ | w₂A₂ | ...] @ [B₁; B₂; ...] — no
+    approximation.  That stacked pair (rank Σ rᵢ) is then re-factored to
+    ``r_out`` (default: the allocated rank, r_max) by truncated SVD, so
+    the aggregated tree keeps the fleet's leaf shapes.  The result is the
+    best rank-``r_out`` approximation of the exact mean — and IS the
+    exact mean whenever rank(Σ wᵢ·AᵢBᵢ) ≤ r_out.  ``ranks`` is accepted
+    for the family signature; padded columns above a client's rank are
+    zero and only add zero singular values."""
+    del ranks
+    leaves = jax.tree.leaves(client_adapters)
+    w = _client_weights(leaves[0], weights)
+    paths = set(pt.tree_paths(client_adapters))
+    a_paths = sorted(p for p in paths if p.endswith("lora_A"))
+    if not a_paths or any(p.rsplit("/", 1)[0] + "/lora_B" not in paths
+                          for p in a_paths):
+        raise ValueError("exact_fedavg needs raw-LoRA {lora_A, lora_B} "
+                         "pairs (decomposed/dual trees have no exact "
+                         "product aggregation)")
+
+    out = fedavg(client_adapters, w)              # non-pair leaves: mean
+    for pa in a_paths:
+        prefix = pa.rsplit("/", 1)[0]
+        A = pt.tree_get(client_adapters, pa)             # (C, *lead, d_in, r)
+        B = pt.tree_get(client_adapters, f"{prefix}/lora_B")
+        C = A.shape[0]
+        r = r_out or A.shape[-1]
+        wa = w.reshape((C,) + (1,) * (A.ndim - 1))
+        Aw = A * wa
+        # client-major concat along the rank axis via one reshape
+        a_cat = jnp.moveaxis(Aw, 0, -2).reshape(
+            *A.shape[1:-1], C * A.shape[-1])             # (*lead, d_in, C·r)
+        b_cat = jnp.moveaxis(B, 0, -3).reshape(
+            *B.shape[1:-2], C * B.shape[-2], B.shape[-1])  # (*lead, C·r, d_out)
+        a_new, b_new = _refactor_pair(a_cat, b_cat, r)
+        pt.set_leaf(out, pa, a_new.astype(A.dtype))
+        pt.set_leaf(out, f"{prefix}/lora_B", b_new.astype(B.dtype))
+    return out
+
+
 def broadcast_to_clients(agg: Params, n_clients: int) -> Params:
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), agg)
 
 
 def comm_bytes_per_round(adapters_one_client: Params,
-                         exclude_rx: str | None = None) -> int:
+                         exclude_rx: str | None = None,
+                         rank: int | None = None) -> int:
     """Uplink+downlink bytes for one client-round (adapter leaves only —
     the frozen backbone never moves; the PEFT communication story).
     Leaves matching ``exclude_rx`` stay client-local (a method's
     keep-local set, e.g. dB_mag or FedALT's individual pair) and are
-    never transmitted, so they don't count."""
+    never transmitted, so they don't count.  ``rank``: the client's own
+    rank in a heterogeneous fleet — rank-axis leaves are billed at the
+    client's rank, not the allocated r_max (padding rows are zero and
+    never leave the device)."""
     import re
+    from repro.core.peft import rank_axis
     tree = adapters_one_client
     if exclude_rx is not None:
         rx = re.compile(exclude_rx)
         tree = pt.filter_tree(tree, lambda p: not rx.search(p))
-    return 2 * pt.tree_bytes(tree)
+    if rank is None:
+        return 2 * pt.tree_bytes(tree)
+    total = 0
+    for path, leaf in zip(pt.tree_paths(tree), jax.tree.leaves(tree)):
+        shape = list(leaf.shape)
+        ax = rank_axis(path)
+        if ax is not None:
+            shape[leaf.ndim + ax] = min(rank, shape[leaf.ndim + ax])
+        total += int(np.prod(shape)) * leaf.dtype.itemsize
+    return 2 * total
 
 
 def fedavg_excluding(client_adapters: Params, weights=None, *,

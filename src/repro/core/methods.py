@@ -23,6 +23,13 @@ Built-ins:
                 never aggregated (FedALT-style)
   lora_trimmed  raw LoRA + coordinate-wise trimmed-mean aggregation
                 (robust to client outliers, cf. Koo et al.)
+
+Heterogeneous-rank family (mixed-rank fleets; adapters allocated at
+r_max with per-client rank masks — see docs/heterogeneous_ranks.md):
+
+  lora_zeropad      naive zero-pad averaging (degradation baseline)
+  lora_replication  coverage-weighted averaging (replication-style)
+  lora_exact        exact Σw·AB via stacked factors + truncated SVD
 """
 from __future__ import annotations
 
@@ -59,6 +66,13 @@ class FedMethod:
     # True → the method runs the paper's staged pipeline (aggregate →
     # global stage on the server mixture → final per-client stage)
     pipeline: bool = False
+    # True → the adapter factory accepts rank= and its leaves follow
+    # peft.rank_axis, so the engine can run a mixed-rank fleet (adapters
+    # allocated at r_max, per-client rank masks on every update)
+    het_ranks: bool = False
+    # True → ``aggregate`` accepts a ranks=(C,) kwarg (the rank-aware
+    # family); the engine partials in the fleet's ranks
+    rank_aware: bool = False
     description: str = ""
 
     def stage_global_mask(self, adapters: Params) -> Params:
@@ -98,6 +112,7 @@ def available_methods() -> list[str]:
 
 register(FedMethod(
     name="fedlora_opt",
+    het_ranks=True,
     make_adapter=partial(peft.add_lora, decomposed=True),
     train_mask=peft.mask_stage_local_pretrain,
     global_mask=peft.mask_stage_global,
@@ -111,6 +126,7 @@ register(FedMethod(
 
 register(FedMethod(
     name="lora",
+    het_ranks=True,
     make_adapter=partial(peft.add_lora, decomposed=False),
     train_mask=peft.mask_all,
     description="raw LoRA + FedAvg (FedIT-style baseline)",
@@ -118,6 +134,7 @@ register(FedMethod(
 
 register(FedMethod(
     name="ffa_lora",
+    het_ranks=True,
     make_adapter=partial(peft.add_lora, decomposed=False),
     train_mask=peft.mask_ffa,
     description="LoRA with A frozen (FFA-LoRA, Sun et al.)",
@@ -125,6 +142,7 @@ register(FedMethod(
 
 register(FedMethod(
     name="fedprox",
+    het_ranks=True,
     make_adapter=partial(peft.add_lora, decomposed=False),
     train_mask=peft.mask_all,
     prox=True,
@@ -147,6 +165,7 @@ register(FedMethod(
 
 register(FedMethod(
     name="fedalt",
+    het_ranks=True,
     make_adapter=peft.add_dual_lora,
     train_mask=peft.mask_all,
     # the individual pair never reaches the server: zeroed in the
@@ -161,9 +180,45 @@ register(FedMethod(
 
 register(FedMethod(
     name="lora_trimmed",
+    het_ranks=True,
     make_adapter=partial(peft.add_lora, decomposed=False),
     train_mask=peft.mask_all,
     aggregate=partial(agg.trimmed_fedavg, trim_ratio=0.25),
     description=("LoRA + coordinate-wise trimmed-mean aggregation — "
                  "robust to adversarial/outlier clients (cf. Koo et al.)"),
+))
+
+register(FedMethod(
+    name="lora_zeropad",
+    het_ranks=True,
+    rank_aware=True,
+    make_adapter=partial(peft.add_lora, decomposed=False),
+    train_mask=peft.mask_all,
+    aggregate=agg.zeropad_fedavg,
+    description=("raw LoRA, mixed-rank fleet, naive zero-pad averaging "
+                 "(the degradation baseline of Koo et al.)"),
+))
+
+register(FedMethod(
+    name="lora_replication",
+    het_ranks=True,
+    rank_aware=True,
+    make_adapter=partial(peft.add_lora, decomposed=False),
+    train_mask=peft.mask_all,
+    aggregate=agg.replication_fedavg,
+    description=("raw LoRA, mixed-rank fleet, coverage-weighted "
+                 "(replication-style) averaging — rank row j averages "
+                 "only the clients that own it (cf. Koo et al.)"),
+))
+
+register(FedMethod(
+    name="lora_exact",
+    het_ranks=True,
+    rank_aware=True,
+    make_adapter=partial(peft.add_lora, decomposed=False),
+    train_mask=peft.mask_all,
+    aggregate=agg.exact_fedavg,
+    description=("raw LoRA, mixed-rank fleet, exact Σw·AB aggregation "
+                 "via stacked factors + truncated-SVD re-factorization "
+                 "(cf. Nguyen et al.)"),
 ))

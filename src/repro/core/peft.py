@@ -45,12 +45,7 @@ def _target_kernels(base: Params, targets) -> list[tuple[str, Any]]:
     return out
 
 
-def _set_path(tree: dict, path: str, leaf) -> None:
-    keys = path.split("/")
-    cur = tree
-    for k in keys[:-1]:
-        cur = cur.setdefault(k, {})
-    cur[keys[-1]] = leaf
+_set_path = pt.set_leaf
 
 
 def add_lora(base: Params, cfg: ArchConfig, rng, *, decomposed: bool = False,
@@ -145,6 +140,62 @@ def add_adapter_tuning(base: Params, cfg: ArchConfig, rng,
         _set_path(overlay, f"{m.group(1)}/adapter_down", down)
         _set_path(overlay, f"{m.group(1)}/adapter_up", up)
     return overlay
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous ranks (per-client / per-tenant adapter capacity)
+# ---------------------------------------------------------------------------
+#
+# Mixed-rank fleets keep every adapter tree allocated at r_max so the
+# client axis stays stackable (one vmapped/scanned program for the whole
+# fleet); a per-leaf *rank mask* zeroes the rows/columns above each
+# client's own rank.  The table below is the single source of truth for
+# which axis of each adapter leaf is the rank axis.
+
+_RANK_AXIS = {
+    "lora_A": -1, "local_A": -1, "A_dir": -1, "dA_dir": -1,
+    "lora_B": -2, "local_B": -2, "B_dir": -2,
+    "B_mag": -1, "dB_mag": -1,
+}
+
+
+def rank_axis(path: str) -> int | None:
+    """Which axis of the adapter leaf at ``path`` indexes LoRA rank
+    (negative, relative to the per-client leaf), or None for leaves with
+    no rank dimension (A_mag, prompt embeddings, bottleneck adapters)."""
+    return _RANK_AXIS.get(path.rsplit("/", 1)[-1])
+
+
+def client_rank_masks(adapters: Params, ranks) -> Params:
+    """Per-client 0/1 masks over the rank axis of every adapter leaf.
+
+    ``ranks`` is a (C,) int array of per-client ranks; the returned pytree
+    matches ``broadcast_to_clients(adapters, C)`` under broadcasting: each
+    leaf has shape (C, 1, ..., r, ..., 1) with 1.0 where the rank index is
+    below the client's rank and 0.0 above.  Multiplying client-stacked
+    adapters (or their updates) by these masks is what lets a mixed-rank
+    fleet ride one jitted ``lax.scan``."""
+    ranks = jnp.asarray(ranks, jnp.int32)
+    C = ranks.shape[0]
+
+    def one(path, x):
+        ax = rank_axis(path)
+        if ax is None:
+            return jnp.ones((C,) + (1,) * x.ndim, jnp.float32)
+        ax_abs = x.ndim + ax                       # absolute, per-client leaf
+        r = x.shape[ax_abs]
+        shape = [1] * (x.ndim + 1)
+        shape[ax_abs + 1] = r
+        keep = (jnp.arange(r).reshape(shape)
+                < ranks.reshape((C,) + (1,) * x.ndim))
+        return keep.astype(jnp.float32)
+
+    return pt.tree_map_with_path(one, adapters)
+
+
+def apply_rank_masks(client_adapters: Params, masks: Params) -> Params:
+    """Zero the rows above each client's rank (masks broadcast per leaf)."""
+    return jax.tree.map(jnp.multiply, client_adapters, masks)
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
+from repro.core import peft
 from repro.core.methods import get_method
 from repro.models import model as M
 from repro.models.config import ArchConfig
@@ -58,6 +59,18 @@ class FedHyper:
     pipeline: bool = True          # global→local staging (Fig. 3 ablation)
     clip: float = 1.0
     seed: int = 0
+    # Heterogeneous fleet: one LoRA rank per client (len == n_clients).
+    # None → every client at cfg.lora_rank.  Mixed-rank fleets allocate
+    # adapters at r_server = server_rank or max(client_ranks) and mask
+    # every update above each client's own rank, so the whole fleet still
+    # runs the single jitted lax.scan round (the client axis stays
+    # stackable).
+    client_ranks: tuple = None
+    # Server-side adapter rank for a heterogeneous fleet (0 → the fleet's
+    # max).  Raising it widens the allocation so exact_fedavg's truncated
+    # re-factorization can hold more of Σ wᵢ·AᵢBᵢ — at r_server ≥ Σ rᵢ
+    # it is exact.  Ignored on uniform fleets.
+    server_rank: int = 0
 
 
 class FedSim:
@@ -75,8 +88,37 @@ class FedSim:
         r_base, r_ad = jax.random.split(rng)
         self.base = M.init_params(r_base, cfg) if base is None else base
 
-        ad = self.method.make_adapter(self.base, cfg, r_ad)
+        if hp.client_ranks is not None:
+            if not self.method.het_ranks:
+                raise ValueError(
+                    f"method {self.method.name!r} has no rank dimension "
+                    "(het_ranks=False); client_ranks requires a "
+                    "LoRA-family method")
+            if len(hp.client_ranks) != hp.n_clients:
+                raise ValueError(
+                    f"client_ranks has {len(hp.client_ranks)} entries for "
+                    f"{hp.n_clients} clients")
+            if min(hp.client_ranks) < 1:
+                raise ValueError(f"client ranks must be >= 1, got "
+                                 f"{hp.client_ranks}")
+            self.alloc_rank = int(hp.server_rank or max(hp.client_ranks))
+            if self.alloc_rank < max(hp.client_ranks):
+                raise ValueError(
+                    f"server_rank {hp.server_rank} is below the fleet max "
+                    f"{max(hp.client_ranks)}")
+            self._client_ranks = jnp.asarray(hp.client_ranks, jnp.int32)
+            ad = self.method.make_adapter(self.base, cfg, r_ad,
+                                          rank=self.alloc_rank)
+        else:
+            self.alloc_rank = cfg.lora_rank
+            self._client_ranks = None
+            ad = self.method.make_adapter(self.base, cfg, r_ad)
         self.adapter_template = ad
+        # per-client rank masks (None on uniform fleets: the masked and
+        # unmasked programs are then byte-identical, so the uniform path
+        # pays nothing)
+        self.rank_mask = (peft.client_rank_masks(ad, self._client_ranks)
+                          if self._client_ranks is not None else None)
         self.train_mask = self.method.train_mask(ad)
         self.global_mask = self.method.stage_global_mask(ad)
         self.local_mask = self.method.stage_local_mask(ad)
@@ -87,6 +129,9 @@ class FedSim:
 
         C = hp.n_clients
         self.client_adapters = agg.broadcast_to_clients(ad, C)
+        if self.rank_mask is not None:
+            self.client_adapters = peft.apply_rank_masks(
+                self.client_adapters, self.rank_mask)
         self._build_steps()
         self.opt_state = jax.vmap(self.opt.init)(self.client_adapters)
         self._step = jnp.zeros((), jnp.int32)
@@ -120,22 +165,29 @@ class FedSim:
                                     hp.clip)
 
         def one_client_step(base, adapters, opt_state, batch, rng, step,
-                            prox_ref, *, opt, lam, prox_mu):
+                            prox_ref, rmask, *, opt, lam, prox_mu):
             (loss, met), g = jax.value_and_grad(
                 self._loss, argnums=1, has_aux=True)(
                 base, adapters, batch, rng, lam, prox_ref, prox_mu)
             upd, opt_state = opt.update(g, opt_state, adapters, step)
+            if rmask is not None:
+                # heterogeneous fleet: zero the update rows above this
+                # client's rank (adapters are allocated at r_max)
+                upd = jax.tree.map(jnp.multiply, upd, rmask)
             return apply_updates(adapters, upd), opt_state, met
 
         prox_mu = hp.prox_mu if method.prox else 0.0
         lam_pers = hp.lam if method.personal_reg is not None else 0.0
+        mask_ax = 0 if self.rank_mask is not None else None
         step_train = partial(one_client_step, opt=self.opt, lam=0.0,
                              prox_mu=prox_mu)
-        vstep = jax.vmap(step_train, in_axes=(None, 0, 0, 0, 0, 0, 0))
+        vstep = jax.vmap(step_train, in_axes=(None, 0, 0, 0, 0, 0, 0,
+                                              mask_ax))
         self._vstep = jax.jit(vstep)          # per-step oracle / perf baseline
         step_pers = partial(one_client_step, opt=self.opt_local, lam=lam_pers,
                             prox_mu=0.0)
-        vstep_pers = jax.vmap(step_pers, in_axes=(None, 0, 0, 0, 0, 0, 0))
+        vstep_pers = jax.vmap(step_pers, in_axes=(None, 0, 0, 0, 0, 0, 0,
+                                                  mask_ax))
         step_glob = partial(one_client_step, opt=self.opt_global, lam=0.0,
                             prox_mu=0.0)
 
@@ -152,7 +204,7 @@ class FedSim:
 
         def make_scan(vstep_fn, fold_offset, with_prox):
             def scan_fn(base, adapters, opt_state, step0, batches, rng,
-                        *prox):
+                        rmask, *prox):
                 def body(carry, b):
                     ad, ost, step = carry
                     rngs = jax.random.split(
@@ -160,7 +212,7 @@ class FedSim:
                     steps = jnp.full((C,), step, jnp.int32)
                     ref = prox[0] if with_prox else ad
                     ad, ost, met = vstep_fn(base, ad, ost, b, rngs, steps,
-                                            ref)
+                                            ref, rmask)
                     return (ad, ost, step + 1), met
                 (ad, ost, step), mets = jax.lax.scan(
                     body, (adapters, opt_state, step0), batches,
@@ -177,11 +229,12 @@ class FedSim:
                                   donate_argnums=(2,))
 
         def global_fn(base, aggregated, opt_state, batches, rng):
+            # the server model trains at the full allocated rank — no mask
             def body(carry, b):
                 ad, ost, step = carry
                 ad, ost, _ = step_glob(base, ad, ost, b,
                                        jax.random.fold_in(rng, step), step,
-                                       ad)
+                                       ad, None)
                 return (ad, ost, step + 1), None
             (ad, ost, _), _ = jax.lax.scan(
                 body, (aggregated, opt_state, jnp.zeros((), jnp.int32)),
@@ -195,7 +248,14 @@ class FedSim:
             return met
         self._eval = jax.jit(eval_fn)
         self._veval = jax.jit(jax.vmap(eval_fn, in_axes=(None, 0, 0)))
-        self._agg = jax.jit(method.aggregate)
+        agg_fn = method.aggregate
+        if method.rank_aware:
+            # rank-aware aggregators take the fleet's ranks; a uniform
+            # fleet is the degenerate all-r_max case
+            ranks = (self._client_ranks if self._client_ranks is not None
+                     else jnp.full((C,), self.alloc_rank, jnp.int32))
+            agg_fn = partial(agg_fn, ranks=ranks)
+        self._agg = jax.jit(agg_fn)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -208,7 +268,7 @@ class FedSim:
         (C, B, S) dicts."""
         stacked = self._stack_batches(batches)
         args = (self.base, self.client_adapters, self.opt_state, self._step,
-                stacked, rng)
+                stacked, rng, self.rank_mask)
         if self.method.prox:
             args = args + (self._round_ref,)
         self.client_adapters, self.opt_state, self._step, mets = \
@@ -228,7 +288,7 @@ class FedSim:
             ref = self._round_ref if self.method.prox else self.client_adapters
             self.client_adapters, self.opt_state, mets = self._vstep(
                 self.base, self.client_adapters, self.opt_state, b, rngs,
-                steps, ref)
+                steps, ref, self.rank_mask)
             self._step = self._step + 1
         return {k: np.asarray(v) for k, v in (mets or {}).items()}
 
@@ -237,8 +297,15 @@ class FedSim:
         baselines) + comm accounting; broadcasts the aggregate back with
         keep-local leaves (e.g. dB_mag) preserved per client."""
         aggregated = self._agg(self.client_adapters)
-        self.comm_bytes += self.hp.n_clients * agg.comm_bytes_per_round(
-            self.adapter_template, exclude_rx=self.method.keep_local)
+        if self._client_ranks is None:
+            self.comm_bytes += self.hp.n_clients * agg.comm_bytes_per_round(
+                self.adapter_template, exclude_rx=self.method.keep_local)
+        else:
+            # heterogeneous fleet: each client moves only its own rank rows
+            for r in self.hp.client_ranks:
+                self.comm_bytes += agg.comm_bytes_per_round(
+                    self.adapter_template, exclude_rx=self.method.keep_local,
+                    rank=int(r))
         bcast = self._rebroadcast_keep_personal(aggregated)
         self.client_adapters = bcast
         if self.method.prox:
@@ -255,13 +322,19 @@ class FedSim:
     def _rebroadcast_keep_personal(self, aggregated):
         """Broadcast the aggregate to every client; leaves matching the
         method's keep-local regex retain each client's own value (the one
-        place this logic lives — aggregate() and global_stage() share it)."""
+        place this logic lives — aggregate() and global_stage() share it).
+        On a heterogeneous fleet each client then re-masks the broadcast
+        down to its own rank: a rank-r client receives the first r rank
+        rows of the server model (for ``lora_exact`` those are the top-r
+        singular directions of the exact aggregate)."""
         bcast = agg.broadcast_to_clients(aggregated, self.hp.n_clients)
-        if self._keep_rx is None:
-            return bcast
-        return pt.tree_map_with_path(
-            lambda p, leaf: self._leaf(self.client_adapters, p)
-            if self._keep_rx.search(p) else leaf, bcast)
+        if self._keep_rx is not None:
+            bcast = pt.tree_map_with_path(
+                lambda p, leaf: self._leaf(self.client_adapters, p)
+                if self._keep_rx.search(p) else leaf, bcast)
+        if self.rank_mask is not None:
+            bcast = peft.apply_rank_masks(bcast, self.rank_mask)
+        return bcast
 
     def global_stage(self, aggregated: Params, server_batches: list[dict],
                      rng) -> Params:
@@ -280,7 +353,54 @@ class FedSim:
         opt_state = jax.vmap(self.opt_local.init)(self.client_adapters)
         self.client_adapters, _, _, _ = self._pers_scan(
             self.base, self.client_adapters, opt_state,
-            jnp.zeros((), jnp.int32), self._stack_batches(batches), rng)
+            jnp.zeros((), jnp.int32), self._stack_batches(batches), rng,
+            self.rank_mask)
+
+    # ------------------------------------------------------------------
+    # checkpointing
+    # ------------------------------------------------------------------
+
+    def state_tree(self) -> dict:
+        """Round-resumable simulation state.  ``client_ranks`` is always
+        recorded (uniform fleets store the flat rank) so a heterogeneous
+        checkpoint can never silently load into a mismatched fleet."""
+        ranks = (self._client_ranks if self._client_ranks is not None
+                 else jnp.full((self.hp.n_clients,), self.alloc_rank,
+                               jnp.int32))
+        tree = {"client_adapters": self.client_adapters,
+                "opt_state": self.opt_state,
+                "step": self._step,
+                "comm_bytes": np.asarray(self.comm_bytes, np.int64),
+                "client_ranks": ranks}
+        if self.method.prox:
+            # the proximal anchor is its own state: mid-cycle (after a
+            # round, before aggregate) it is NOT the current adapters
+            tree["round_ref"] = self._round_ref
+        return tree
+
+    def save(self, path: str, round_idx: int = 0) -> None:
+        from repro.checkpoint.ckpt import save_checkpoint
+        save_checkpoint(path, self.state_tree(), step=round_idx)
+
+    def load(self, path: str) -> int:
+        """Restore state saved by ``save`` into this sim (same cfg/hp).
+        Raises if the checkpoint's per-client ranks don't match this
+        fleet's — rank layout is state, not a detail."""
+        from repro.checkpoint.ckpt import restore_checkpoint
+        tree, round_idx = restore_checkpoint(path, self.state_tree())
+        want = np.asarray(self.state_tree()["client_ranks"])
+        got = np.asarray(tree["client_ranks"])
+        if not np.array_equal(want, got):
+            raise ValueError(
+                f"checkpoint fleet ranks {got.tolist()} do not match this "
+                f"sim's {want.tolist()}")
+        self.client_adapters = tree["client_adapters"]
+        self.opt_state = tree["opt_state"]
+        self._step = jnp.asarray(tree["step"])
+        self.comm_bytes = int(tree["comm_bytes"])
+        if self.method.prox:
+            self._round_ref = tree["round_ref"]
+        return round_idx
 
     # ------------------------------------------------------------------
     def eval_global(self, aggregated: Params, batches: list[dict]) -> dict:

@@ -25,6 +25,13 @@ the per-rank magnitude vector (ΔB_M — a few hundred bytes per tenant):
 Here only the tiny (1, r) magnitude block is gathered per row; the
 shared factors load once and stay VMEM-resident across the whole grid.
 
+Heterogeneous pools: slots may hold adapters of different ranks, padded
+to the pool's r_max.  A second scalar-prefetch vector carries each row's
+rank and the kernel masks intermediate columns ≥ that rank before the
+up-projection — so a freed slot re-registered at a lower rank can never
+leak its previous occupant's high-rank rows, and the masked result is
+bit-identical to running the tenant's own-rank adapter unpadded.
+
 VMEM working set (bs=256, d=1024, r=16, f32): x(256·1024) + a(1024·16)
 + b(16·1024) + out(256·1024) ≈ 2.2 MB « 16 MB v5e VMEM.
 """
@@ -36,6 +43,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _imap(block):
+    """Adapt a BlockSpec index map to absorb trailing scalar-prefetch
+    refs: index maps see every prefetch operand, and the ranked kernels
+    add a per-row rank vector that block selection never consults."""
+    def f(i, s, idx_ref, *rest):
+        return block(i, s, idx_ref)
+    return f
 
 
 def _bgmv_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref, *, scale: float):
@@ -50,35 +66,71 @@ def _bgmv_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref, *, scale: float):
     o_ref[0] = (y * scale).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "bs", "interpret"))
-def bgmv_matmul(x, a_pool, b_pool, idx, *, scale: float = 1.0,
+def _bgmv_ranked_kernel(idx_ref, rank_ref, x_ref, a_ref, b_ref, o_ref, *,
+                        scale: float):
+    """Mixed-rank variant: a second scalar-prefetch vector carries this
+    row's adapter rank; intermediate columns at or above it are masked
+    before the up-projection, so a slot padded to r_max — or holding
+    stale rows from a previous higher-rank occupant — contributes exactly
+    its own rank."""
+    del idx_ref
+    i = pl.program_id(0)
+    x = x_ref[0]                                          # (bs, d_in)
+    h = jax.lax.dot_general(
+        x, a_ref[0].astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bs, r_max)
+    keep = (jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+            < rank_ref[i])
+    h = jnp.where(keep, h, 0.0)
+    y = jax.lax.dot_general(
+        h.astype(x.dtype), b_ref[0].astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bs, d_out)
+    o_ref[0] = (y * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "bs", "interpret"))
+def bgmv_matmul(x, a_pool, b_pool, idx, ranks=None, *, scale: float = 1.0,
                 bs: int = 256, interpret: bool = False):
     """x (B, S, d_in), pools (n_slots, d_in, r) / (n_slots, r, d_out),
-    idx (B,) int32 → (B, S, d_out) per-row adapter deltas."""
+    idx (B,) int32 → (B, S, d_out) per-row adapter deltas.  ``ranks``
+    (n_slots,) int32: per-slot adapter ranks for heterogeneous pools —
+    rank rows ≥ ranks[idx[i]] are masked out of row i."""
     B, S, d_in = x.shape
     r = a_pool.shape[-1]
     d_out = b_pool.shape[-1]
     bs = min(bs, S)
     assert S % bs == 0, (S, bs)
     grid = (B, S // bs)
+    ranked = ranks is not None
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if ranked else 1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bs, d_in), lambda i, s, idx_ref: (i, s, 0)),
+            pl.BlockSpec((1, bs, d_in),
+                         _imap(lambda i, s, idx_ref: (i, s, 0))),
             pl.BlockSpec((1, d_in, r),
-                         lambda i, s, idx_ref: (idx_ref[i], 0, 0)),
+                         _imap(lambda i, s, idx_ref: (idx_ref[i], 0, 0))),
             pl.BlockSpec((1, r, d_out),
-                         lambda i, s, idx_ref: (idx_ref[i], 0, 0)),
+                         _imap(lambda i, s, idx_ref: (idx_ref[i], 0, 0))),
         ],
-        out_specs=pl.BlockSpec((1, bs, d_out), lambda i, s, idx_ref: (i, s, 0)),
+        out_specs=pl.BlockSpec((1, bs, d_out),
+                               _imap(lambda i, s, idx_ref: (i, s, 0))),
     )
+    kernel = (functools.partial(_bgmv_ranked_kernel, scale=scale) if ranked
+              else functools.partial(_bgmv_kernel, scale=scale))
+    args = (idx.astype(jnp.int32),)
+    if ranked:
+        # gather per-row ranks host-side of the grid: rank_ref[i] in the
+        # kernel is then a plain scalar-prefetch load
+        args = args + (jnp.take(jnp.asarray(ranks, jnp.int32),
+                                idx.astype(jnp.int32), axis=0),)
     return pl.pallas_call(
-        functools.partial(_bgmv_kernel, scale=scale),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, S, d_out), x.dtype),
         interpret=interpret,
-    )(idx.astype(jnp.int32), x, a_pool, b_pool)
+    )(*args, x, a_pool, b_pool)
 
 
 def _bgmv_mag_kernel(idx_ref, x_ref, adir_ref, amag_ref, mag_ref, bdir_ref,
@@ -97,35 +149,69 @@ def _bgmv_mag_kernel(idx_ref, x_ref, adir_ref, amag_ref, mag_ref, bdir_ref,
     o_ref[0] = (y * scale).astype(o_ref.dtype)
 
 
+def _bgmv_mag_ranked_kernel(idx_ref, rank_ref, x_ref, adir_ref, amag_ref,
+                            mag_ref, bdir_ref, o_ref, *, scale: float):
+    """Mixed-rank magnitude variant: magnitudes at or above this row's
+    rank are masked, so a low-rank tenant personalizes only its own rank
+    rows of the shared directions."""
+    del idx_ref
+    i = pl.program_id(0)
+    x = x_ref[0]                                          # (bs, d_in)
+    xs = x * amag_ref[...][None, :].astype(x.dtype)
+    h = jax.lax.dot_general(
+        xs, adir_ref[...].astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bs, r)
+    h = h * mag_ref[0][None, :]
+    keep = (jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+            < rank_ref[i])
+    h = jnp.where(keep, h, 0.0)
+    y = jax.lax.dot_general(
+        h.astype(x.dtype), bdir_ref[...].astype(x.dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bs, d_out)
+    o_ref[0] = (y * scale).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "bs", "interpret"))
-def bgmv_mag_matmul(x, a_dir, a_mag, mag_pool, b_dir, idx, *,
+def bgmv_mag_matmul(x, a_dir, a_mag, mag_pool, b_dir, idx, ranks=None, *,
                     scale: float = 1.0, bs: int = 256,
                     interpret: bool = False):
     """Decomposed-DoRA magnitude path: shared a_dir (d_in, r) /
     a_mag (d_in,) / b_dir (r, d_out); mag_pool (n_slots, r) gathered
-    per row via idx (B,).  x (B, S, d_in) → (B, S, d_out)."""
+    per row via idx (B,).  x (B, S, d_in) → (B, S, d_out).  ``ranks``
+    (n_slots,) int32 masks magnitudes ≥ the slot's rank."""
     B, S, d_in = x.shape
     r = a_dir.shape[-1]
     d_out = b_dir.shape[-1]
     bs = min(bs, S)
     assert S % bs == 0, (S, bs)
     grid = (B, S // bs)
+    ranked = ranks is not None
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if ranked else 1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bs, d_in), lambda i, s, idx_ref: (i, s, 0)),
-            pl.BlockSpec((d_in, r), lambda i, s, idx_ref: (0, 0)),
-            pl.BlockSpec((d_in,), lambda i, s, idx_ref: (0,)),
-            pl.BlockSpec((1, r), lambda i, s, idx_ref: (idx_ref[i], 0)),
-            pl.BlockSpec((r, d_out), lambda i, s, idx_ref: (0, 0)),
+            pl.BlockSpec((1, bs, d_in),
+                         _imap(lambda i, s, idx_ref: (i, s, 0))),
+            pl.BlockSpec((d_in, r), _imap(lambda i, s, idx_ref: (0, 0))),
+            pl.BlockSpec((d_in,), _imap(lambda i, s, idx_ref: (0,))),
+            pl.BlockSpec((1, r),
+                         _imap(lambda i, s, idx_ref: (idx_ref[i], 0))),
+            pl.BlockSpec((r, d_out), _imap(lambda i, s, idx_ref: (0, 0))),
         ],
-        out_specs=pl.BlockSpec((1, bs, d_out), lambda i, s, idx_ref: (i, s, 0)),
+        out_specs=pl.BlockSpec((1, bs, d_out),
+                               _imap(lambda i, s, idx_ref: (i, s, 0))),
     )
+    kernel = (functools.partial(_bgmv_mag_ranked_kernel, scale=scale)
+              if ranked else functools.partial(_bgmv_mag_kernel, scale=scale))
+    args = (idx.astype(jnp.int32),)
+    if ranked:
+        args = args + (jnp.take(jnp.asarray(ranks, jnp.int32),
+                                idx.astype(jnp.int32), axis=0),)
     return pl.pallas_call(
-        functools.partial(_bgmv_mag_kernel, scale=scale),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, S, d_out), x.dtype),
         interpret=interpret,
-    )(idx.astype(jnp.int32), x, a_dir, a_mag.astype(jnp.float32),
+    )(*args, x, a_dir, a_mag.astype(jnp.float32),
       mag_pool.astype(jnp.float32), b_dir)

@@ -44,35 +44,43 @@ def _pad_tokens(x):
     return x, S, bs
 
 
-def bgmv(x, a_pool, b_pool, idx, *, scale: float = 1.0, impl=None):
-    """y[i] = scale · (x[i] @ a_pool[idx[i]]) @ b_pool[idx[i]]."""
+def bgmv(x, a_pool, b_pool, idx, *, scale: float = 1.0, impl=None,
+         ranks=None):
+    """y[i] = scale · (x[i] @ a_pool[idx[i]]) @ b_pool[idx[i]].
+
+    ``ranks`` (L,) int32: heterogeneous pool — rank rows ≥ ranks[idx[i]]
+    are masked out of row i (see bgmv.py)."""
     impl = _resolve(impl)
     squeeze = x.ndim == 2
     if squeeze:
         x = x[:, None, :]
     if impl == "einsum":
-        y = bgmv_ref(x, a_pool, b_pool, idx, scale)
+        y = bgmv_ref(x, a_pool, b_pool, idx, scale, ranks=ranks)
     else:
         xp, S, bs = _pad_tokens(x)
-        y = bgmv_matmul(xp, a_pool, b_pool, idx, scale=scale, bs=bs,
+        y = bgmv_matmul(xp, a_pool, b_pool, idx, ranks, scale=scale, bs=bs,
                         interpret=(impl == "interpret") or not _on_tpu())
         y = y[:, :S]
     return y[:, 0] if squeeze else y
 
 
 def bgmv_mag(x, a_dir, a_mag, mag_pool, b_dir, idx, *, scale: float = 1.0,
-             impl=None):
+             impl=None, ranks=None):
     """Decomposed-DoRA magnitude path:
-    y[i] = scale · (((x[i] ⊙ a_mag) @ a_dir) ⊙ mag_pool[idx[i]]) @ b_dir."""
+    y[i] = scale · (((x[i] ⊙ a_mag) @ a_dir) ⊙ mag_pool[idx[i]]) @ b_dir.
+
+    ``ranks`` (L,) int32: heterogeneous pool — magnitudes ≥ the slot's
+    rank are masked per row."""
     impl = _resolve(impl)
     squeeze = x.ndim == 2
     if squeeze:
         x = x[:, None, :]
     if impl == "einsum":
-        y = bgmv_mag_ref(x, a_dir, a_mag, mag_pool, b_dir, idx, scale)
+        y = bgmv_mag_ref(x, a_dir, a_mag, mag_pool, b_dir, idx, scale,
+                         ranks=ranks)
     else:
         xp, S, bs = _pad_tokens(x)
-        y = bgmv_mag_matmul(xp, a_dir, a_mag, mag_pool, b_dir, idx,
+        y = bgmv_mag_matmul(xp, a_dir, a_mag, mag_pool, b_dir, idx, ranks,
                             scale=scale, bs=bs,
                             interpret=(impl == "interpret") or not _on_tpu())
         y = y[:, :S]

@@ -9,25 +9,41 @@ float32:
 
   pairs      y[i] = (x[i] @ A[idx[i]]) @ B[idx[i]] · scale
   magnitude  y[i] = (((x[i] ⊙ A_mag) @ A_dir) ⊙ mag[idx[i]]) @ B_dir · scale
+
+Heterogeneous pools: ``ranks`` (L,) int32 masks the low-rank
+intermediate at columns ≥ the row's slot rank (same op position as the
+Pallas kernels' mask), so padded or stale rows above a tenant's own rank
+contribute exactly nothing.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def bgmv_ref(x, a_pool, b_pool, idx, scale: float = 1.0):
+def _rank_keep(h, idx, ranks):
+    """(B, S, r) keep-mask for per-row slot ranks."""
+    rr = jnp.take(jnp.asarray(ranks, jnp.int32), idx, axis=0)    # (B,)
+    return jnp.arange(h.shape[-1])[None, None, :] < rr[:, None, None]
+
+
+def bgmv_ref(x, a_pool, b_pool, idx, scale: float = 1.0, ranks=None):
     """x (B, S, d_in), a_pool (L, d_in, r), b_pool (L, r, d_out),
     idx (B,) → (B, S, d_out)."""
     a = jnp.take(a_pool, idx, axis=0).astype(x.dtype)     # (B, d_in, r)
     b = jnp.take(b_pool, idx, axis=0).astype(x.dtype)     # (B, r, d_out)
     h = jnp.einsum("bsd,bdr->bsr", x, a)
+    if ranks is not None:
+        h = jnp.where(_rank_keep(h, idx, ranks), h, 0.0)
     return jnp.einsum("bsr,bro->bso", h, b) * scale
 
 
-def bgmv_mag_ref(x, a_dir, a_mag, mag_pool, b_dir, idx, scale: float = 1.0):
+def bgmv_mag_ref(x, a_dir, a_mag, mag_pool, b_dir, idx, scale: float = 1.0,
+                 ranks=None):
     """Decomposed-DoRA magnitude path; shared directions, per-row
     magnitude gather.  Shapes as in bgmv_mag_matmul."""
     h = (x * a_mag.astype(x.dtype)) @ a_dir.astype(x.dtype)   # (B, S, r)
     m = jnp.take(mag_pool, idx, axis=0)                       # (B, r)
     h = h * m[:, None, :].astype(x.dtype)
+    if ranks is not None:
+        h = jnp.where(_rank_keep(h, idx, ranks), h, 0.0)
     return (h @ b_dir.astype(x.dtype)) * scale

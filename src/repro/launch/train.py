@@ -70,9 +70,11 @@ def pick_micro_batches(cfg: ArchConfig, per_client_batch: int,
 def _pmean_equivalent(method) -> bool:
     """True when the method's aggregate is a plain client mean (what the
     shard_map pmean computes) — directly, or via fedavg_excluding whose
-    excluded leaves the keep-local restore keeps per-client anyway."""
+    excluded leaves the keep-local restore keeps per-client anyway.
+    ``zeropad_fedavg`` qualifies too: mixed-rank adapters live zero-padded
+    at r_max, so the pmean over padded trees IS zero-pad averaging."""
     a = method.aggregate
-    if a in (fedagg.fedavg, fedagg.decomposed_fedavg):
+    if a in (fedagg.fedavg, fedagg.decomposed_fedavg, fedagg.zeropad_fedavg):
         return True
     return (isinstance(a, functools.partial)
             and a.func is fedagg.fedavg_excluding

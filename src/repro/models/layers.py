@@ -130,12 +130,18 @@ def lora_delta_batched(p: Params, x, adapter_idx, scale: float):
                                                 effective B magnitudes
                                                 (the paper's ΔB_M
                                                 deployment shape)
+
+    An optional {pool_ranks} leaf ((L,) int32) marks a heterogeneous
+    pool: slots are padded to r_max and the kernel masks each row's
+    intermediate at its slot's own rank.
     """
     from repro.kernels import bgmv, bgmv_mag
+    ranks = p.get("pool_ranks")
     if "pool_A" in p:
-        return bgmv(x, p["pool_A"], p["pool_B"], adapter_idx, scale=scale)
+        return bgmv(x, p["pool_A"], p["pool_B"], adapter_idx, scale=scale,
+                    ranks=ranks)
     return bgmv_mag(x, p["bgmv_A_dir"], p["bgmv_A_mag"], p["pool_B_mag"],
-                    p["bgmv_B_dir"], adapter_idx, scale=scale)
+                    p["bgmv_B_dir"], adapter_idx, scale=scale, ranks=ranks)
 
 
 def _has_pooled(p: Params) -> bool:

@@ -21,6 +21,14 @@ so ``lax.scan`` slices off ``n_sb`` and every layer sees a clean
                    4·r per target (a few hundred bytes total), so one
                    host holds millions of personalized variants.
 
+Heterogeneous tenants: one pool serves adapters of mixed ranks.  The
+store's ``rank`` is the pool allocation r_max; a tenant may register any
+rank ≤ r_max — its leaves are zero-padded into the slot and its true
+rank is recorded in the slot-rank table (saved with the tenant table,
+exposed as a ``pool_ranks`` leaf for kind='pairs' so the BGMV kernel
+masks each row at its slot's own rank; kind='dora_mag' needs no mask —
+rows above a tenant's rank simply keep the shared model's magnitudes).
+
 Register/evict is LRU over slots; ``save``/``load`` round-trip the pools
 plus the tenant table through ``checkpoint/ckpt.py`` (tenant ids are
 encoded as fixed-width uint8 rows so every checkpoint leaf stays a plain
@@ -126,6 +134,9 @@ class AdapterStore:
         self._tenant_of: dict[int, str] = {}          # slot → tenant
         self._last_used = np.zeros((n_slots,), np.int64)
         self._counter = 0
+        # per-slot adapter ranks (null slot stays 0: an all-zero rank-0
+        # identity); tenants below r_max are zero-padded into their slot
+        self._slot_ranks = np.zeros((n_slots + 1,), np.int32)
 
     # ------------------------------------------------------------------
     # slot management
@@ -143,6 +154,10 @@ class AdapterStore:
         slot = self._slot_of[tenant]
         self._touch(slot)
         return slot
+
+    def rank_of(self, tenant: str) -> int:
+        """The tenant's own adapter rank (≤ the pool's r_max)."""
+        return int(self._slot_ranks[self._slot_of[tenant]])
 
     def _touch(self, slot: int) -> None:
         self._counter += 1
@@ -168,6 +183,7 @@ class AdapterStore:
         slot = self._slot_of.pop(tenant)
         del self._tenant_of[slot]
         self._last_used[slot] = 0
+        self._slot_ranks[slot] = 0
         for prefix, pool in self._pools.items():
             for key in _SLOT_KEYS:
                 if key in pool:
@@ -181,10 +197,18 @@ class AdapterStore:
         """Pack one tenant's adapter tree into a pool slot (LRU evict when
         full).  Accepts raw-LoRA {lora_A, lora_B} or decomposed-DoRA
         leaves for kind='pairs'; a dB_mag overlay (or full decomposed
-        tree) for kind='dora_mag'.  Raises ValueError on rank/target
-        mismatch."""
+        tree) for kind='dora_mag'.  The tenant's rank may be anything
+        ≤ the pool's r_max — lower ranks are zero-padded into the slot
+        and recorded in the slot-rank table.  Raises ValueError on
+        rank/target mismatch."""
         _encode_id(tenant)                            # validate early
-        packed = {p: self._pack_one(p, adapter) for p in self.targets}
+        packed, t_ranks = {}, set()
+        for p in self.targets:
+            packed[p], r_t = self._pack_one(p, adapter)
+            t_ranks.add(r_t)
+        if len(t_ranks) != 1:
+            raise ValueError(f"adapter rank mismatch across targets: "
+                             f"{sorted(t_ranks)}")
         extra = [p for p in pt.tree_paths(adapter)
                  if not any(p.startswith(t + "/") for t in self.targets)]
         if extra:
@@ -196,10 +220,26 @@ class AdapterStore:
                 self._set_slot(prefix, key, slot, val)
         self._slot_of[tenant] = slot
         self._tenant_of[slot] = tenant
+        self._slot_ranks[slot] = t_ranks.pop()
         self._touch(slot)
         return slot
 
-    def _pack_one(self, prefix: str, adapter: Params) -> dict:
+    def _pad_rank(self, x, axis: int):
+        """Zero-pad a rank-``r_t`` leaf up to the pool's r_max along
+        ``axis`` (negative).  Raises (with 'mismatch' in the message) when
+        the leaf exceeds the pool allocation."""
+        r_t = x.shape[axis]
+        if not 1 <= r_t <= self.rank:
+            raise ValueError(f"rank mismatch: adapter rank {r_t} outside "
+                             f"[1, r_max={self.rank}]")
+        if r_t == self.rank:
+            return x
+        pad = [(0, 0)] * x.ndim
+        pad[x.ndim + axis] = (0, self.rank - r_t)
+        return jnp.pad(x, pad)
+
+    def _pack_one(self, prefix: str, adapter: Params) -> tuple[dict, int]:
+        """Pack one target's leaves for a slot; returns (leaves, rank)."""
         lead, d_in, d_out = self.targets[prefix]
         r = self.rank
         sub = _get(adapter, prefix)
@@ -211,11 +251,15 @@ class AdapterStore:
             if db is None:
                 raise ValueError(f"{prefix}: kind='dora_mag' needs a dB_mag "
                                  f"leaf per target")
-            if db.shape != (*lead, r):
+            r_t = db.shape[-1]
+            if db.shape != (*lead, r_t) or r_t > r:
                 raise ValueError(f"{prefix}: dB_mag rank mismatch "
-                                 f"{db.shape} vs {(*lead, r)}")
-            # same single addition the merged lora_delta path performs
-            return {"pool_B_mag": self._shared_B_mag[prefix] + db}
+                                 f"{db.shape} vs {(*lead, f'<={r}')}")
+            db = self._pad_rank(db, -1)
+            # same single addition the merged lora_delta path performs;
+            # rows above the tenant's rank carry a zero delta, i.e. the
+            # shared model's magnitudes
+            return {"pool_B_mag": self._shared_B_mag[prefix] + db}, r_t
         if "lora_A" in sub:
             A, B = sub["lora_A"], sub["lora_B"]
         elif "A_dir" in sub:
@@ -227,11 +271,15 @@ class AdapterStore:
                  )[..., None] * sub["B_dir"]
         else:
             raise ValueError(f"{prefix}: no lora_A/A_dir leaves in adapter")
-        if A.shape != (*lead, d_in, r) or B.shape != (*lead, r, d_out):
+        r_t = A.shape[-1]
+        if (r_t > r or A.shape != (*lead, d_in, r_t)
+                or B.shape != (*lead, r_t, d_out)):
             raise ValueError(f"{prefix}: shape mismatch A{A.shape} B{B.shape} "
-                             f"vs {(*lead, d_in, r)} / {(*lead, r, d_out)}")
-        return {"pool_A": jnp.asarray(A, jnp.float32),
-                "pool_B": jnp.asarray(B, jnp.float32)}
+                             f"vs {(*lead, d_in, f'<={r}')} / "
+                             f"{(*lead, f'<={r}', d_out)}")
+        A = self._pad_rank(jnp.asarray(A, jnp.float32), -1)
+        B = self._pad_rank(jnp.asarray(B, jnp.float32), -2)
+        return {"pool_A": A, "pool_B": B}, r_t
 
     # ------------------------------------------------------------------
     # serving views
@@ -239,7 +287,11 @@ class AdapterStore:
 
     def overlay(self) -> Params:
         """Pooled overlay pytree to merge into the backbone params —
-        ``layers.linear`` consults these leaves when adapter_idx is set."""
+        ``layers.linear`` consults these leaves when adapter_idx is set.
+        kind='pairs' pools also carry the per-slot rank table as a
+        ``pool_ranks`` leaf (broadcast over any scanned-block lead axis)
+        so the BGMV kernel masks each row at its slot's own rank."""
+        slot_ranks = jnp.asarray(self._slot_ranks)
         out: dict = {}
         for prefix, pool in self._pools.items():
             keys = prefix.split("/")
@@ -247,17 +299,25 @@ class AdapterStore:
             for k in keys:
                 cur = cur.setdefault(k, {})
             cur.update(pool)
+            if self.kind == "pairs":
+                lead, _, _ = self.targets[prefix]
+                cur["pool_ranks"] = jnp.broadcast_to(
+                    slot_ranks, (*lead, self.n_slots + 1))
         return out
 
-    def bytes_per_tenant(self) -> int:
-        """Marginal pool bytes one registered tenant occupies."""
+    def bytes_per_tenant(self, tenant: str | None = None) -> int:
+        """Marginal pool bytes one registered tenant occupies (at the
+        tenant's own rank when given; at the pool's r_max otherwise —
+        padding rows are zero and compress away at rest, but they do
+        occupy pool memory)."""
+        r = self.rank if tenant is None else self.rank_of(tenant)
         total = 0
         for prefix, (lead, d_in, d_out) in self.targets.items():
             n = int(np.prod(lead)) if lead else 1
             if self.kind == "dora_mag":
-                total += 4 * self.rank * n
+                total += 4 * r * n
             else:
-                total += 4 * self.rank * (d_in + d_out) * n
+                total += 4 * r * (d_in + d_out) * n
         return total
 
     # ------------------------------------------------------------------
@@ -270,7 +330,8 @@ class AdapterStore:
             ids[slot] = _encode_id(tenant)
         return {"tenant_ids": ids,
                 "last_used": self._last_used.copy(),
-                "counter": np.asarray(self._counter, np.int64)}
+                "counter": np.asarray(self._counter, np.int64),
+                "slot_ranks": self._slot_ranks.copy()}
 
     def state_tree(self) -> dict:
         return {"pools": {p.replace("/", "."): dict(v)
@@ -282,8 +343,15 @@ class AdapterStore:
 
     def load(self, path: str) -> int:
         """Restore pools + tenant table saved by ``save`` into this store
-        (must be constructed with the same base/cfg/n_slots/kind)."""
-        tree, step = restore_checkpoint(path, self.state_tree())
+        (must be constructed with the same base/cfg/n_slots/kind).
+        Checkpoints written before the slot-rank table existed restore
+        every occupied slot at the pool's full rank (their pools were
+        never padded)."""
+        like = self.state_tree()
+        like["meta"]["slot_ranks"] = np.full((self.n_slots + 1,), self.rank,
+                                             np.int32)
+        tree, step = restore_checkpoint(path, like,
+                                        allow_missing=r"^meta/slot_ranks$")
         for p in self._pools:
             self._pools[p] = {k: jnp.asarray(v) for k, v in
                               tree["pools"][p.replace("/", ".")].items()}
@@ -291,10 +359,14 @@ class AdapterStore:
         ids = np.asarray(meta["tenant_ids"], np.uint8)
         self._last_used = np.asarray(meta["last_used"], np.int64).copy()
         self._counter = int(meta["counter"])
+        self._slot_ranks = np.asarray(meta["slot_ranks"], np.int32).copy()
         self._slot_of, self._tenant_of = {}, {}
         for slot in range(self.n_slots):
             tenant = _decode_id(ids[slot])
             if tenant:
                 self._slot_of[tenant] = slot
                 self._tenant_of[slot] = tenant
+        for slot in range(self.n_slots + 1):          # empty/null slots: rank 0
+            if slot not in self._tenant_of:
+                self._slot_ranks[slot] = 0
         return step

@@ -104,6 +104,16 @@ def tree_get(tree: Mapping, path: str, default=None):
     return node
 
 
+def set_leaf(tree: dict, path: str, leaf) -> None:
+    """Set the leaf at a "/"-joined path in a nested dict, creating
+    intermediate dicts as needed (the write-side dual of ``tree_get``)."""
+    keys = path.split("/")
+    cur = tree
+    for k in keys[:-1]:
+        cur = cur.setdefault(k, {})
+    cur[keys[-1]] = leaf
+
+
 def filter_tree(tree: Mapping, predicate: Callable[[str], bool]) -> dict:
     """Return a nested-dict subtree containing only leaves whose path
     satisfies ``predicate``; empty dicts are pruned."""

@@ -6,3 +6,49 @@ import sys
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# guarded hypothesis (the repo pattern: property-based when hypothesis is
+# installed, a deterministic sample of the same check when it isn't — this
+# container ships without hypothesis)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis
+
+    HAVE_HYPOTHESIS = True
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=25,
+        suppress_health_check=list(hypothesis.HealthCheck))
+    hypothesis.settings.load_profile("ci")
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running property/parity sweeps (tier-1 may deselect "
+        "with -m 'not slow')")
+
+
+def given_seeds(n_fallback: int = 10, lo: int = 0, hi: int = 2**31 - 1):
+    """Decorator for seed-driven property tests: ``check(seed)`` builds its
+    case from ``np.random.default_rng(seed)``, so the generative and the
+    deterministic-fallback paths share one construction.  With hypothesis
+    the seed is drawn (and shrunk); without it the check runs over
+    ``n_fallback`` fixed seeds."""
+    if HAVE_HYPOTHESIS:
+        import hypothesis.strategies as st
+
+        def deco(check):
+            return hypothesis.given(st.integers(lo, hi))(check)
+        return deco
+
+    def deco(check):
+        return pytest.mark.parametrize(
+            "seed", range(n_fallback),
+            ids=[f"seed{i}" for i in range(n_fallback)])(check)
+    return deco

@@ -1,0 +1,206 @@
+"""Property-based tests for the aggregation family (guarded-hypothesis
+pattern from tests/conftest.py: generative with hypothesis installed, a
+deterministic seed sweep without it).
+
+Properties, checked for EVERY aggregator reachable through the FedMethod
+registry (so a new ``register(...)`` call is automatically under test):
+
+  * client-axis permutation invariance — an aggregation must not care
+    about client order;
+  * fixed point on identical clients — aggregating C copies of one
+    adapter returns that adapter;
+  * weight convexity — the (weighted) aggregate lies inside the
+    per-coordinate client envelope;
+
+plus the heterogeneous-rank separation result: ``exact_fedavg``
+reconstructs Σ wᵢ·AᵢBᵢ to f32 tolerance on mixed-rank fleets where
+zero-pad averaging provably does not (Nguyen et al.: the mean of the
+factors is not the mean of the products).
+
+Aggregators whose output factors are only defined up to re-factorization
+(``lora_exact``: SVD sign/order) are compared in *delta space*
+(A @ B), which is the quantity federated averaging is about.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given_seeds
+
+from repro.core import aggregation as agg
+from repro.core import methods
+
+C = 4                                  # clients per generated fleet
+
+# aggregators compared by effective delta, not leaf-wise (re-factorization
+# makes leaves non-unique)
+_DELTA_ONLY = {"lora_exact"}
+
+
+def _registry_aggregators():
+    """name → (callable(tree, weights), delta_only) for every registered
+    method, with rank-aware aggregators closed over the fleet's ranks."""
+    out = {}
+    for name in methods.available_methods():
+        m = methods.get_method(name)
+        out[name] = (m.aggregate, m.rank_aware, name in _DELTA_ONLY)
+    return out
+
+
+def _make_fleet(seed, *, rank_sufficient=False):
+    """One synthetic mixed-rank client fleet of raw-LoRA pairs.
+
+    rank_sufficient=True caps Σ ranksᵢ ≤ r_max so rank-r_max
+    re-factorization (lora_exact) is exact, making delta-space
+    convexity/fixed-point assertions valid for every aggregator."""
+    rng = np.random.default_rng(seed)
+    d_in = int(rng.integers(4, 10))
+    d_out = int(rng.integers(4, 10))
+    if rank_sufficient:
+        r_max = int(rng.integers(C, C + 3))       # Σ ranks ≤ C ≤ r_max
+        ranks = np.asarray([1] * C)
+    else:
+        r_max = int(rng.integers(2, 6))
+        ranks = rng.integers(1, r_max + 1, size=(C,))
+        ranks[rng.integers(0, C)] = r_max         # someone is at r_max
+    A = np.zeros((C, d_in, r_max), np.float32)
+    B = np.zeros((C, r_max, d_out), np.float32)
+    for c in range(C):
+        r = int(ranks[c])
+        A[c, :, :r] = rng.uniform(-2, 2, size=(d_in, r))
+        B[c, :r] = rng.uniform(-2, 2, size=(r, d_out))
+    w = rng.uniform(0.1, 1.0, size=(C,)).astype(np.float32)
+    tree = {"proj": {"lora_A": jnp.asarray(A), "lora_B": jnp.asarray(B)}}
+    return tree, jnp.asarray(ranks, jnp.int32), jnp.asarray(w / w.sum())
+
+
+def _call(fn, rank_aware, tree, ranks, weights=None):
+    kwargs = {"ranks": ranks} if rank_aware else {}
+    return fn(tree, weights, **kwargs) if weights is not None else \
+        fn(tree, **kwargs)
+
+
+def _delta(tree):
+    return np.asarray(tree["proj"]["lora_A"] @ tree["proj"]["lora_B"])
+
+
+def _assert_same(name, out_a, out_b, delta_only, atol=1e-5):
+    if delta_only:
+        np.testing.assert_allclose(_delta(out_a), _delta(out_b),
+                                   rtol=1e-4, atol=atol, err_msg=name)
+    else:
+        for pa, la, lb in zip(("lora_A", "lora_B"),
+                              jax.tree.leaves(out_a), jax.tree.leaves(out_b)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       rtol=1e-5, atol=atol,
+                                       err_msg=f"{name}/{pa}")
+
+
+@pytest.mark.slow
+@given_seeds()
+def test_permutation_invariance(seed):
+    tree, ranks, _ = _make_fleet(seed)
+    perm = np.random.default_rng(seed + 1).permutation(C)
+    tree_p = jax.tree.map(lambda x: x[perm], tree)
+    ranks_p = ranks[perm]
+    for name, (fn, rank_aware, delta_only) in _registry_aggregators().items():
+        a = _call(fn, rank_aware, tree, ranks)
+        b = _call(fn, rank_aware, tree_p, ranks_p)
+        _assert_same(name, a, b, delta_only)
+
+
+@pytest.mark.slow
+@given_seeds()
+def test_fixed_point_on_identical_clients(seed):
+    tree, _, _ = _make_fleet(seed, rank_sufficient=True)
+    one = jax.tree.map(lambda x: x[0], tree)
+    same = agg.broadcast_to_clients(one, C)
+    full = jnp.full((C,), one["proj"]["lora_A"].shape[-1], jnp.int32)
+    for name, (fn, rank_aware, delta_only) in _registry_aggregators().items():
+        out = _call(fn, rank_aware, same, full)
+        _assert_same(name, out, one, delta_only)
+
+
+@pytest.mark.slow
+@given_seeds()
+def test_weight_convexity(seed):
+    """The weighted aggregate lies inside the per-coordinate client
+    envelope — leaf-wise for mean-family aggregators, in delta space for
+    re-factorizing ones (rank-sufficient fleets, so lora_exact is exact
+    and Σw·AᵢBᵢ convexity applies coordinate-wise to the products)."""
+    tree, ranks, w = _make_fleet(seed, rank_sufficient=True)
+    for name, (fn, rank_aware, delta_only) in _registry_aggregators().items():
+        out = _call(fn, rank_aware, tree, ranks, weights=w)
+        if delta_only:
+            deltas = np.stack(
+                [np.asarray(tree["proj"]["lora_A"][c]
+                            @ tree["proj"]["lora_B"][c])
+                 for c in range(C)])
+            checks = [(deltas, _delta(out))]
+        else:
+            checks = [(np.asarray(clients), np.asarray(got))
+                      for clients, got in zip(jax.tree.leaves(tree),
+                                              jax.tree.leaves(out))]
+        for clients, got in checks:
+            lo, hi = clients.min(0), clients.max(0)
+            assert (got >= lo - 1e-5).all() and (got <= hi + 1e-5).all(), name
+
+
+@pytest.mark.slow
+@given_seeds()
+def test_exact_fedavg_reconstructs_where_zeropad_differs(seed):
+    """On a rank-sufficient mixed-rank fleet, exact_fedavg's delta matches
+    the Σ wᵢ·AᵢBᵢ oracle to f32 tolerance; zero-pad averaging — the
+    factor-mean — measurably does not (unless the fleet is degenerate)."""
+    tree, ranks, w = _make_fleet(seed, rank_sufficient=True)
+    wnp = np.asarray(w)
+    oracle = sum(
+        wnp[c] * np.asarray(tree["proj"]["lora_A"][c]
+                            @ tree["proj"]["lora_B"][c])
+        for c in range(C))
+    exact = agg.exact_fedavg(tree, w, ranks=ranks)
+    np.testing.assert_allclose(_delta(exact), oracle, rtol=1e-4, atol=1e-5)
+    zp = agg.zeropad_fedavg(tree, w, ranks=ranks)
+    # the factor mean is provably not the product mean for non-degenerate
+    # fleets: distinct rank-1 clients at the same rank row collide
+    assert np.abs(_delta(zp) - oracle).max() > 1e-3
+
+
+def test_replication_reweights_uncovered_rows():
+    """Rows owned by one client keep that client's values; zero-padding
+    dilutes them by C."""
+    A = np.zeros((2, 3, 2), np.float32)
+    B = np.zeros((2, 2, 3), np.float32)
+    A[0, :, :1] = 1.0
+    B[0, :1] = 1.0
+    A[1] = 2.0                                   # rank-2 client owns row 1
+    B[1] = 2.0
+    tree = {"p": {"lora_A": jnp.asarray(A), "lora_B": jnp.asarray(B)}}
+    ranks = jnp.asarray([1, 2], jnp.int32)
+    rep = agg.replication_fedavg(tree, ranks=ranks)
+    zp = agg.zeropad_fedavg(tree, ranks=ranks)
+    # row 0: covered by both → same as the plain mean
+    np.testing.assert_allclose(np.asarray(rep["p"]["lora_A"])[:, 0],
+                               np.asarray(zp["p"]["lora_A"])[:, 0])
+    # row 1: only the rank-2 client owns it → its value, not value/2
+    np.testing.assert_allclose(np.asarray(rep["p"]["lora_A"])[:, 1],
+                               A[1, :, 1])
+    np.testing.assert_allclose(np.asarray(zp["p"]["lora_A"])[:, 1],
+                               A[1, :, 1] / 2)
+
+
+def test_exact_fedavg_rejects_decomposed_trees():
+    tree = {"p": {"A_dir": jnp.ones((2, 3, 2)), "B_dir": jnp.ones((2, 2, 3))}}
+    with pytest.raises(ValueError, match="lora_A"):
+        agg.exact_fedavg(tree)
+
+
+def test_comm_bytes_rank_aware():
+    """A rank-2 client in an r_max=8 fleet ships 1/4 the pair bytes."""
+    tree = {"p": {"lora_A": jnp.zeros((16, 8)), "lora_B": jnp.zeros((8, 16))}}
+    full = agg.comm_bytes_per_round(tree)
+    low = agg.comm_bytes_per_round(tree, rank=2)
+    assert low == full // 4
+    # rank above the allocation clamps (never bills phantom rows)
+    assert agg.comm_bytes_per_round(tree, rank=99) == full

@@ -83,6 +83,88 @@ def test_bgmv_pallas_pads_nondivisible_seq():
                                rtol=1e-5, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# heterogeneous pools (mixed per-slot ranks, padded to r_max)
+# ---------------------------------------------------------------------------
+
+def test_bgmv_ranked_pallas_vs_ref():
+    """Rank-masked kernel (second scalar-prefetch vector) vs the masked
+    einsum oracle, pool with ranks {2, 4, 8, 1, 3}."""
+    B, S, d, r, o, L = 5, 16, 64, 8, 96, 5
+    x, ap, bp, _ = _pairs(B, S, d, r, o, L)
+    idx = jnp.arange(B, dtype=jnp.int32)
+    ranks = jnp.asarray([2, 4, 8, 1, 3], jnp.int32)
+    y_ref = bgmv(x, ap, bp, idx, scale=2.0, impl="einsum", ranks=ranks)
+    y_pal = bgmv(x, ap, bp, idx, scale=2.0, impl="interpret", ranks=ranks)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bgmv_ranked_equals_truncated_adapter():
+    """Masking at rank rᵢ must equal running the slot's first rᵢ rank
+    rows unpadded — i.e. stale/padded rows above a slot's rank can never
+    leak into the output."""
+    B, S, d, r, o, L = 4, 6, 32, 8, 48, 4
+    x, ap, bp, idx = _pairs(B, S, d, r, o, L)
+    ranks = jnp.asarray([1, 2, 4, 8], jnp.int32)
+    y = bgmv(x, ap, bp, idx, scale=1.5, impl="einsum", ranks=ranks)
+    for i in range(B):
+        s = int(idx[i])
+        rr = int(ranks[s])
+        want = (x[i] @ ap[s, :, :rr]) @ bp[s, :rr] * 1.5
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_bgmv_mag_ranked_pallas_vs_ref():
+    B, S, d, r, o, L = 6, 8, 96, 4, 32, 7
+    x = jnp.asarray(RNG.normal(size=(B, S, d)), jnp.float32)
+    ad = jnp.asarray(RNG.normal(size=(d, r)) * 0.3, jnp.float32)
+    am = jnp.asarray(RNG.uniform(0.5, 1.5, size=(d,)), jnp.float32)
+    mp = jnp.asarray(RNG.normal(size=(L, r)), jnp.float32)
+    bd = jnp.asarray(RNG.normal(size=(r, o)) * 0.3, jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, L, size=(B,)), jnp.int32)
+    ranks = jnp.asarray(RNG.integers(1, r + 1, size=(L,)), jnp.int32)
+    y_ref = bgmv_mag(x, ad, am, mp, bd, idx, scale=4.0, impl="einsum",
+                     ranks=ranks)
+    y_pal = bgmv_mag(x, ad, am, mp, bd, idx, scale=4.0, impl="interpret",
+                     ranks=ranks)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bgmv_full_rank_table_matches_unranked():
+    """ranks ≡ r_max must be a no-op: masked and unmasked paths agree
+    exactly (every real column kept, nothing else existed)."""
+    B, S, d, r, o, L = 3, 8, 32, 4, 32, 3
+    x, ap, bp, idx = _pairs(B, S, d, r, o, L)
+    full = jnp.full((L,), r, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(bgmv(x, ap, bp, idx, impl="einsum")),
+        np.asarray(bgmv(x, ap, bp, idx, impl="einsum", ranks=full)))
+
+
+def test_linear_pooled_ranked_matches_truncated_merged():
+    """layers.linear with a pool_ranks leaf must equal the merged linear
+    of each slot's own-rank (truncated) adapter."""
+    from repro.models.layers import linear
+    d, r, o, L = 48, 8, 64, 3
+    kern = jnp.asarray(RNG.normal(size=(d, o)) * 0.05, jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(L, 5, d)), jnp.float32)
+    idx = jnp.arange(L, dtype=jnp.int32)
+    ap = jnp.asarray(RNG.normal(size=(L, d, r)) * 0.3, jnp.float32)
+    bp = jnp.asarray(RNG.normal(size=(L, r, o)) * 0.3, jnp.float32)
+    ranks = jnp.asarray([2, 4, 8], jnp.int32)
+    y = linear({"kernel": kern, "pool_A": ap, "pool_B": bp,
+                "pool_ranks": ranks}, x, lora_scale=2.0, adapter_idx=idx)
+    for i in range(L):
+        rr = int(ranks[i])
+        yi = linear({"kernel": kern, "lora_A": ap[i, :, :rr],
+                     "lora_B": bp[i, :rr]}, x[i:i + 1], lora_scale=2.0)
+        np.testing.assert_allclose(np.asarray(y[i:i + 1]), np.asarray(yi),
+                                   rtol=1e-6, atol=1e-6)
+
+
 def test_bgmv_bad_impl_rejected():
     x, ap, bp, idx = _pairs(2, 4, 16, 4, 16, 2)
     with pytest.raises(ValueError):

@@ -1,0 +1,212 @@
+"""Heterogeneous-rank checkpoint coverage: msgpack roundtrips of a
+mixed-rank adapter pool and of FedSim state must preserve per-tenant /
+per-client ranks, and pre-het checkpoints (no slot-rank table) must
+restore with sane defaults instead of crashing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
+from repro.core import peft
+from repro.fed.simulate import FedHyper, FedSim
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.serve import AdapterStore
+from repro.utils import pytree as pt
+
+CFG = ArchConfig(name="hetck-t", family="dense", n_layers=2, d_model=32,
+                 n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                 dtype="float32", lora_rank=8, lora_dropout=0.0)
+
+
+@pytest.fixture(scope="module")
+def base():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _adapter(base, seed, rank):
+    return peft.add_lora(base, CFG, jax.random.PRNGKey(seed), rank=rank)
+
+
+def _batches(C, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"tokens": jnp.asarray(rng.integers(5, 64, size=(C, 2, 16)),
+                                   jnp.int32),
+             "loss_mask": jnp.ones((C, 2, 16), jnp.float32)}
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous adapter pool
+# ---------------------------------------------------------------------------
+
+def test_het_pool_roundtrip_preserves_ranks(base, tmp_path):
+    path = str(tmp_path / "pool.msgpack")
+    store = AdapterStore(base, CFG, n_slots=4, kind="pairs", rank=8)
+    ranks = {"alice": 2, "bob": 4, "carol": 8}
+    for i, (tenant, r) in enumerate(ranks.items()):
+        store.register(tenant, _adapter(base, i + 1, r))
+    store.save(path, step=11)
+
+    fresh = AdapterStore(base, CFG, n_slots=4, kind="pairs", rank=8)
+    assert fresh.load(path) == 11
+    assert fresh.tenants == store.tenants
+    for tenant, r in ranks.items():
+        assert fresh.rank_of(tenant) == r, tenant
+    # overlays (pools + the pool_ranks table) are leaf-identical
+    for (pa, la), (pb, lb) in zip(
+            zip(pt.tree_paths(store.overlay()),
+                jax.tree.leaves(store.overlay())),
+            zip(pt.tree_paths(fresh.overlay()),
+                jax.tree.leaves(fresh.overlay()))):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_pre_het_pool_checkpoint_defaults_to_full_rank(base, tmp_path):
+    """A checkpoint written before the slot-rank table existed (simulated
+    by stripping the slot_ranks leaf) restores occupied slots at the
+    pool's full rank — their pools were never padded — and empty/null
+    slots at 0."""
+    path = str(tmp_path / "old.msgpack")
+    store = AdapterStore(base, CFG, n_slots=3, kind="pairs", rank=8)
+    store.register("legacy", _adapter(base, 1, 8))
+    store.save(path, step=2)
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    del payload["leaves"]["meta/slot_ranks"]
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+    fresh = AdapterStore(base, CFG, n_slots=3, kind="pairs", rank=8)
+    assert fresh.load(path) == 2
+    assert fresh.rank_of("legacy") == 8
+    empties = [s for s in range(4) if s != fresh.slot_of("legacy")]
+    assert all(fresh._slot_ranks[s] == 0 for s in empties)
+
+
+def test_restore_checkpoint_missing_leaf_policy(tmp_path):
+    path = os.path.join(tmp_path, "t.msgpack")
+    save_checkpoint(path, {"a": jnp.ones((2,))}, step=1)
+    like = {"a": jnp.zeros((2,)), "b": jnp.full((3,), 7.0)}
+    with pytest.raises(KeyError, match="allow_missing"):
+        restore_checkpoint(path, like)
+    # a non-matching allow_missing regex still raises for 'b'
+    with pytest.raises(KeyError):
+        restore_checkpoint(path, like, allow_missing=r"^zzz$")
+    for kwargs in ({"strict": False}, {"allow_missing": r"^b$"}):
+        tree, _ = restore_checkpoint(path, like, **kwargs)
+        np.testing.assert_array_equal(np.asarray(tree["a"]), np.ones((2,)))
+        np.testing.assert_array_equal(np.asarray(tree["b"]),
+                                      np.full((3,), 7.0))
+
+
+def test_restore_checkpoint_preserves_int64(tmp_path):
+    """int64 counters must not wrap through jnp's x64-disabled asarray
+    (comm accounting over thousands of rounds crosses 2^31)."""
+    path = os.path.join(tmp_path, "t.msgpack")
+    big = np.asarray(5_000_000_000, np.int64)
+    save_checkpoint(path, {"n": big}, step=0)
+    tree, _ = restore_checkpoint(path, {"n": np.asarray(0, np.int64)})
+    assert int(tree["n"]) == 5_000_000_000
+
+
+def test_cross_kind_pool_load_still_raises(base, tmp_path):
+    """Only the slot-rank table is allowed to be missing: loading a
+    kind='dora_mag' checkpoint into a kind='pairs' store must raise, not
+    silently serve zero adapters."""
+    shared = peft.add_lora(base, CFG, jax.random.PRNGKey(9), decomposed=True)
+    mag = AdapterStore(base, CFG, n_slots=2, kind="dora_mag", shared=shared)
+    path = str(tmp_path / "mag.msgpack")
+    mag.save(path, step=5)
+    pairs = AdapterStore(base, CFG, n_slots=2, kind="pairs", rank=8)
+    with pytest.raises(KeyError, match="pool_A"):
+        pairs.load(path)
+
+
+# ---------------------------------------------------------------------------
+# FedSim state
+# ---------------------------------------------------------------------------
+
+def test_fedsim_het_state_roundtrip(tmp_path):
+    path = str(tmp_path / "sim.msgpack")
+    hp = FedHyper(method="lora_exact", n_clients=3, local_steps=1,
+                  client_ranks=(2, 3, 4))
+    sim = FedSim(CFG, hp)
+    sim.local_round(_batches(3, 1), jax.random.PRNGKey(0))
+    sim.aggregate()
+    sim.save(path, round_idx=4)
+
+    sim2 = FedSim(CFG, hp)
+    assert sim2.load(path) == 4
+    assert sim2.comm_bytes == sim.comm_bytes
+    assert int(sim2._step) == int(sim._step)
+    for p, a, b in zip(pt.tree_paths(sim.client_adapters),
+                       jax.tree.leaves(sim.client_adapters),
+                       jax.tree.leaves(sim2.client_adapters)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=p)
+    for a, b in zip(jax.tree.leaves(sim.opt_state),
+                    jax.tree.leaves(sim2.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the restored fleet keeps training (and stays masked)
+    sim2.local_round(_batches(3, 1, seed=2), jax.random.PRNGKey(1))
+
+
+def test_fedsim_load_rejects_rank_permutation(tmp_path):
+    """Same r_max, different per-client assignment — shapes all match, so
+    only the recorded rank vector can catch the mismatch."""
+    path = str(tmp_path / "sim.msgpack")
+    hp = FedHyper(method="lora", n_clients=3, local_steps=1,
+                  client_ranks=(2, 3, 4))
+    sim = FedSim(CFG, hp)
+    sim.save(path)
+    other = FedSim(CFG, FedHyper(method="lora", n_clients=3, local_steps=1,
+                                 client_ranks=(4, 3, 2)))
+    with pytest.raises(ValueError, match="ranks"):
+        other.load(path)
+
+
+def test_fedsim_prox_anchor_survives_midcycle_save(tmp_path):
+    """A fedprox checkpoint taken after local_round but BEFORE aggregate
+    must restore the previous round's proximal anchor, not alias the
+    current adapters (which would zero the prox term on resume)."""
+    path = str(tmp_path / "sim.msgpack")
+    hp = FedHyper(method="fedprox", n_clients=2, local_steps=2, lr=1e-2,
+                  prox_mu=0.1)
+    sim = FedSim(CFG, hp)
+    sim.local_round(_batches(2, 2), jax.random.PRNGKey(0))
+    # mid-cycle: anchor != adapters
+    anchor = jax.tree.leaves(sim._round_ref)
+    adapters = jax.tree.leaves(sim.client_adapters)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(anchor, adapters))
+    sim.save(path)
+    sim2 = FedSim(CFG, hp)
+    sim2.load(path)
+    for a, b in zip(anchor, jax.tree.leaves(sim2._round_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # resumed training matches the uninterrupted run exactly
+    b2 = _batches(2, 1, seed=5)
+    sim.local_round(b2, jax.random.PRNGKey(1))
+    sim2.local_round(b2, jax.random.PRNGKey(1))
+    for a, b in zip(jax.tree.leaves(sim.client_adapters),
+                    jax.tree.leaves(sim2.client_adapters)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fedsim_uniform_state_roundtrip(tmp_path):
+    """Uniform fleets record the flat rank vector too."""
+    path = str(tmp_path / "sim.msgpack")
+    hp = FedHyper(method="lora", n_clients=2, local_steps=1)
+    sim = FedSim(CFG, hp)
+    sim.local_round(_batches(2, 1), jax.random.PRNGKey(0))
+    sim.save(path, round_idx=1)
+    sim2 = FedSim(CFG, hp)
+    assert sim2.load(path) == 1
+    ranks = np.asarray(sim2.state_tree()["client_ranks"])
+    np.testing.assert_array_equal(ranks, [CFG.lora_rank] * 2)

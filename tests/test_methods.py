@@ -70,6 +70,49 @@ def test_registry_only_baselines_step_and_aggregate(name):
 # scan engine vs per-step reference
 # ---------------------------------------------------------------------------
 
+def _assert_adapters_match(sim_a, sim_b, rtol=1e-5, atol=1e-6):
+    for path, a, r in zip(pt.tree_paths(sim_a.client_adapters),
+                          jax.tree.leaves(sim_a.client_adapters),
+                          jax.tree.leaves(sim_b.client_adapters)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=rtol, atol=atol, err_msg=path)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", methods.available_methods())
+def test_scanned_round_matches_reference_every_method(method):
+    """Cross-method parity sweep: for EVERY registry entry the single-scan
+    round must reproduce the seed-style per-step loop.  (Tolerances are
+    the repo's f32 parity bars, not bit-equality: XLA fuses the unrolled
+    scan body differently from the standalone jitted step, which moves
+    individual f32 values by ~1 ulp on this backend.)"""
+    hp = FedHyper(method=method, n_clients=2, local_steps=3, lr=1e-2,
+                  prox_mu=0.01)
+    b = _batches(2, 3, seed=11)
+    rng = jax.random.PRNGKey(5)
+    sim_scan, sim_ref = FedSim(CFG, hp), FedSim(CFG, hp)
+    sim_scan.local_round(b, rng)
+    sim_ref.local_round_reference(b, rng)
+    assert int(sim_scan._step) == int(sim_ref._step) == 3
+    _assert_adapters_match(sim_scan, sim_ref)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["lora_zeropad", "lora_exact",
+                                    "fedlora_opt"])
+def test_scanned_round_matches_reference_mixed_rank(method):
+    """Parity must also hold for a mixed-rank fleet riding the same
+    masked scan (ranks {2, 3, 4} across 3 clients)."""
+    hp = FedHyper(method=method, n_clients=3, local_steps=2, lr=1e-2,
+                  client_ranks=(2, 3, 4))
+    b = _batches(3, 2, seed=13)
+    rng = jax.random.PRNGKey(6)
+    sim_scan, sim_ref = FedSim(CFG, hp), FedSim(CFG, hp)
+    sim_scan.local_round(b, rng)
+    sim_ref.local_round_reference(b, rng)
+    _assert_adapters_match(sim_scan, sim_ref)
+
+
 @pytest.mark.parametrize("method", ["fedlora_opt", "fedprox"])
 def test_scanned_round_matches_per_step_reference(method):
     """The single-scan round must produce (near-)identical adapters and
@@ -185,6 +228,109 @@ def test_trimmed_fedavg_degenerate_falls_back_to_mean():
     x = jnp.asarray([[1.0], [3.0]], jnp.float32)   # C=2: 2k >= C
     out = agg.trimmed_fedavg({"w": x}, trim_ratio=0.5)["w"]
     np.testing.assert_allclose(np.asarray(out), [2.0])
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-rank fleets (mixed ranks through the one scanned engine)
+# ---------------------------------------------------------------------------
+
+HET_RANKS = (2, 4, 8, 2, 4, 8)
+
+
+def _assert_rank_masked(sim, ranks, tag):
+    """Every adapter leaf must be exactly zero above each client's rank."""
+    from repro.core import peft as _peft
+    for p, leaf in zip(pt.tree_paths(sim.client_adapters),
+                       jax.tree.leaves(sim.client_adapters)):
+        ax = _peft.rank_axis(p)
+        if ax is None:
+            continue
+        x = np.asarray(leaf)
+        axis = x.ndim + ax
+        for c, r in enumerate(ranks):
+            idx = [slice(None)] * x.ndim
+            idx[0], idx[axis] = c, slice(r, None)
+            sl = x[tuple(idx)]
+            assert sl.size == 0 or np.abs(sl).max() == 0.0, (tag, p, c)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["lora_zeropad", "lora_replication",
+                                    "lora_exact", "fedlora_opt"])
+def test_mixed_rank_fleet_full_pipeline(method):
+    """Ranks {2,4,8} across 6 clients through local_round → aggregate →
+    (global_stage) → personalize on the single jitted scan path; rows
+    above each client's rank stay exactly zero at every stage."""
+    hp = FedHyper(method=method, n_clients=6, local_steps=2,
+                  client_ranks=HET_RANKS, global_steps=2, server_lr=1e-2)
+    sim = FedSim(CFG, hp)
+    assert sim.alloc_rank == max(HET_RANKS)
+    mets = sim.local_round(_batches(6, 2, seed=1), jax.random.PRNGKey(1))
+    assert np.isfinite(mets["ce"]).all()
+    _assert_rank_masked(sim, HET_RANKS, "round")
+    aggregated = sim.aggregate()
+    _assert_rank_masked(sim, HET_RANKS, "aggregate")
+    if methods.get_method(method).pipeline:
+        sb = [{k: v[0] for k, v in b.items()} for b in _batches(1, 2, seed=3)]
+        aggregated = sim.global_stage(aggregated, sb, jax.random.PRNGKey(0))
+        _assert_rank_masked(sim, HET_RANKS, "global_stage")
+    sim.personalize(_batches(6, 2, seed=5), jax.random.PRNGKey(2))
+    _assert_rank_masked(sim, HET_RANKS, "personalize")
+
+
+def test_exact_fedavg_engine_delta_matches_oracle():
+    """Engine-level acceptance: after a mixed-rank round, lora_exact's
+    aggregated delta equals Σ wᵢ·AᵢBᵢ of the client adapters (uniform
+    weights) to f32 tolerance, while lora_zeropad's does not — on the
+    very same trained fleet.  server_rank=4 ≥ Σ rᵢ makes the truncated
+    re-factorization exact."""
+    ranks = (1, 1, 2)
+    hp = FedHyper(method="lora_exact", n_clients=3, local_steps=3, lr=5e-2,
+                  client_ranks=ranks, server_rank=4)
+    sim = FedSim(CFG, hp)
+    sim.local_round(_batches(3, 3, seed=2), jax.random.PRNGKey(7))
+    clients = sim.client_adapters
+    aggregated = sim._agg(clients)
+    zp = agg.zeropad_fedavg(clients)
+    worst_gap = 0.0
+    for prefix in {p.rsplit("/", 1)[0]
+                   for p in pt.tree_paths(clients) if p.endswith("lora_A")}:
+        A = np.asarray(FedSim._leaf(clients, f"{prefix}/lora_A"))
+        B = np.asarray(FedSim._leaf(clients, f"{prefix}/lora_B"))
+        oracle = np.mean(np.einsum("c...ir,c...ro->c...io", A, B), axis=0)
+        A_x = np.asarray(FedSim._leaf(aggregated, f"{prefix}/lora_A"))
+        B_x = np.asarray(FedSim._leaf(aggregated, f"{prefix}/lora_B"))
+        np.testing.assert_allclose(
+            np.einsum("...ir,...ro->...io", A_x, B_x), oracle,
+            rtol=1e-4, atol=1e-6, err_msg=prefix)
+        A_z = np.asarray(FedSim._leaf(zp, f"{prefix}/lora_A"))
+        B_z = np.asarray(FedSim._leaf(zp, f"{prefix}/lora_B"))
+        worst_gap = max(worst_gap, float(np.abs(
+            np.einsum("...ir,...ro->...io", A_z, B_z) - oracle).max()))
+    assert worst_gap > 1e-6, "zeropad accidentally exact — fleet degenerate"
+
+
+def test_het_comm_accounting_bills_true_ranks():
+    """A (2,4,8) fleet must move fewer bytes than three r=8 clients."""
+    hp_het = FedHyper(method="lora", n_clients=3, client_ranks=(2, 4, 8))
+    hp_uni = FedHyper(method="lora", n_clients=3, client_ranks=(8, 8, 8))
+    sim_het, sim_uni = FedSim(CFG, hp_het), FedSim(CFG, hp_uni)
+    sim_het.aggregate()
+    sim_uni.aggregate()
+    assert 0 < sim_het.comm_bytes < sim_uni.comm_bytes
+    # (2+4+8)/(8·3) of the uniform bytes — rank-axis leaves are the whole
+    # raw-LoRA payload
+    assert sim_het.comm_bytes * 24 == sim_uni.comm_bytes * 14
+
+
+def test_client_ranks_validation():
+    with pytest.raises(ValueError, match="het_ranks"):
+        FedSim(CFG, FedHyper(method="prompt", n_clients=2,
+                             client_ranks=(2, 4)))
+    with pytest.raises(ValueError, match="entries"):
+        FedSim(CFG, FedHyper(method="lora", n_clients=3, client_ranks=(2, 4)))
+    with pytest.raises(ValueError, match=">= 1"):
+        FedSim(CFG, FedHyper(method="lora", n_clients=2, client_ranks=(0, 4)))
 
 
 # ---------------------------------------------------------------------------

@@ -124,6 +124,90 @@ def test_continuous_batching_more_requests_than_rows(base, shared):
         np.testing.assert_array_equal(got, np.asarray(ref[0]))
 
 
+def _rank_variant(base, t, rank):
+    """A raw-LoRA adapter of the given rank with B pushed off its
+    near-zero init so tenants actually differ."""
+    tree = peft.add_lora(base, CFG, jax.random.PRNGKey(200 + t), rank=rank)
+    return pt.tree_map_with_path(
+        lambda p, x: x * 50.0 if p.endswith("lora_B") else x, tree)
+
+
+def test_mixed_rank_batch_matches_per_tenant(base):
+    """Ranks {2, 4, 8} (pool r_max=8) + the null slot in ONE batch —
+    every row must exact-match its per-tenant merged-backbone run, the
+    null row the bare backbone."""
+    store = AdapterStore(base, CFG, n_slots=4, kind="pairs", rank=8)
+    ranks = {0: 2, 1: 4, 2: 8}
+    trees = {t: _rank_variant(base, t, r) for t, r in ranks.items()}
+    for t in ranks:
+        store.register(f"t{t}", trees[t])
+        assert store.rank_of(f"t{t}") == ranks[t]
+    eng = ServeEngine(base, CFG, store, max_rows=4, max_prompt_len=8,
+                      max_len=24, decode_chunk=8)
+    prompts = _prompts(4, 8)
+    outs = eng.generate([(f"t{t}", prompts[t]) for t in ranks]
+                        + [(None, prompts[3])], n_new=5)
+    for t in ranks:
+        merged = merge_adapters(base, trees[t])
+        ref = greedy_generate(merged, {"tokens": jnp.asarray(prompts[t:t+1])},
+                              CFG, n_new=5)
+        np.testing.assert_array_equal(outs[t], np.asarray(ref[0]))
+    ref = greedy_generate(base, {"tokens": jnp.asarray(prompts[3:4])}, CFG,
+                          n_new=5)
+    np.testing.assert_array_equal(outs[3], np.asarray(ref[0]))
+
+
+def test_mixed_rank_continuous_batching(base):
+    """6 mixed-rank requests through 2 rows with ragged prompt lengths
+    and n_new — refills admit tenants of different ranks into freed rows
+    mid-flight and every request still exact-matches its reference."""
+    store = AdapterStore(base, CFG, n_slots=6, kind="pairs", rank=8)
+    t_ranks = [2, 8, 4, 2, 8, 4]
+    trees = {t: _rank_variant(base, t, r) for t, r in enumerate(t_ranks)}
+    for t in trees:
+        store.register(f"t{t}", trees[t])
+    eng = ServeEngine(base, CFG, store, max_rows=2, max_prompt_len=10,
+                      max_len=32, decode_chunk=3)
+    lens = [10, 7, 4, 9, 5, 10]
+    n_news = [6, 3, 8, 1, 5, 4]
+    prompts = [_prompts(1, L)[0] for L in lens]
+    rids = [eng.submit(f"t{t}", prompts[t], n_news[t]) for t in range(6)]
+    results = eng.run()
+    assert sorted(results) == sorted(rids)
+    for t in range(6):
+        merged = merge_adapters(base, trees[t])
+        ref = greedy_generate(
+            merged, {"tokens": jnp.asarray(prompts[t][None])}, CFG,
+            n_new=n_news[t])
+        np.testing.assert_array_equal(results[rids[t]], np.asarray(ref[0]))
+
+
+def test_slot_reuse_masks_stale_high_rank_rows(base):
+    """Evicting a rank-8 tenant and re-registering a rank-2 tenant into
+    the same slot must serve the rank-2 adapter exactly — the rank mask
+    (not just the evict-time zeroing) guards the padded rows."""
+    store = AdapterStore(base, CFG, n_slots=1, kind="pairs", rank=8)
+    big = _rank_variant(base, 0, 8)
+    small = _rank_variant(base, 1, 2)
+    s0 = store.register("big", big)
+    store.evict("big")
+    assert store.register("small", small) == s0
+    assert store.rank_of("small") == 2
+    eng = ServeEngine(base, CFG, store, max_rows=1, max_prompt_len=8,
+                      max_len=16, decode_chunk=4)
+    prompts = _prompts(1, 8)
+    out = eng.generate([("small", prompts[0])], n_new=4)[0]
+    ref = greedy_generate(merge_adapters(base, small),
+                          {"tokens": jnp.asarray(prompts)}, CFG, n_new=4)
+    np.testing.assert_array_equal(out, np.asarray(ref[0]))
+
+
+def test_store_rejects_rank_above_pool(base):
+    store = AdapterStore(base, CFG, n_slots=2, kind="pairs", rank=4)
+    with pytest.raises(ValueError, match="mismatch"):
+        store.register("too-big", _rank_variant(base, 0, 8))
+
+
 def test_engine_null_tenant_serves_bare_backbone(base, shared):
     store = AdapterStore(base, CFG, n_slots=2, kind="dora_mag", shared=shared)
     store.register("x", pt.filter_tree(_mag_variant(shared, 0),
