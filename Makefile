@@ -1,4 +1,4 @@
-.PHONY: test test-serve test-het test-fast perf serve-bench
+.PHONY: test test-serve test-het test-dist test-fast perf serve-bench bench-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -13,7 +13,12 @@ test-serve:
 test-het:
 	bash scripts/ci.sh --het
 
-# tier-1 minus the slow property/parity sweeps
+# distributed subsystem (shard_map collective round vs FedSim parity on
+# 8 virtual host devices)
+test-dist:
+	bash scripts/ci.sh --dist
+
+# tier-1 minus the slow sweeps and the multi-device dist tests
 test-fast:
 	bash scripts/ci.sh --fast
 
@@ -24,3 +29,9 @@ perf:
 # mixed-tenant batch vs naive merge-per-tenant serving loop
 serve-bench:
 	PYTHONPATH=src python -m benchmarks.serve_multitenant
+
+# the CI benchmark smoke job, locally: micro entries + regression check
+# against the checked-in trajectory (benchmarks/baselines/)
+bench-smoke:
+	PYTHONPATH=src python -m benchmarks.run --only perf,het,dist --fresh
+	PYTHONPATH=src python scripts/check_bench.py

@@ -6,10 +6,7 @@ the local optimizer, on all three tasks.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-
-import numpy as np
 
 from benchmarks.common import BENCH_CFG, bench_base, build_setting, PAPER_TASKS
 from repro.core.fedlora import run_federated

@@ -164,22 +164,90 @@ def run_het_round(log=print, n_clients: int = 6, local_steps: int = 5,
              "ratio": ratio}], ratio
 
 
+def run_dist_round(log=print, local_steps: int = 5, reps: int = 6):
+    """Production shard_map collective round (launch/train) vs the
+    single-process FedSim engine round at matched settings, on a
+    data-only client mesh over every visible device (1 on a default CPU
+    run; under the --dist lane's XLA flag, 8 virtual devices → 8
+    clients).  The adapter payload is tiny, so the ratio isolates what
+    the move from a vmapped client axis to one-client-per-shard
+    collectives costs in dispatch + collective overhead."""
+    import jax
+
+    from repro.fed.simulate import FedHyper, FedSim
+    from repro.launch.mesh import make_client_mesh
+    from repro.launch.train import TrainSettings, make_fed_train_step
+
+    C = jax.device_count()
+    hp = FedHyper(method="fedlora_opt", n_clients=C,
+                  local_steps=local_steps, batch=8, seq_len=64)
+    sim = FedSim(FED_CFG, hp)
+    mesh = make_client_mesh(C)
+    st = TrainSettings(lr=hp.lr, micro_batches=1, clip=hp.clip, remat=False,
+                       method=hp.method, local_steps=local_steps)
+    step_fn = jax.jit(make_fed_train_step(FED_CFG, mesh, st)[0])
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(
+                    rng.integers(5, FED_CFG.vocab_size,
+                                 size=(C, hp.batch, hp.seq_len)), jnp.int32),
+                "loss_mask": jnp.ones((C, hp.batch, hp.seq_len),
+                                      jnp.float32)}
+               for _ in range(local_steps)]
+    big = {k: jnp.concatenate([b[k] for b in batches], axis=1)
+           for k in batches[0]}
+    key = jax.random.PRNGKey(0)
+
+    ad, ost = sim.client_adapters, sim.opt_state
+    step0 = jnp.zeros((), jnp.int32)
+
+    def one_prod():
+        nonlocal ad, ost, step0
+        t0 = time.perf_counter()
+        ad, ost, _ = step_fn(sim.base, ad, ost, step0, big)
+        jax.block_until_ready(ad)
+        step0 = step0 + local_steps
+        return time.perf_counter() - t0
+
+    def one_sim():
+        t0 = time.perf_counter()
+        sim.run_round(batches, key)
+        jax.block_until_ready(sim.client_adapters)
+        return time.perf_counter() - t0
+
+    one_prod(), one_sim()                       # compile + warm
+    ts_prod, ts_sim = [], []
+    for _ in range(reps):                        # interleave (box noise)
+        ts_prod.append(one_prod())
+        ts_sim.append(one_sim())
+    us_prod, us_sim = min(ts_prod) * 1e6, min(ts_sim) * 1e6
+    ratio = us_prod / us_sim
+    log(f"[perf] fed_round/engine    {us_sim:9.0f}us  "
+        f"({C} clients x {local_steps} steps)")
+    log(f"[perf] fed_round/shardmap  {us_prod:9.0f}us  "
+        f"ratio={ratio:.2f}x vs engine ({len(jax.devices())} devices)")
+    return [{"arch": "fed_round/engine", "us": us_sim, "ratio": 1.0},
+            {"arch": "fed_round/shardmap", "us": us_prod,
+             "ratio": ratio}], ratio
+
+
 def main():
     rows = run()
     fed_rows, speedup = run_fed_round()
     het_rows, het_ratio = run_het_round()
+    dist_rows, dist_ratio = run_dist_round()
     print("name,us_per_call,derived")
     for r in rows:
         print(f"perf/{r['arch']}/fwd,{r['fwd_us']:.0f},smoke_cpu")
         print(f"perf/{r['arch']}/decode,{r['dec_us']:.0f},smoke_cpu")
     for r in fed_rows:
         print(f"perf/{r['arch']},{r['us']:.0f},smoke_cpu")
-    for r in het_rows:
+    for r in het_rows + dist_rows:
         print(f"perf/{r['arch']},{r['us']:.0f},smoke_cpu")
     # ratios, not timings — kept out of the us_per_call column
     print(f"# fed_round speedup (per_step / scan): {speedup:.2f}x")
     print(f"# het_round overhead (het_masked / uniform): {het_ratio:.2f}x")
-    return rows + fed_rows + het_rows
+    print(f"# dist_round overhead (shardmap / engine): {dist_ratio:.2f}x")
+    return rows + fed_rows + het_rows + dist_rows
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ import json
 import os
 import time
 
-ALL = ("table1", "table2", "fig1", "fig3", "perf", "het", "serve",
+ALL = ("table1", "table2", "fig1", "fig3", "perf", "het", "dist", "serve",
        "roofline")
 
 
@@ -85,6 +85,13 @@ def main():
         for r in rows:
             csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},"
                              f"ratio_vs_uniform={r['ratio']:.2f}")
+    if "dist" in which:
+        from benchmarks import perf_micro
+        rows = cached("dist", lambda: perf_micro.run_dist_round()[0])
+        results["dist"] = rows
+        for r in rows:
+            csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},"
+                             f"ratio_vs_engine={r['ratio']:.2f}")
     if "serve" in which:
         from benchmarks import serve_multitenant
         rows = cached("serve", lambda: serve_multitenant.run()[0])

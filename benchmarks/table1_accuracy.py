@@ -9,12 +9,9 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import (BENCH_CFG, bench_base, build_setting,
-                               eval_per_task, PAPER_TASKS)
+from benchmarks.common import BENCH_CFG, bench_base, build_setting
 from repro.core.fedlora import run_federated
-from repro.fed.simulate import FedHyper, FedSim
+from repro.fed.simulate import FedHyper
 
 METHODS = ("fedlora_opt", "lora", "ffa_lora", "prompt", "adapter")
 DATASETS = ("dolly", "ni")
@@ -25,7 +22,6 @@ def run(rounds: int = 6, log=print) -> list[dict]:
     for ds_name in DATASETS:
         base = bench_base(ds_name, log=lambda s: log(f"  {s}"))
         cds, sds, eg, el = build_setting(ds_name)
-        per_task_eval = eval_per_task(None, ds_name)
         for method in METHODS:
             hp = FedHyper(method=method, n_clients=len(cds), rounds=rounds,
                           local_steps=3, batch=8, seq_len=48, lr=3e-3,

@@ -10,14 +10,12 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from benchmarks.common import BENCH_CFG, bench_base, build_setting
 from repro.core.fedlora import run_federated
 from repro.fed.simulate import FedHyper
 from repro.utils import pytree as pt
 from repro.core import peft
-from repro.models import model as M
 
 GRID = [(4, 1), (8, 1), (16, 1), (8, 2), (4, 4)]
 N_TARGETS = {1: ("q_proj",), 2: ("q_proj", "v_proj"),

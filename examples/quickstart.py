@@ -13,8 +13,6 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)
 
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 
 from benchmarks.common import BENCH_CFG, bench_base, build_setting  # noqa: E402
 from repro.core.fedlora import run_federated  # noqa: E402

@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""CI benchmark smoke gate.
+
+Reads the JSON the benchmark harness wrote (``python -m benchmarks.run
+--only perf,het,dist --fresh`` → experiments/bench/) and fails if the
+heterogeneous-round overhead ratio regressed past the bar recorded in
+``benchmarks/baselines/het_round.json`` (the PR-3 seed trajectory).
+
+Exit status is the contract: 0 = within the bar, 1 = regression or
+missing results.  The CI lane uploads experiments/bench/ as an artifact
+either way, so a red run ships the numbers that failed it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(ROOT, "benchmarks", "baselines", "het_round.json")
+RESULTS = os.path.join(ROOT, "experiments", "bench", "het.json")
+
+
+def main() -> int:
+    with open(BASELINE) as f:
+        base = json.load(f)
+    if not os.path.exists(RESULTS):
+        print(f"[check_bench] FAIL: no benchmark results at {RESULTS} — "
+              "run `make bench-smoke` (= `python -m benchmarks.run --only "
+              "perf,het,dist --fresh` + this check) first")
+        return 1
+    with open(RESULTS) as f:
+        rows = json.load(f)
+    het = [r for r in rows if r.get("arch") == "fed_round/het_masked"]
+    if not het:
+        print(f"[check_bench] FAIL: no fed_round/het_masked row in {RESULTS}")
+        return 1
+    ratio = float(het[0]["ratio"])
+    bar = float(base["max_ratio"])
+    recorded = base["recorded"]
+    print(f"[check_bench] het-round ratio {ratio:.2f}x "
+          f"(bar {bar:.2f}x; recorded {recorded['ratio']:.2f}x in "
+          f"PR {recorded['pr']})")
+    if ratio > bar:
+        print("[check_bench] FAIL: masked mixed-rank round regressed past "
+              "the bar — the het fleet is paying more than rank-mask "
+              "elementwise work on top of the uniform round")
+        return 1
+    print("[check_bench] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,14 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): the full test suite with src on PYTHONPATH.
 #
-#   scripts/ci.sh              # full suite (includes serving + het tests)
+#   scripts/ci.sh              # full suite (includes serving + het + dist)
 #   scripts/ci.sh --serve      # fast path: multi-tenant serving subsystem
 #                              # only (BGMV kernel, AdapterStore, engine)
 #   scripts/ci.sh --het        # heterogeneous-rank subsystem: aggregation
 #                              # property suite, mixed-rank round/serving
 #                              # parity, het checkpoint coverage
-#   scripts/ci.sh --fast       # tier-1 minus the slow property/parity
-#                              # sweeps (-m 'not slow')
+#   scripts/ci.sh --dist       # distributed subsystem: shard_map collective
+#                              # round vs FedSim parity sweeps on 8 virtual
+#                              # host devices (tests spawn their own
+#                              # subprocess with the XLA flag)
+#   scripts/ci.sh --fast       # tier-1 minus the slow sweeps and the
+#                              # multi-device dist tests
+#                              # (-m 'not slow and not dist')
+#
+# Markers (slow, dist) are registered in pyproject.toml.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -24,9 +31,20 @@ case "${1:-}" in
       tests/test_het_ckpt.py tests/test_methods.py \
       tests/test_batched_lora.py tests/test_serve_engine.py "$@"
     ;;
+  --dist)
+    shift
+    # the multi-device tests re-exec themselves in a subprocess under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 (XLA locks the
+    # device count at first init, and conftest keeps the parent process
+    # single-device on purpose)
+    exec python -m pytest -x -q -m dist tests/test_distributed.py "$@"
+    ;;
   --fast)
     shift
-    exec python -m pytest -x -q -m "not slow" "$@"
+    # dist excluded too: the multi-device subprocess tests are the dist
+    # lane's job (on new jax they compile multi-device programs for
+    # minutes and would double up the matrix's heaviest work)
+    exec python -m pytest -x -q -m "not slow and not dist" "$@"
     ;;
 esac
 exec python -m pytest -x -q "$@"

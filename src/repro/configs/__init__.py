@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 
-from repro.models.config import ArchConfig, reduced
+from repro.models.config import ArchConfig
 
 ARCH_IDS = [
     "jamba-v0.1-52b",

@@ -16,6 +16,8 @@ in ``comm_bytes_per_round``.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -281,3 +283,126 @@ def client_adapters_leaf(path, new_leaf, client_adapters, rx):
             node = node[k]
         return node
     return new_leaf
+
+
+# ---------------------------------------------------------------------------
+# collective forms (the distributed aggregation engine)
+# ---------------------------------------------------------------------------
+#
+# Every aggregator above consumes a *client-stacked* tree — the layout the
+# single-process engine (fed/simulate.py) materializes.  The production
+# shard_map train step (launch/train.py) never holds that stack: each
+# client's adapters live on its own shard, and aggregation must be a
+# cross-shard collective issued from inside the manual region.  A
+# ``CollectiveAgg`` is that shard_map-expressible form.  Two comm classes:
+#
+#   psum        weighted psum of updates over psum of weights — one
+#               all-reduce of adapter bytes.  Covers the whole mean
+#               family (fedavg / decomposed / zeropad / excluding) and,
+#               with per-row coverage masks, replication_fedavg.
+#   all_gather  stack the factors back on every shard, then run the SAME
+#               host aggregator the simulator jits (exact_fedavg's
+#               QR+truncated-SVD re-factorization, trimmed_fedavg's order
+#               statistics — neither is expressible as an all-reduce).
+#               C× the comm of psum, compute replicated per shard; the
+#               payload is adapter-sized, so both stay trivially small
+#               next to one microbatch of activations.
+#
+# Parity with the host aggregators is by construction for the gather
+# class (same function, same bits in) and by algebra for the psum class
+# (Σ wᵢxᵢ / Σ wᵢ with w normalized on one side and not the other — equal
+# up to f32 rounding, which the 8-device parity sweep pins).
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveAgg:
+    """A shard_map-expressible collective form of a client aggregator.
+
+    Called inside the manual region with this shard's adapter tree (no
+    client axis), the mesh axis names that enumerate clients, this
+    client's scalar data weight, and this client's per-leaf rank-coverage
+    masks (1.0 everywhere on uniform fleets).  Returns the aggregated
+    tree, replicated across shards.
+    """
+    kind: str            # "wmean" | "coverage" | "gather_exact" | "gather_trimmed"
+    comm: str            # "psum" | "all_gather" — comm class (docs/accounting)
+    trim_ratio: float = 0.0
+
+    def __call__(self, adapters: Params, *, axes, weight, cover=None):
+        if self.kind == "wmean":
+            den = jax.lax.psum(weight, axes)
+            return jax.tree.map(
+                lambda x: jax.lax.psum(x * weight, axes) / den, adapters)
+        if self.kind == "coverage":
+            def one(x, c):
+                num = jax.lax.psum(x * c * weight, axes)
+                den = jax.lax.psum(c * weight, axes)
+                return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+            return jax.tree.map(one, adapters, cover)
+        gathered = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axes, axis=0, tiled=False),
+            adapters)
+        if self.kind == "gather_trimmed":
+            return trimmed_fedavg(gathered, trim_ratio=self.trim_ratio)
+        if self.kind == "gather_exact":
+            w_all = jax.lax.all_gather(weight, axes, axis=0, tiled=False)
+            return exact_fedavg(gathered, w_all)
+        raise ValueError(f"unknown collective kind {self.kind!r}")
+
+
+WMEAN = CollectiveAgg(kind="wmean", comm="psum")
+COVERAGE = CollectiveAgg(kind="coverage", comm="psum")
+GATHER_EXACT = CollectiveAgg(kind="gather_exact", comm="all_gather")
+
+
+def gather_trimmed(trim_ratio: float) -> CollectiveAgg:
+    return CollectiveAgg(kind="gather_trimmed", comm="all_gather",
+                         trim_ratio=trim_ratio)
+
+
+def collective_form(method) -> CollectiveAgg:
+    """Resolve a FedMethod's collective form.
+
+    An explicit ``method.collective`` wins; otherwise the host aggregate
+    fn maps to its known collective.  Raises for aggregators with no
+    registered collective form — a method must never silently train with
+    different math than the simulator (register a ``CollectiveAgg`` on
+    the method to extend the production path).
+    """
+    if getattr(method, "collective", None) is not None:
+        return method.collective
+    a = method.aggregate
+    if a in (fedavg, decomposed_fedavg, zeropad_fedavg):
+        return WMEAN
+    if a is replication_fedavg:
+        return COVERAGE
+    if a is exact_fedavg:
+        return GATHER_EXACT
+    if isinstance(a, functools.partial) and not a.args:
+        # a partial only maps to a collective when every baked-in keyword
+        # is one the collective honors — anything else (baked weights, a
+        # custom r_out, pre-bound ranks) would make the production path
+        # silently train with different math than the simulator
+        kw = set(a.keywords)
+        if a.func is fedavg_excluding and kw == {"exclude_rx"}:
+            # sound only when the excluded leaves are exactly the
+            # method's keep-local set: the production step's keep-local
+            # restore then overwrites them with each client's own values,
+            # so the (never-used) WMEAN of the excluded leaves is
+            # harmless.  Any other exclude_rx would silently average
+            # leaves the simulator zeroes — refuse those.
+            if a.keywords["exclude_rx"] == method.keep_local:
+                return WMEAN
+        if a.func is trimmed_fedavg and kw <= {"trim_ratio"}:
+            return gather_trimmed(a.keywords.get("trim_ratio", 0.25))
+        if not kw:
+            if a.func in (fedavg, decomposed_fedavg, zeropad_fedavg):
+                return WMEAN
+            if a.func is replication_fedavg:
+                return COVERAGE
+            if a.func is exact_fedavg:
+                return GATHER_EXACT
+    raise ValueError(
+        f"method {method.name!r} has no shard_map collective form; set "
+        "FedMethod.collective (a core.aggregation.CollectiveAgg) to run "
+        "it on the production train step")

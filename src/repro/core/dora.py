@@ -12,7 +12,6 @@ client axis) pass straight through.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 _EPS = 1e-12

@@ -23,8 +23,8 @@ import jax
 import numpy as np
 
 from repro.core.methods import get_method
-from repro.data.loader import client_batch, eval_batches
-from repro.data.synthetic import SyntheticInstructionDataset, TASK_TYPES
+from repro.data.loader import client_batch
+from repro.data.synthetic import SyntheticInstructionDataset
 from repro.fed.simulate import FedSim, FedHyper
 from repro.models.config import ArchConfig
 

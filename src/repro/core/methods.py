@@ -73,6 +73,12 @@ class FedMethod:
     # True → ``aggregate`` accepts a ranks=(C,) kwarg (the rank-aware
     # family); the engine partials in the fleet's ranks
     rank_aware: bool = False
+    # shard_map-expressible form of ``aggregate`` for the production
+    # train step (core.aggregation.CollectiveAgg).  None → inferred from
+    # ``aggregate`` by ``aggregation.collective_form`` (covers the whole
+    # built-in family); set explicitly when registering a method with a
+    # custom aggregator so it can run on launch/train.py.
+    collective: Optional[agg.CollectiveAgg] = None
     description: str = ""
 
     def stage_global_mask(self, adapters: Params) -> Params:
@@ -184,6 +190,7 @@ register(FedMethod(
     make_adapter=partial(peft.add_lora, decomposed=False),
     train_mask=peft.mask_all,
     aggregate=partial(agg.trimmed_fedavg, trim_ratio=0.25),
+    collective=agg.gather_trimmed(0.25),
     description=("LoRA + coordinate-wise trimmed-mean aggregation — "
                  "robust to adversarial/outlier clients (cf. Koo et al.)"),
 ))
@@ -206,6 +213,7 @@ register(FedMethod(
     make_adapter=partial(peft.add_lora, decomposed=False),
     train_mask=peft.mask_all,
     aggregate=agg.replication_fedavg,
+    collective=agg.COVERAGE,
     description=("raw LoRA, mixed-rank fleet, coverage-weighted "
                  "(replication-style) averaging — rank row j averages "
                  "only the clients that own it (cf. Koo et al.)"),
@@ -218,6 +226,7 @@ register(FedMethod(
     make_adapter=partial(peft.add_lora, decomposed=False),
     train_mask=peft.mask_all,
     aggregate=agg.exact_fedavg,
+    collective=agg.GATHER_EXACT,
     description=("raw LoRA, mixed-rank fleet, exact Σw·AB aggregation "
                  "via stacked factors + truncated-SVD re-factorization "
                  "(cf. Nguyen et al.)"),

@@ -166,6 +166,41 @@ def rank_axis(path: str) -> int | None:
     return _RANK_AXIS.get(path.rsplit("/", 1)[-1])
 
 
+def fleet_alloc_rank(client_ranks, n_clients: int,
+                     server_rank: int = 0) -> int:
+    """Validate a heterogeneous fleet's per-client ranks and return the
+    allocation rank (server_rank, or the fleet max when 0).  The one
+    source of truth for fleet-shape errors — shared by the simulator
+    (fed/simulate.py) and the production train step (launch/train.py) so
+    both paths reject the same bad fleets with the same message."""
+    client_ranks = tuple(int(r) for r in client_ranks)
+    if len(client_ranks) != n_clients:
+        raise ValueError(
+            f"client_ranks has {len(client_ranks)} entries for "
+            f"{n_clients} clients")
+    if min(client_ranks) < 1:
+        raise ValueError(f"client ranks must be >= 1, got {client_ranks}")
+    alloc = int(server_rank or max(client_ranks))
+    if alloc < max(client_ranks):
+        raise ValueError(
+            f"server_rank {server_rank} is below the fleet max "
+            f"{max(client_ranks)}")
+    return alloc
+
+
+def validate_client_weights(client_weights, n_clients: int) -> None:
+    """Validate per-client data-size aggregation weights — shared by the
+    simulator (FedHyper.client_weights) and the production train step
+    (TrainSettings.client_weights) so both reject the same bad fleets."""
+    if len(client_weights) != n_clients:
+        raise ValueError(
+            f"client_weights has {len(client_weights)} entries for "
+            f"{n_clients} clients")
+    if min(client_weights) <= 0:
+        raise ValueError(
+            f"client weights must be > 0, got {tuple(client_weights)}")
+
+
 def client_rank_masks(adapters: Params, ranks) -> Params:
     """Per-client 0/1 masks over the rank axis of every adapter leaf.
 

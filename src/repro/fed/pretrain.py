@@ -39,7 +39,7 @@ def pretrain_base(cfg: ArchConfig, dataset: SyntheticInstructionDataset,
 
     @jax.jit
     def step(params, ost, b, i):
-        (l, met), g = jax.value_and_grad(
+        (_, met), g = jax.value_and_grad(
             lambda p: M.loss_and_metrics(p, b, cfg), has_aux=True)(params)
         upd, ost = opt.update(g, ost, params, i)
         return apply_updates(params, upd), ost, met

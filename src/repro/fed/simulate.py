@@ -71,6 +71,10 @@ class FedHyper:
     # re-factorization can hold more of Σ wᵢ·AᵢBᵢ — at r_server ≥ Σ rᵢ
     # it is exact.  Ignored on uniform fleets.
     server_rank: int = 0
+    # Per-client data-size aggregation weights (len == n_clients); None →
+    # uniform.  Threaded into the method's aggregate fn (every aggregator
+    # accepts ``weights``; trimmed-mean ignores them by contract).
+    client_weights: tuple = None
 
 
 class FedSim:
@@ -94,18 +98,8 @@ class FedSim:
                     f"method {self.method.name!r} has no rank dimension "
                     "(het_ranks=False); client_ranks requires a "
                     "LoRA-family method")
-            if len(hp.client_ranks) != hp.n_clients:
-                raise ValueError(
-                    f"client_ranks has {len(hp.client_ranks)} entries for "
-                    f"{hp.n_clients} clients")
-            if min(hp.client_ranks) < 1:
-                raise ValueError(f"client ranks must be >= 1, got "
-                                 f"{hp.client_ranks}")
-            self.alloc_rank = int(hp.server_rank or max(hp.client_ranks))
-            if self.alloc_rank < max(hp.client_ranks):
-                raise ValueError(
-                    f"server_rank {hp.server_rank} is below the fleet max "
-                    f"{max(hp.client_ranks)}")
+            self.alloc_rank = peft.fleet_alloc_rank(
+                hp.client_ranks, hp.n_clients, hp.server_rank)
             self._client_ranks = jnp.asarray(hp.client_ranks, jnp.int32)
             ad = self.method.make_adapter(self.base, cfg, r_ad,
                                           rank=self.alloc_rank)
@@ -255,6 +249,10 @@ class FedSim:
             ranks = (self._client_ranks if self._client_ranks is not None
                      else jnp.full((C,), self.alloc_rank, jnp.int32))
             agg_fn = partial(agg_fn, ranks=ranks)
+        if hp.client_weights is not None:
+            peft.validate_client_weights(hp.client_weights, C)
+            agg_fn = partial(agg_fn, weights=jnp.asarray(
+                hp.client_weights, jnp.float32))
         self._agg = jax.jit(agg_fn)
 
     # ------------------------------------------------------------------
@@ -311,6 +309,17 @@ class FedSim:
         if self.method.prox:
             self._round_ref = bcast
         return aggregated
+
+    def run_round(self, batches: list[dict], rng) -> dict:
+        """One full federated round — stage-1 local training followed by
+        the method's aggregation/rebroadcast.  This is the parity oracle
+        the distributed tests compare the production shard_map round
+        (launch/train.make_fed_train_step) against: after this call,
+        ``self.client_adapters`` must match the train step's output
+        adapters for the same initial state and batches."""
+        mets = self.local_round(batches, rng)
+        self.aggregate()
+        return mets
 
     @staticmethod
     def _leaf(tree, path):

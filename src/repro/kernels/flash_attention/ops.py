@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401  (re-exported via repro.kernels)
 
 
 def _on_tpu() -> bool:

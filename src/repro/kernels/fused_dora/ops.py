@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.fused_dora.fused_dora import fused_dora_matmul
-from repro.kernels.fused_dora.ref import fused_dora_ref
+from repro.kernels.fused_dora.ref import fused_dora_ref  # noqa: F401  (re-exported via repro.kernels)
 
 
 def _on_tpu() -> bool:

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan_bh
-from repro.kernels.ssd_scan.ref import ssd_ref, ssd_naive
+from repro.kernels.ssd_scan.ref import ssd_ref, ssd_naive  # noqa: F401  (re-exported via repro.kernels)
 
 
 def _on_tpu() -> bool:

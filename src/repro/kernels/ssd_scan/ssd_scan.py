@@ -35,12 +35,12 @@ def _kernel(alog_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, st_ref,
     Bm = b_ref[0].astype(jnp.float32)              # (Q, N)
     Cm = c_ref[0].astype(jnp.float32)              # (Q, N)
     a = -jnp.exp(alog_ref[0]) * dt                 # (Q,) log-decay
-    l = jnp.cumsum(a)                              # (Q,)
+    ld = jnp.cumsum(a)                             # (Q,)
     xdt = x * dt[:, None]
 
     # intra-chunk: (C Bᵀ ∘ L) xdt   with L[i,j] = exp(l_i − l_j)·[i ≥ j]
-    li = l[:, None]
-    lj = l[None, :]
+    li = ld[:, None]
+    lj = ld[None, :]
     tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
         jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
     decay = jnp.where(tri, jnp.exp(li - lj), 0.0)
@@ -50,13 +50,13 @@ def _kernel(alog_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, st_ref,
                             preferred_element_type=jnp.float32)
 
     # inter-chunk: y += (C ∘ exp(l)) @ state_prev      state: (N, P)
-    y += jax.lax.dot_general(Cm * jnp.exp(l)[:, None], state_ref[...],
+    y += jax.lax.dot_general(Cm * jnp.exp(ld)[:, None], state_ref[...],
                              (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
 
     # state update: state = exp(l_Q)·state + (B ∘ exp(l_Q − l))ᵀ @ xdt
-    lQ = l[Q - 1]
-    seg = jnp.exp(lQ - l)
+    lQ = ld[Q - 1]
+    seg = jnp.exp(lQ - ld)
     state_ref[...] = jnp.exp(lQ) * state_ref[...] + jax.lax.dot_general(
         Bm * seg[:, None], xdt, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)

@@ -28,8 +28,6 @@ from repro.launch.mesh import make_production_mesh, dp_size, data_axes
 from repro.launch.serve import make_prefill_step, make_decode_step
 from repro.launch.train import (TrainSettings, make_fed_train_step,
                                 pick_micro_batches)
-from repro.models import model as M
-from repro.utils.sharding import DEFAULT_PARAM_RULES
 from repro.utils import pytree as pt
 
 

@@ -101,7 +101,6 @@ def cache_specs(cfg: ArchConfig, mesh, tree, batch: int,
 
     def fn(path, x):
         shp = x.shape
-        stacked = len(shp) >= 5 or (len(shp) == 4 and "conv" in path)
         if path.endswith("/k") or path.endswith("/v"):
             # (n_sb?, B, S, K, dh)
             B, S, K, dh = shp[-4], shp[-3], shp[-2], shp[-1]

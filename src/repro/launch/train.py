@@ -4,39 +4,58 @@ TPU-native mapping of the paper's round (DESIGN.md §4):
 
   · clients ↔ slices of the ('pod','data') axes — ONE client per data
     shard; each client's decomposed-LoRA adapters live only on its shard;
-  · local SGD ↔ per-shard grad/update inside a shard_map that is MANUAL
-    over ('pod','data') and AUTO over 'model' (XLA still does tensor
-    parallelism inside each client);
-  · aggregation (Eqs. 5–8) ↔ an explicit jax.lax.pmean over the data axes
-    of the decomposed components — the only cross-client (and the only
-    cross-pod) traffic, a few MB of adapter state;
-  · ΔB_M stays client-local (personalization is never averaged).
+  · local SGD ↔ per-shard grad/update steps inside a shard_map that is
+    MANUAL over ('pod','data') and AUTO over 'model' (XLA still does
+    tensor parallelism inside each client);
+  · aggregation ↔ the method's *collective form* (core.aggregation
+    .CollectiveAgg) issued from inside the manual region — a weighted
+    psum for the mean family, a per-row coverage-weighted psum for
+    replication averaging, an all_gather of the stacked factors followed
+    by QR/truncated-SVD re-factorization for exact aggregation.  The only
+    cross-client (and the only cross-pod) traffic, a few MB of adapter
+    state;
+  · per-client state (the paper's personal ΔB_M, FedALT's individual
+    pair) never crosses shards: keep-local leaves are restored from the
+    shard's own values after the collective;
+  · heterogeneous fleets ride the same program: per-client rank masks
+    (peft.client_rank_masks) zero update rows above each client's rank
+    and re-mask the rebroadcast inside the manual region;
+  · FedProx's proximal anchor is the shard's round-start adapters — a
+    per-shard leaf captured by the local-step scan, no extra state.
 
-Gradient accumulation: the per-client batch is split into micro-batches
-(a lax.scan, so HLO stays one body deep) so scan-boundary activations of
-an 88-layer model fit HBM; LoRA grads are accumulated in f32.
+One train_step call is one federated ROUND: ``settings.local_steps``
+optimizer steps per client, then one aggregation.  Every method in the
+core.methods registry trains with the same math here as in the
+single-process simulator (fed/simulate.py) — the 8-device parity sweep
+in tests/test_distributed.py pins shard_map round == FedSim round for
+all of them, mixed-rank and weighted fleets included.
+
+Gradient accumulation: each local step's batch is split into
+micro-batches (a lax.scan, so HLO stays one body deep) so scan-boundary
+activations of an 88-layer model fit HBM; LoRA grads are accumulated in
+f32.
 """
 from __future__ import annotations
 
 import dataclasses
 import re
 from functools import partial
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-import functools
-
 from repro.core import aggregation as fedagg
+from repro.core import peft
 from repro.core.methods import get_method
-from repro.launch.mesh import data_axes, dp_size
+from repro.launch.mesh import data_axes, dp_size, shard_map_compat
 from repro.models import model as M
 from repro.models.config import ArchConfig
 from repro.optim import adamw, masked
 from repro.optim.optimizers import apply_updates, clip_by_global_norm
 from repro.utils import pytree as pt
+from repro.utils import sharding as shd
 
 Params = Any
 
@@ -50,8 +69,22 @@ class TrainSettings:
     # stage: which components train (paper pipeline stages)
     stage: str = "local_pretrain"   # | "global" | "local"
     # federated method (core.methods registry) — drives the adapter
-    # factory, the per-stage trainable mask, and the keep-local leaves
+    # factory, the per-stage trainable mask, the keep-local leaves, and
+    # the collective aggregation form
     method: str = "fedlora_opt"
+    # local optimizer steps per round (per train_step call); the batch
+    # carries local_steps × per-step-batch rows per client, step-major
+    local_steps: int = 1
+    # FedProx proximal coefficient (only consulted for prox methods)
+    prox_mu: float = 0.0
+    # Heterogeneous fleet: one LoRA rank per client (len == dp_size(mesh));
+    # None → uniform at cfg.lora_rank.  Mirrors FedHyper.client_ranks.
+    client_ranks: Optional[tuple] = None
+    # server-side allocation rank for a heterogeneous fleet (0 → fleet max)
+    server_rank: int = 0
+    # per-client data-size aggregation weights (len == dp_size(mesh));
+    # None → uniform.  Mirrors FedHyper.client_weights.
+    client_weights: Optional[tuple] = None
 
 
 def pick_micro_batches(cfg: ArchConfig, per_client_batch: int,
@@ -65,20 +98,6 @@ def pick_micro_batches(cfg: ArchConfig, per_client_batch: int,
     while per_client_batch % micro:
         micro += 1
     return min(micro, per_client_batch)
-
-
-def _pmean_equivalent(method) -> bool:
-    """True when the method's aggregate is a plain client mean (what the
-    shard_map pmean computes) — directly, or via fedavg_excluding whose
-    excluded leaves the keep-local restore keeps per-client anyway.
-    ``zeropad_fedavg`` qualifies too: mixed-rank adapters live zero-padded
-    at r_max, so the pmean over padded trees IS zero-pad averaging."""
-    a = method.aggregate
-    if a in (fedagg.fedavg, fedagg.decomposed_fedavg, fedagg.zeropad_fedavg):
-        return True
-    return (isinstance(a, functools.partial)
-            and a.func is fedagg.fedavg_excluding
-            and a.keywords.get("exclude_rx") == method.keep_local)
 
 
 def _stage_mask(method, adapters, stage: str):
@@ -96,8 +115,20 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
             → (adapters, opt_state, metrics)
 
     base: global param tree (model-sharded, replicated over data axes).
-    adapters: leading client axis C = dp_size(mesh), sharded 1-per-shard.
-    batch: {"tokens": (C, B_c, S), ...} sharded likewise.
+    adapters: leading client axis C = dp_size(mesh), sharded 1-per-shard
+    (for a heterogeneous fleet, allocated at the server rank and already
+    rank-masked, as FedSim lays them out).
+    batch: {"tokens": (C, local_steps·B_c, S), ...} sharded likewise,
+    step-major: local step t consumes rows [t·B_c, (t+1)·B_c).
+    step: global local-step counter; one call advances it by
+    ``settings.local_steps``, so the caller passes step + local_steps to
+    the next call (the optimizer's bias-correction schedule matches the
+    simulator's per-step counter).
+
+    No rng is threaded into the loss, so adapter dropout is NOT applied
+    here (the simulator applies it per step when cfg.lora_dropout > 0);
+    the parity contract with FedSim — and the paper's fine-tuning
+    setting — is lora_dropout = 0.
     """
     if cfg.use_fused_dora:
         raise ValueError(
@@ -105,73 +136,115 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
             "defines no VJP); the train step requires the jnp adapter path")
     daxes = data_axes(mesh)
     dp = dp_size(mesh)
-    bspec = daxes if len(daxes) > 1 else daxes[0]
     micro = settings.micro_batches
+    T = settings.local_steps
     is_moe = cfg.n_experts > 0
     method = get_method(settings.method)
     keep_rx = re.compile(method.keep_local) if method.keep_local else None
-    # this step's cross-client collective is a pmean with keep-local
-    # leaves restored — i.e. client-weighted FedAvg.  Refuse methods whose
-    # aggregation or loss semantics that collective cannot express, so a
-    # method never silently trains with different math than the simulator.
-    if method.prox or not _pmean_equivalent(method):
-        raise ValueError(
-            f"method {method.name!r} needs aggregation/loss semantics "
-            "(custom aggregate or proximal term) that the pmean-based "
-            "production train step does not implement; use fed/simulate.py "
-            "or extend make_fed_train_step")
+    # the method's cross-client collective — resolving it here (not at
+    # step time) means an aggregator with no shard_map form fails fast,
+    # never silently training with different math than the simulator
+    collective = fedagg.collective_form(method)
+    prox_mu = settings.prox_mu if method.prox else 0.0
 
-    def client_body(base, adapters, opt_state, step, batch):
+    # ---- fleet layout: ranks, coverage masks, aggregation weights ------
+    het = settings.client_ranks is not None
+    if het:
+        if not method.het_ranks:
+            raise ValueError(
+                f"method {method.name!r} has no rank dimension "
+                "(het_ranks=False); client_ranks requires a LoRA-family "
+                "method")
+        alloc_rank = peft.fleet_alloc_rank(settings.client_ranks, dp,
+                                           settings.server_rank)
+        ranks = jnp.asarray(settings.client_ranks, jnp.int32)
+    else:
+        alloc_rank = cfg.lora_rank
+        ranks = jnp.full((dp,), alloc_rank, jnp.int32)
+    if settings.client_weights is not None:
+        peft.validate_client_weights(settings.client_weights, dp)
+        weight_c = jnp.asarray(settings.client_weights, jnp.float32)
+    else:
+        weight_c = jnp.ones((dp,), jnp.float32)
+
+    def client_body(base, adapters, opt_state, step0, batch, weight, covers):
         # ---- inside the manual region: one client per shard -------------
         adapters = jax.tree.map(lambda x: x[0], adapters)   # drop C axis
         opt_state = jax.tree.map(lambda x: x[0], opt_state)
         batch = {k: v[0] for k, v in batch.items()}
+        w = weight[0]
+        cover = jax.tree.map(lambda x: x[0], covers)
         mesh_tag = ("manual", mesh.shape["data"]) if is_moe else None
+        # FedProx anchor: this shard's round-start adapters, captured as
+        # a per-shard leaf by the local-step scan below
+        anchor = adapters
 
         def loss_fn(ad, mb):
             params = pt.merge_trees(base, ad)
             loss, met = M.loss_and_metrics(params, mb, cfg,
                                            mesh=mesh_tag,
                                            remat=settings.remat)
+            if prox_mu:
+                d = pt.tree_sub(ad, anchor)
+                loss = loss + 0.5 * prox_mu * pt.tree_dot(d, d)
             return loss, met
 
-        # gradient accumulation over micro-batches via lax.scan: one HLO
-        # body regardless of depth (an unrolled loop made 88-layer compiles
+        # batch rows: step-major, then micro-batched.  Gradient
+        # accumulation over micro-batches via lax.scan: one HLO body
+        # regardless of depth (an unrolled loop made 88-layer compiles
         # explode), forward-only carry (grads), no cross-step residuals.
         B_c = batch["tokens"].shape[0]
-        mb_sz = B_c // micro
-        mbatch = {k: v.reshape((micro, mb_sz) + v.shape[1:])
+        if B_c % (T * micro):
+            raise ValueError(
+                f"per-client batch {B_c} is not divisible by local_steps "
+                f"({T}) x micro_batches ({micro})")
+        mb_sz = B_c // (T * micro)
+        sbatch = {k: v.reshape((T, micro, mb_sz) + v.shape[1:])
                   for k, v in batch.items()}
-        g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
-                          adapters)
 
-        def acc_body(g_acc, mb):
-            (_, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                adapters, mb)
-            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
-                                 g_acc, g)
-            return g_acc, met
+        def local_step(carry, sb):
+            ad, ost, step = carry
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), ad)
 
-        g_acc, mets = jax.lax.scan(acc_body, g0, mbatch)
-        met_acc = jax.tree.map(lambda x: jnp.sum(x, axis=0), mets)
-        g_acc = jax.tree.map(lambda x: x / micro, g_acc)
-        g_acc = clip_by_global_norm(g_acc, settings.clip)
+            def acc_body(g_acc, mb):
+                (_, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    ad, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return g_acc, met
 
-        upd, opt_state = opt.update(g_acc, opt_state, adapters, step)
-        adapters = apply_updates(adapters, upd)
+            g_acc, mets = jax.lax.scan(acc_body, g0, sb)
+            g_acc = jax.tree.map(lambda x: x / micro, g_acc)
+            g_acc = clip_by_global_norm(g_acc, settings.clip)
+            upd, ost = opt.update(g_acc, ost, ad, step)
+            if het:
+                # heterogeneous fleet: zero the update rows above this
+                # client's rank (adapters are allocated at the server rank)
+                upd = jax.tree.map(jnp.multiply, upd, cover)
+            ad = apply_updates(ad, upd)
+            met = jax.tree.map(lambda x: jnp.sum(x, axis=0) / micro, mets)
+            return (ad, ost, step + 1), met
 
-        # ---- decomposed aggregation (Eqs. 5-8): pmean of every component
-        # EXCEPT the method's keep-local leaves (the paper: personal ΔB_M)
-        # — the only cross-client collective.
-        agg = jax.tree.map(lambda x: jax.lax.pmean(x, daxes), adapters)
-        adapters = (_select_personal(adapters, agg, keep_rx)
-                    if keep_rx is not None else agg)
-        met_acc = jax.tree.map(lambda x: jax.lax.pmean(x / micro, daxes),
-                               met_acc)
+        (adapters, opt_state, _), mets = jax.lax.scan(
+            local_step, (adapters, opt_state, step0), sbatch)
 
-        adapters = jax.tree.map(lambda x: x[None], adapters)
+        # ---- the method's collective aggregation: the only cross-client
+        # (and only cross-pod) traffic.  Keep-local leaves (the paper's
+        # personal ΔB_M, FedALT's individual pair) are restored from this
+        # shard's own post-round values — personalization never crosses
+        # shards.
+        agg = collective(adapters, axes=daxes, weight=w, cover=cover)
+        out = (_select_personal(adapters, agg, keep_rx)
+               if keep_rx is not None else agg)
+        if het:
+            # rebroadcast re-mask: a rank-r client receives the first r
+            # rank rows of the aggregate (matches FedSim's rebroadcast)
+            out = jax.tree.map(jnp.multiply, out, cover)
+        met_last = jax.tree.map(lambda m: jax.lax.pmean(m[-1], daxes), mets)
+
+        out = jax.tree.map(lambda x: x[None], out)
         opt_state = jax.tree.map(lambda x: x[None], opt_state)
-        return adapters, opt_state, met_acc
+        return out, opt_state, met_last
 
     def _select_personal(local, agg, rx):
         return pt.tree_map_with_path(
@@ -184,31 +257,40 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
             node = node[k]
         return node
 
-    # trainable mask from an abstract adapter tree
+    # abstract adapter tree (drives the trainable mask, the shard specs,
+    # and the per-client coverage masks); heterogeneous fleets allocate
+    # at the server rank, exactly as FedSim does
+    mk = (partial(method.make_adapter, rank=alloc_rank) if het
+          else method.make_adapter)
     abs_ad = jax.eval_shape(
-        lambda: method.make_adapter(abstract_base(cfg), cfg,
-                                    jax.random.PRNGKey(0)))
+        lambda: mk(abstract_base(cfg), cfg, jax.random.PRNGKey(0)))
     mask = _stage_mask(method, abs_ad, settings.stage)
     opt = masked(adamw(settings.lr), mask)
+    # per-client coverage masks over the rank axis of every leaf; on a
+    # uniform fleet these are all-ones (and unused outside the coverage
+    # collective), so the uniform program pays nothing
+    covers_c = peft.client_rank_masks(abs_ad, ranks)
 
-    ad_spec = jax.tree.map(lambda _: P(bspec), abs_ad)
+    ad_spec = shd.client_specs(abs_ad, mesh)
     ost_abs = jax.eval_shape(opt.init, abs_ad)
-    ost_spec = jax.tree.map(lambda _: P(bspec), ost_abs)
+    ost_spec = shd.client_specs(ost_abs, mesh)
+    cov_spec = shd.client_specs(covers_c, mesh)
+    w_spec = P(shd.client_axis(mesh))
 
     def batch_spec_of(batch):
-        return {k: P(bspec) for k in batch}
+        return {k: P(shd.client_axis(mesh)) for k in batch}
 
     def train_step(base, adapters, opt_state, step, batch):
-        body = jax.shard_map(
-            partial(client_body),
-            mesh=mesh,
+        body = shard_map_compat(
+            client_body,
+            mesh,
             in_specs=(base_manual_specs(base, cfg), ad_spec, ost_spec, P(),
-                      batch_spec_of(batch)),
+                      batch_spec_of(batch), w_spec, cov_spec),
             out_specs=(ad_spec, ost_spec, P()),
-            axis_names=set(daxes),
-            check_vma=False,
+            manual_axes=daxes,
         )
-        return body(base, adapters, opt_state, step, batch)
+        return body(base, adapters, opt_state, step, batch, weight_c,
+                    covers_c)
 
     def opt_init(adapters_c):
         return jax.vmap(opt.init)(adapters_c)

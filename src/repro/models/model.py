@@ -14,13 +14,11 @@ Entry points:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import layers as L
 from repro.models import ssm as S

@@ -70,10 +70,10 @@ def _ssd_chunked(x, dt, A_log, B, C, chunk: int):
     Bc, Cc = shp(Bh, H, N), shp(Ch, H, N)
 
     # intra-chunk: cumulative log-decay within chunk
-    l = jnp.cumsum(ac, axis=2)                             # (b,nc,Q,H)
+    ld = jnp.cumsum(ac, axis=2)                            # (b,nc,Q,H)
     # L[i,j] = exp(l_i - l_j) for i >= j else 0
-    li = l[:, :, :, None, :]                               # (b,nc,Q,1,H)
-    lj = l[:, :, None, :, :]                               # (b,nc,1,Q,H)
+    li = ld[:, :, :, None, :]                               # (b,nc,Q,1,H)
+    lj = ld[:, :, None, :, :]                               # (b,nc,1,Q,H)
     tri = jnp.tril(jnp.ones((chunk, chunk), bool))
     decay = jnp.where(tri[None, None, :, :, None],
                       jnp.exp(li - lj), 0.0).astype(cdt)
@@ -82,10 +82,10 @@ def _ssd_chunked(x, dt, A_log, B, C, chunk: int):
                          preferred_element_type=jnp.float32)
 
     # per-chunk end state: sum_j exp(l_last - l_j) B_j x_j^T
-    seg = jnp.exp(l[:, :, -1:, :] - l).astype(cdt)         # (b,nc,Q,H)
+    seg = jnp.exp(ld[:, :, -1:, :] - ld).astype(cdt)         # (b,nc,Q,H)
     states = jnp.einsum("bnjh,bnjhd,bnjhp->bnhdp", seg, Bc, xc,
                         preferred_element_type=jnp.float32)  # (b,nc,H,N,P)
-    chunk_decay = jnp.exp(l[:, :, -1, :])                  # (b,nc,H)
+    chunk_decay = jnp.exp(ld[:, :, -1, :])                  # (b,nc,H)
 
     # inter-chunk recurrence via log-depth associative scan:
     #   S_c = d_c * S_{c-1} + states_c
@@ -100,7 +100,7 @@ def _ssd_chunked(x, dt, A_log, B, C, chunk: int):
     s_in = jnp.concatenate(
         [jnp.zeros_like(scum[:, :1]), scum[:, :-1]], axis=1)   # (b,nc,H,N,P)
     y_inter = jnp.einsum("bnihd,bnih,bnhdp->bnihp",
-                         Cc, jnp.exp(l), s_in)
+                         Cc, jnp.exp(ld), s_in)
     y = (y_intra + y_inter).reshape(b, S, H, Pd)
     final_state = scum[:, -1].transpose(0, 1, 3, 2)         # (b,H,P,N)
     return y, final_state

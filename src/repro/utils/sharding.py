@@ -62,13 +62,35 @@ def tree_specs(tree, rules: Rules, mesh: Mesh):
     )
 
 
+def data_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    """The mesh axes that enumerate data/clients, in collective order —
+    the one source of truth for how federated clients map onto
+    ('pod','data') (launch/mesh.data_axes delegates here)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def client_axis(mesh: Mesh):
+    """The PartitionSpec entry that shards a leading client/batch axis
+    over every data-like mesh axis."""
+    axes = data_axis_names(mesh)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def client_specs(tree, mesh: Mesh):
+    """PartitionSpec pytree placing one client per data shard: every leaf
+    is sharded on its leading client axis (adapters, optimizer state, and
+    per-client aggregation weights/masks in the fed train step all use
+    this layout)."""
+    ax = client_axis(mesh)
+    return jax.tree.map(lambda _: P(ax), tree)
+
+
 def batch_spec(mesh: Mesh, ndim: int, batch_axis: int = 0) -> P:
     """Shard the batch dim over every data-like axis present in the mesh."""
-    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     entries: list[Any] = [None] * ndim
-    entries[batch_axis] = data_axes if len(data_axes) > 1 else (
-        data_axes[0] if data_axes else None
-    )
+    entries[batch_axis] = client_axis(mesh)
     return P(*entries)
 
 

@@ -27,11 +27,8 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers",
-        "slow: long-running property/parity sweeps (tier-1 may deselect "
-        "with -m 'not slow')")
+# markers (slow, dist) are registered in pyproject.toml
+# [tool.pytest.ini_options] — the single place `-m` filters are defined
 
 
 def given_seeds(n_fallback: int = 10, lo: int = 0, hi: int = 2**31 - 1):

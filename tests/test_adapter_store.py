@@ -60,7 +60,7 @@ def test_register_assigns_slots_and_pools(base):
 
 def test_lru_evict_and_slot_reuse(base):
     store = AdapterStore(base, CFG, n_slots=2, kind="pairs")
-    s_a = store.register("a", _raw_adapter(base, 2))
+    store.register("a", _raw_adapter(base, 2))
     s_b = store.register("b", _raw_adapter(base, 3))
     store.slot_of("a")                          # touch a → b becomes LRU
     s_c = store.register("c", _raw_adapter(base, 4))

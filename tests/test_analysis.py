@@ -1,6 +1,4 @@
 """Unit tests for the roofline analysis machinery (no compilation)."""
-import numpy as np
-import pytest
 
 from repro.configs import SHAPES, get_config
 from repro.launch import analysis as AN

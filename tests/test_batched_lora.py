@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import bgmv, bgmv_mag, bgmv_mag_ref, bgmv_ref
+from repro.kernels import bgmv, bgmv_mag
 
 RNG = np.random.default_rng(11)
 

@@ -1,5 +1,20 @@
 """Multi-device tests (8 host devices via subprocess — XLA locks device
-count at first init, so these run in their own interpreter)."""
+count at first init, so these run in their own interpreter).
+
+Two compatibility tiers (see launch/mesh.shard_map_compat):
+
+  · data-only client meshes (make_client_mesh) run the *fully manual*
+    shard_map region — available on every supported jax, including the
+    0.4.x this container ships (jax.experimental.shard_map);
+  · meshes with a tensor-parallel 'model' axis need partial-auto
+    shard_map (jax.shard_map / jax.set_mesh, jax >= 0.6) — those tests
+    skip on older jax.
+
+The collective-parity sweeps are the acceptance gate for the
+distributed aggregation engine: for every method in the registry, one
+production shard_map round must produce the same client adapters as
+``FedSim.run_round`` (mixed-rank and weighted fleets included).
+"""
 import os
 import subprocess
 import sys
@@ -7,18 +22,20 @@ import sys
 import jax
 import pytest
 
-# The multi-device stack targets the jax.shard_map / jax.set_mesh /
-# jax.sharding.AxisType APIs; on older jax (this container ships 0.4.x)
-# those do not exist and these tests cannot run.
-pytestmark = pytest.mark.skipif(
+pytestmark = pytest.mark.dist
+
+# Partial-auto shard_map (manual data axes + auto 'model' axis) targets
+# the jax.shard_map / jax.set_mesh APIs; on older jax (this container
+# ships 0.4.x) those do not exist and the model-parallel tests cannot run.
+NEEDS_PARTIAL_AUTO = pytest.mark.skipif(
     not (hasattr(jax, "shard_map") and hasattr(jax, "set_mesh")),
-    reason="multi-device stack requires jax.shard_map/jax.set_mesh "
+    reason="partial-auto shard_map requires jax.shard_map/jax.set_mesh "
            "(newer jax than installed)")
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def _run(snippet: str, timeout=420):
+def _run(snippet: str, timeout=900):
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH=SRC)
@@ -28,6 +45,166 @@ def _run(snippet: str, timeout=420):
     return r.stdout
 
 
+# ---------------------------------------------------------------------------
+# collective-parity sweep: shard_map round == FedSim.run_round
+# ---------------------------------------------------------------------------
+
+# Shared harness, exec'd inside the 8-device subprocess.  ``run_case``
+# drives ROUNDS production train_step calls against the FedSim oracle on
+# identical initial state/batches and compares final client adapters in
+# f32 (the two paths fuse differently, so ~ulp drift accumulates; the
+# exact method is compared on the product A·B — truncated-SVD *factors*
+# are sign-sensitive to that drift, the aggregate itself is not).
+PARITY_HARNESS = r"""
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_client_mesh
+from repro.launch.train import make_fed_train_step, TrainSettings
+from repro.fed.simulate import FedHyper, FedSim
+from repro.core.methods import available_methods, get_method
+from repro.models.config import ArchConfig
+from repro.utils import pytree as pt
+
+C, T, B, S, ROUNDS = 4, 2, 2, 16, 2
+cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=32, n_heads=2,
+                 n_kv_heads=1, d_ff=64, vocab_size=64, dtype="float32",
+                 lora_rank=4, lora_dropout=0.0)
+mesh = make_client_mesh(C)
+rng = np.random.default_rng(0)
+
+
+def make_batches():
+    return [{"tokens": jnp.asarray(
+                 rng.integers(5, cfg.vocab_size, size=(C, B, S)), jnp.int32),
+             "loss_mask": jnp.ones((C, B, S), jnp.float32)}
+            for _ in range(T)]
+
+
+def compare(name, prod, ref):
+    prod = dict(zip(pt.tree_paths(prod), map(np.asarray, jax.tree.leaves(prod))))
+    ref = dict(zip(pt.tree_paths(ref), map(np.asarray, jax.tree.leaves(ref))))
+    assert set(prod) == set(ref), name
+    if name == "lora_exact":
+        for pref in sorted(p.rsplit("/", 1)[0] for p in prod
+                           if p.endswith("lora_A")):
+            pa, pb = pref + "/lora_A", pref + "/lora_B"
+            np.testing.assert_allclose(
+                np.einsum("c...ir,c...ro->c...io", prod.pop(pa), prod.pop(pb)),
+                np.einsum("c...ir,c...ro->c...io", ref.pop(pa), ref.pop(pb)),
+                rtol=5e-4, atol=5e-5, err_msg=f"{name}:{pref}")
+    for p in sorted(prod):
+        np.testing.assert_allclose(prod[p], ref[p], rtol=2e-4, atol=2e-5,
+                                   err_msg=f"{name}:{p}")
+
+
+def run_case(name, ranks=None, weights=None, prox_mu=0.0):
+    hp = FedHyper(method=name, n_clients=C, local_steps=T, batch=B,
+                  seq_len=S, lr=1e-2, prox_mu=prox_mu, client_ranks=ranks,
+                  client_weights=weights)
+    sim = FedSim(cfg, hp)
+    st = TrainSettings(lr=hp.lr, micro_batches=1, clip=hp.clip, remat=False,
+                       method=name, local_steps=T, prox_mu=prox_mu,
+                       client_ranks=ranks, client_weights=weights)
+    step_fn, _ = make_fed_train_step(cfg, mesh, st)
+    na, no = sim.client_adapters, sim.opt_state
+    step0 = jnp.zeros((), jnp.int32)
+    for r in range(ROUNDS):
+        batches = make_batches()
+        big = {k: jnp.concatenate([b[k] for b in batches], axis=1)
+               for k in batches[0]}
+        # production first: FedSim.local_round donates its buffers, and
+        # round 1 shares them with the production call
+        na, no, met = step_fn(sim.base, na, no, step0, big)
+        sim.run_round(batches, jax.random.PRNGKey(r))
+        step0 = step0 + T
+        assert np.isfinite(float(met["ce"])), (name, r)
+    compare(name, na, sim.client_adapters)
+    print("OK", name, "ranks" if ranks else "", "weights" if weights else "")
+"""
+
+
+@pytest.mark.slow
+def test_collective_parity_all_methods():
+    """Every registry method: production shard_map round == FedSim round
+    on a uniform fleet (2 rounds, so optimizer state and the FedProx
+    anchor survive the round boundary)."""
+    out = _run(PARITY_HARNESS + r"""
+names = available_methods()
+for name in names:
+    m = get_method(name)
+    run_case(name, prox_mu=0.05 if m.prox else 0.0)
+print("SWEPT", len(names))
+""")
+    assert "SWEPT 11" in out, out
+
+
+@pytest.mark.slow
+def test_collective_parity_het_and_weighted_fleets():
+    """Mixed-rank fleets (rank-aware aggregation family + the paper
+    pipeline + FedALT) and data-size-weighted clients run identically on
+    the production path."""
+    out = _run(PARITY_HARNESS + r"""
+run_case("fedlora_opt", ranks=(1, 2, 3, 4))
+run_case("lora_zeropad", ranks=(1, 2, 3, 4))
+run_case("lora_replication", ranks=(1, 2, 3, 4), weights=(1., 2., 3., 4.))
+run_case("lora_exact", ranks=(1, 2, 3, 4), weights=(4., 3., 2., 1.))
+run_case("fedalt", ranks=(2, 4, 4, 2))
+run_case("lora", weights=(1., 2., 3., 4.))
+print("HET-OK")
+""")
+    assert "HET-OK" in out, out
+
+
+def test_fed_train_step_rejects_bad_fleets():
+    """Fleet-shape validation fires at construction (shared with FedSim
+    via peft.fleet_alloc_rank), and aggregators without a collective form
+    are rejected before tracing."""
+    from repro.core import aggregation as fedagg
+    from repro.core.methods import FedMethod
+    from repro.core.peft import fleet_alloc_rank
+    from repro.launch.mesh import make_client_mesh
+    from repro.launch.train import make_fed_train_step, TrainSettings
+    from repro.models.config import ArchConfig
+
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=32,
+                     n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=64,
+                     dtype="float32", lora_rank=4, lora_dropout=0.0)
+    mesh = make_client_mesh(1)
+    with pytest.raises(ValueError, match="entries for"):
+        make_fed_train_step(cfg, mesh, TrainSettings(
+            method="lora", client_ranks=(2, 4)))
+    with pytest.raises(ValueError, match="entries for"):
+        make_fed_train_step(cfg, mesh, TrainSettings(
+            method="lora", client_weights=(1.0, 2.0)))
+    with pytest.raises(ValueError, match="het_ranks=False"):
+        make_fed_train_step(cfg, mesh, TrainSettings(
+            method="prompt", client_ranks=(4,)))
+    with pytest.raises(ValueError, match="below the fleet max"):
+        fleet_alloc_rank((2, 8), 2, server_rank=4)
+    custom = FedMethod(name="custom", make_adapter=lambda *a, **k: {},
+                       train_mask=lambda t: t, aggregate=lambda t: t)
+    with pytest.raises(ValueError, match="no shard_map collective form"):
+        fedagg.collective_form(custom)
+    # fedavg_excluding is only WMEAN-expressible when the excluded leaves
+    # are exactly the keep-local set (the restore overwrites them); any
+    # other exclude_rx would silently average leaves the simulator zeroes
+    import functools
+    mismatched = FedMethod(
+        name="excl", make_adapter=lambda *a, **k: {},
+        train_mask=lambda t: t,
+        aggregate=functools.partial(fedagg.fedavg_excluding,
+                                    exclude_rx=r"foo$"),
+        keep_local=r"bar$")
+    with pytest.raises(ValueError, match="no shard_map collective form"):
+        fedagg.collective_form(mismatched)
+
+
+# ---------------------------------------------------------------------------
+# model-parallel tests (partial-auto shard_map; jax >= 0.6 only)
+# ---------------------------------------------------------------------------
+
+
+@NEEDS_PARTIAL_AUTO
 def test_fed_train_step_dense_and_moe_debug_mesh():
     out = _run("""
 import jax, jax.numpy as jnp
@@ -63,6 +240,7 @@ for fam_kw in [dict(family="dense"), dict(family="moe", n_experts=4, top_k=2)]:
     assert out.count("OK") == 2
 
 
+@NEEDS_PARTIAL_AUTO
 def test_moe_ep_matches_local_math():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
@@ -93,6 +271,7 @@ print("OK")
 """)
 
 
+@NEEDS_PARTIAL_AUTO
 def test_dryrun_tiny_mesh_smoke():
     """The dry-run machinery end-to-end on a small mesh with a reduced
     arch — exercises lower+compile+analysis without the 512-dev cost."""

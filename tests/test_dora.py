@@ -121,8 +121,8 @@ def test_fedavg_linearity():
     a, b = _client_tree(1), _client_tree(2)
     lhs = agg.fedavg(jax.tree.map(lambda x, y: x + y, a, b))
     rhs = jax.tree.map(lambda x, y: x + y, agg.fedavg(a), agg.fedavg(b))
-    for l, r in zip(jax.tree.leaves(lhs), jax.tree.leaves(rhs)):
-        np.testing.assert_allclose(np.asarray(l), np.asarray(r), rtol=1e-5)
+    for lv, rv in zip(jax.tree.leaves(lhs), jax.tree.leaves(rhs)):
+        np.testing.assert_allclose(np.asarray(lv), np.asarray(rv), rtol=1e-5)
 
 
 def test_fedavg_weighted():

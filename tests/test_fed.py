@@ -75,9 +75,9 @@ def test_stage_masks_select_expected_leaves():
     mg = peft.mask_stage_global(ad)
     ml = peft.mask_stage_local(ad)
     paths = pt.tree_paths(ad)
-    for p, g, l in zip(paths, jax.tree.leaves(mg), jax.tree.leaves(ml)):
+    for p, g, lo in zip(paths, jax.tree.leaves(mg), jax.tree.leaves(ml)):
         assert g == p.endswith("dA_dir")
-        assert l == p.endswith("dB_mag")
+        assert lo == p.endswith("dB_mag")
 
 
 def test_global_stage_trains_only_dA_dir():

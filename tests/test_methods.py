@@ -215,7 +215,6 @@ def test_fedalt_local_pair_contributes_to_forward():
 # ---------------------------------------------------------------------------
 
 def test_trimmed_fedavg_drops_outlier_client():
-    C = 4
     x = jnp.asarray(np.stack([np.full((3,), v, np.float32)
                               for v in (1.0, 2.0, 3.0, 1e6)]))
     out = agg.trimmed_fedavg({"w": x}, trim_ratio=0.25)["w"]

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.config import ArchConfig
 from repro.models.layers import moe_ffn_dense_ref, moe_ffn_local

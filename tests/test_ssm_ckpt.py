@@ -8,7 +8,7 @@ import numpy as np
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.models.config import ArchConfig
 from repro.models import model as M
-from repro.models.ssm import _causal_conv, mamba2_mixer, init_ssm_cache
+from repro.models.ssm import _causal_conv, mamba2_mixer
 
 CFG = ArchConfig(name="s", family="ssm", n_layers=1, d_model=32, n_heads=1,
                  n_kv_heads=1, d_ff=0, vocab_size=64, dtype="float32",
