@@ -33,5 +33,5 @@ serve-bench:
 # the CI benchmark smoke job, locally: micro entries + regression check
 # against the checked-in trajectory (benchmarks/baselines/)
 bench-smoke:
-	PYTHONPATH=src python -m benchmarks.run --only perf,het,dist --fresh
+	PYTHONPATH=src python -m benchmarks.run --only perf,het,dist,pipeline --fresh
 	PYTHONPATH=src python scripts/check_bench.py

@@ -230,24 +230,117 @@ def run_dist_round(log=print, local_steps: int = 5, reps: int = 6):
              "ratio": ratio}], ratio
 
 
+def run_pipeline(log=print, local_steps: int = 3, global_steps: int = 2,
+                 personal_steps: int = 2, reps: int = 5):
+    """Full three-stage paper pipeline: the shard_map pipeline engine
+    (launch/train.make_fed_pipeline_step — stage-1 round + collective,
+    stage-2 global optimizer on replicated server batches, stage-3
+    per-client personalization) vs the FedSim three-stage sequence
+    (run_round → global_stage → personalize) at matched settings, on a
+    data-only client mesh over every visible device.  At 1 device both
+    paths run the same math once, so the ratio isolates the pipeline's
+    dispatch + collective overhead — the bar is ~1.00x."""
+    import jax
+
+    from repro.fed.simulate import FedHyper, FedSim
+    from repro.launch.mesh import make_client_mesh
+    from repro.launch.train import TrainSettings, make_fed_pipeline_step
+
+    C = jax.device_count()
+    hp = FedHyper(method="fedlora_opt", n_clients=C, local_steps=local_steps,
+                  global_steps=global_steps, personal_steps=personal_steps,
+                  batch=8, seq_len=64)
+    sim = FedSim(FED_CFG, hp)
+    mesh = make_client_mesh(C)
+    st = TrainSettings(lr=hp.lr, micro_batches=1, clip=hp.clip, remat=False,
+                       method=hp.method, local_steps=local_steps,
+                       server_lr=hp.server_lr, global_steps=global_steps,
+                       personal_steps=personal_steps, lam=hp.lam)
+    pipe = make_fed_pipeline_step(FED_CFG, mesh, st)
+    rng = np.random.default_rng(0)
+
+    def cbatches(n):
+        return [{"tokens": jnp.asarray(
+                    rng.integers(5, FED_CFG.vocab_size,
+                                 size=(C, hp.batch, hp.seq_len)), jnp.int32),
+                 "loss_mask": jnp.ones((C, hp.batch, hp.seq_len),
+                                       jnp.float32)}
+                for _ in range(n)]
+
+    def sbatches(n):
+        return [{"tokens": jnp.asarray(
+                    rng.integers(5, FED_CFG.vocab_size,
+                                 size=(hp.batch, hp.seq_len)), jnp.int32),
+                 "loss_mask": jnp.ones((hp.batch, hp.seq_len), jnp.float32)}
+                for _ in range(n)]
+
+    def flat(bs, axis):
+        return {k: jnp.concatenate([b[k] for b in bs], axis=axis)
+                for k in bs[0]}
+
+    cb, sb, pb = (cbatches(local_steps), sbatches(global_steps),
+                  cbatches(personal_steps))
+    big_c, big_s, big_p = flat(cb, 1), flat(sb, 0), flat(pb, 1)
+    key = jax.random.PRNGKey(0)
+
+    ad, ost = sim.client_adapters, sim.opt_state
+    step0 = jnp.zeros((), jnp.int32)
+
+    def one_prod():
+        nonlocal ad, ost, step0
+        t0 = time.perf_counter()
+        ad, ost, _, _, _ = pipe.run_pipeline(sim.base, ad, ost, step0,
+                                             big_c, big_s, big_p)
+        jax.block_until_ready(ad)
+        step0 = step0 + local_steps
+        return time.perf_counter() - t0
+
+    def one_sim():
+        t0 = time.perf_counter()
+        sim.local_round(cb, key)
+        agg = sim.aggregate()
+        sim.global_stage(agg, sb, key)
+        sim.personalize(pb, key)
+        jax.block_until_ready(sim.client_adapters)
+        return time.perf_counter() - t0
+
+    one_prod(), one_sim()                       # compile + warm
+    ts_prod, ts_sim = [], []
+    for _ in range(reps):                        # interleave (box noise)
+        ts_prod.append(one_prod())
+        ts_sim.append(one_sim())
+    us_prod, us_sim = min(ts_prod) * 1e6, min(ts_sim) * 1e6
+    ratio = us_prod / us_sim
+    log(f"[perf] pipeline/engine    {us_sim:9.0f}us  "
+        f"({C} clients, {local_steps}+{global_steps}+{personal_steps} steps)")
+    log(f"[perf] pipeline/shardmap  {us_prod:9.0f}us  "
+        f"ratio={ratio:.2f}x vs engine ({len(jax.devices())} devices, "
+        f"bar: 1.00x at 1 device)")
+    return [{"arch": "pipeline/engine", "us": us_sim, "ratio": 1.0},
+            {"arch": "pipeline/shardmap", "us": us_prod,
+             "ratio": ratio}], ratio
+
+
 def main():
     rows = run()
     fed_rows, speedup = run_fed_round()
     het_rows, het_ratio = run_het_round()
     dist_rows, dist_ratio = run_dist_round()
+    pipe_rows, pipe_ratio = run_pipeline()
     print("name,us_per_call,derived")
     for r in rows:
         print(f"perf/{r['arch']}/fwd,{r['fwd_us']:.0f},smoke_cpu")
         print(f"perf/{r['arch']}/decode,{r['dec_us']:.0f},smoke_cpu")
     for r in fed_rows:
         print(f"perf/{r['arch']},{r['us']:.0f},smoke_cpu")
-    for r in het_rows + dist_rows:
+    for r in het_rows + dist_rows + pipe_rows:
         print(f"perf/{r['arch']},{r['us']:.0f},smoke_cpu")
     # ratios, not timings — kept out of the us_per_call column
     print(f"# fed_round speedup (per_step / scan): {speedup:.2f}x")
     print(f"# het_round overhead (het_masked / uniform): {het_ratio:.2f}x")
     print(f"# dist_round overhead (shardmap / engine): {dist_ratio:.2f}x")
-    return rows + fed_rows + het_rows + dist_rows
+    print(f"# pipeline overhead (shardmap / engine): {pipe_ratio:.2f}x")
+    return rows + fed_rows + het_rows + dist_rows + pipe_rows
 
 
 if __name__ == "__main__":

@@ -12,8 +12,8 @@ import json
 import os
 import time
 
-ALL = ("table1", "table2", "fig1", "fig3", "perf", "het", "dist", "serve",
-       "roofline")
+ALL = ("table1", "table2", "fig1", "fig3", "perf", "het", "dist",
+       "pipeline", "serve", "roofline")
 
 
 def main():
@@ -89,6 +89,13 @@ def main():
         from benchmarks import perf_micro
         rows = cached("dist", lambda: perf_micro.run_dist_round()[0])
         results["dist"] = rows
+        for r in rows:
+            csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},"
+                             f"ratio_vs_engine={r['ratio']:.2f}")
+    if "pipeline" in which:
+        from benchmarks import perf_micro
+        rows = cached("pipeline", lambda: perf_micro.run_pipeline()[0])
+        results["pipeline"] = rows
         for r in rows:
             csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},"
                              f"ratio_vs_engine={r['ratio']:.2f}")

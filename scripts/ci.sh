@@ -8,9 +8,10 @@
 #                              # property suite, mixed-rank round/serving
 #                              # parity, het checkpoint coverage
 #   scripts/ci.sh --dist       # distributed subsystem: shard_map collective
-#                              # round vs FedSim parity sweeps on 8 virtual
-#                              # host devices (tests spawn their own
-#                              # subprocess with the XLA flag)
+#                              # round + three-stage pipeline vs FedSim
+#                              # parity sweeps on 8 virtual host devices
+#                              # (tests spawn their own subprocess with the
+#                              # XLA flag)
 #   scripts/ci.sh --fast       # tier-1 minus the slow sweeps and the
 #                              # multi-device dist tests
 #                              # (-m 'not slow and not dist')

@@ -211,25 +211,92 @@ def broadcast_to_clients(agg: Params, n_clients: int) -> Params:
         lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), agg)
 
 
+def client_rebroadcast(aggregated: Params, own_adapters: Params,
+                       keep_rx=None, cover: Params | None = None) -> Params:
+    """One client's view of the rebroadcast aggregate: leaves matching
+    the method's keep-local regex retain this client's ``own_adapters``
+    values (personalized state never leaves the client), and on a
+    heterogeneous fleet the result is re-masked by the client's rank
+    ``cover`` — a rank-r client receives the first r rank rows of the
+    server model.  This is the per-shard form the production shard_map
+    round/pipeline (launch/train.py) applies inside the manual region;
+    ``rebroadcast_keep_personal`` is the same logic over a client-stacked
+    tree.  ``keep_rx``: compiled pattern or regex string (or None)."""
+    out = aggregated
+    if keep_rx is not None:
+        import re
+        rx = re.compile(keep_rx) if isinstance(keep_rx, str) else keep_rx
+        out = pt.tree_map_with_path(
+            lambda p, leaf: pt.tree_get(own_adapters, p)
+            if rx.search(p) else leaf, out)
+    if cover is not None:
+        out = jax.tree.map(jnp.multiply, out, cover)
+    return out
+
+
+def rebroadcast_keep_personal(aggregated: Params, client_adapters: Params,
+                              keep_rx=None,
+                              rank_masks: Params | None = None) -> Params:
+    """Broadcast the aggregate to every client of a client-stacked tree
+    with the engine's keep-local / heterogeneous-re-mask semantics (the
+    one place this logic lives — ``FedSim.aggregate``/``global_stage``
+    and any host pipeline driver share it; the production shard_map path
+    applies the identical per-shard form, ``client_rebroadcast``).
+    Leaves matching ``keep_rx`` retain each client's own value; with
+    ``rank_masks`` (peft.client_rank_masks) each client is re-masked to
+    its own rank."""
+    C = jax.tree.leaves(client_adapters)[0].shape[0]
+    bcast = broadcast_to_clients(aggregated, C)
+    # the stacked broadcast and the client tree line up leaf-for-leaf,
+    # so the per-shard restore applies verbatim (keep-local logic lives
+    # only in client_rebroadcast)
+    bcast = client_rebroadcast(bcast, client_adapters, keep_rx)
+    if rank_masks is not None:
+        from repro.core import peft
+        bcast = peft.apply_rank_masks(bcast, rank_masks)
+    return bcast
+
+
 def comm_bytes_per_round(adapters_one_client: Params,
                          exclude_rx: str | None = None,
-                         rank: int | None = None) -> int:
-    """Uplink+downlink bytes for one client-round (adapter leaves only —
-    the frozen backbone never moves; the PEFT communication story).
+                         rank: int | None = None,
+                         comm: str = "psum",
+                         n_clients: int | None = None) -> int:
+    """Per-client bytes for one round's aggregation (adapter leaves only
+    — the frozen backbone never moves; the PEFT communication story).
     Leaves matching ``exclude_rx`` stay client-local (a method's
     keep-local set, e.g. dB_mag or FedALT's individual pair) and are
     never transmitted, so they don't count.  ``rank``: the client's own
     rank in a heterogeneous fleet — rank-axis leaves are billed at the
     client's rank, not the allocated r_max (padding rows are zero and
-    never leave the device)."""
+    never leave the device).
+
+    ``comm`` is the collective's comm class (``CollectiveAgg.comm``,
+    resolved via ``comm_class``):
+
+      psum        2·|adapters| — updates up, aggregate down.
+      all_gather  (C+1)·|adapters| — each client uplinks its adapters
+                  once and downlinks all C clients' stacks (the gather
+                  methods re-run the host aggregator per client), so
+                  ``n_clients`` is required.
+    """
     import re
     from repro.core.peft import rank_axis
     tree = adapters_one_client
     if exclude_rx is not None:
         rx = re.compile(exclude_rx)
         tree = pt.filter_tree(tree, lambda p: not rx.search(p))
+    if comm == "psum":
+        factor = 2
+    elif comm == "all_gather":
+        if n_clients is None:
+            raise ValueError("all_gather comm accounting needs n_clients "
+                             "(each client downlinks every client's stack)")
+        factor = n_clients + 1
+    else:
+        raise ValueError(f"unknown comm class {comm!r} (psum | all_gather)")
     if rank is None:
-        return 2 * pt.tree_bytes(tree)
+        return factor * pt.tree_bytes(tree)
     total = 0
     for path, leaf in zip(pt.tree_paths(tree), jax.tree.leaves(tree)):
         shape = list(leaf.shape)
@@ -237,7 +304,7 @@ def comm_bytes_per_round(adapters_one_client: Params,
         if ax is not None:
             shape[leaf.ndim + ax] = min(rank, shape[leaf.ndim + ax])
         total += int(np.prod(shape)) * leaf.dtype.itemsize
-    return 2 * total
+    return factor * total
 
 
 def fedavg_excluding(client_adapters: Params, weights=None, *,
@@ -406,3 +473,35 @@ def collective_form(method) -> CollectiveAgg:
         f"method {method.name!r} has no shard_map collective form; set "
         "FedMethod.collective (a core.aggregation.CollectiveAgg) to run "
         "it on the production train step")
+
+
+def comm_class(method) -> str:
+    """The comm class ('psum' | 'all_gather') a method's aggregation
+    moves on the wire, for ``comm_bytes_per_round`` accounting.  Resolved
+    from the method's collective form; a method with no registered
+    collective (simulator-only custom aggregate) bills at the psum rate —
+    register a ``FedMethod.collective`` for true gather-class billing."""
+    try:
+        return collective_form(method).comm
+    except ValueError:
+        return "psum"
+
+
+def aggregate_zero_rx(method) -> str | None:
+    """Regex of leaves the method's *host* aggregate zeroes in the
+    aggregated/global model (``fedavg_excluding``'s client-personal
+    leaves), or None.  The production pipeline applies this to its
+    collective output so the stage-2 server model matches the
+    simulator's aggregate bit-for-bit — the WMEAN collective meaned
+    those leaves, and while the keep-local restore hides that from every
+    client, the *server* model must not train on it.  An explicit
+    ``FedMethod.server_zero_rx`` wins; the built-in fedavg_excluding
+    partial is recognized as a fallback (a custom aggregate that zeroes
+    leaves any other way must set the field)."""
+    explicit = getattr(method, "server_zero_rx", None)
+    if explicit is not None:
+        return explicit
+    a = method.aggregate
+    if isinstance(a, functools.partial) and a.func is fedavg_excluding:
+        return a.keywords.get("exclude_rx")
+    return None

@@ -79,6 +79,14 @@ class FedMethod:
     # built-in family); set explicitly when registering a method with a
     # custom aggregator so it can run on launch/train.py.
     collective: Optional[agg.CollectiveAgg] = None
+    # regex over leaf paths the *aggregated/server* model zeroes (leaves
+    # the host aggregate excludes from the global model, e.g. FedALT's
+    # individual pair).  None → inferred from ``aggregate`` by
+    # ``aggregation.aggregate_zero_rx`` (covers the built-in
+    # fedavg_excluding partial); set explicitly when a custom aggregate
+    # zeroes leaves, or the production pipeline's stage-2 server model
+    # would silently train on their mean.
+    server_zero_rx: Optional[str] = None
     description: str = ""
 
     def stage_global_mask(self, adapters: Params) -> Params:
@@ -86,6 +94,21 @@ class FedMethod:
 
     def stage_local_mask(self, adapters: Params) -> Params:
         return (self.local_mask or self.train_mask)(adapters)
+
+    def stage_mask(self, adapters: Params, stage: str) -> Params:
+        """Trainable mask for one pipeline stage — the single dispatch
+        both engines (fed/simulate.py, launch/train.py) use, so the
+        stage → leaves mapping can never diverge between them.  Stages:
+        'local_pretrain' (stage 1, client rounds), 'global' (stage 2,
+        server optimizer), 'local' (stage 3, personalization)."""
+        if stage == "global":
+            return self.stage_global_mask(adapters)
+        if stage == "local":
+            return self.stage_local_mask(adapters)
+        if stage == "local_pretrain":
+            return self.train_mask(adapters)
+        raise ValueError(f"unknown pipeline stage {stage!r} "
+                         "(local_pretrain | global | local)")
 
 
 _REGISTRY: dict[str, FedMethod] = {}
@@ -179,6 +202,7 @@ register(FedMethod(
     # per client by the keep-local rebroadcast
     aggregate=partial(agg.fedavg_excluding, exclude_rx=r"local_[AB]$"),
     keep_local=r"local_[AB]$",
+    server_zero_rx=r"local_[AB]$",
     description=("dual adapters: shared rest-of-world LoRA pair is "
                  "aggregated, the individual local_A/local_B pair never "
                  "leaves the client (FedALT-style)"),

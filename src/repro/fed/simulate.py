@@ -120,6 +120,9 @@ class FedSim:
                          if self.method.personal_reg else None)
         self._keep_rx = (re.compile(self.method.keep_local)
                          if self.method.keep_local else None)
+        # the comm class the method's aggregation moves on the wire
+        # (psum: 2·|adapters|; all_gather: (C+1)·|adapters| per client)
+        self._comm_class = agg.comm_class(self.method)
 
         C = hp.n_clients
         self.client_adapters = agg.broadcast_to_clients(ad, C)
@@ -295,15 +298,17 @@ class FedSim:
         baselines) + comm accounting; broadcasts the aggregate back with
         keep-local leaves (e.g. dB_mag) preserved per client."""
         aggregated = self._agg(self.client_adapters)
+        C = self.hp.n_clients
         if self._client_ranks is None:
-            self.comm_bytes += self.hp.n_clients * agg.comm_bytes_per_round(
-                self.adapter_template, exclude_rx=self.method.keep_local)
+            self.comm_bytes += C * agg.comm_bytes_per_round(
+                self.adapter_template, exclude_rx=self.method.keep_local,
+                comm=self._comm_class, n_clients=C)
         else:
             # heterogeneous fleet: each client moves only its own rank rows
             for r in self.hp.client_ranks:
                 self.comm_bytes += agg.comm_bytes_per_round(
                     self.adapter_template, exclude_rx=self.method.keep_local,
-                    rank=int(r))
+                    rank=int(r), comm=self._comm_class, n_clients=C)
         bcast = self._rebroadcast_keep_personal(aggregated)
         self.client_adapters = bcast
         if self.method.prox:
@@ -330,20 +335,16 @@ class FedSim:
 
     def _rebroadcast_keep_personal(self, aggregated):
         """Broadcast the aggregate to every client; leaves matching the
-        method's keep-local regex retain each client's own value (the one
-        place this logic lives — aggregate() and global_stage() share it).
-        On a heterogeneous fleet each client then re-masks the broadcast
-        down to its own rank: a rank-r client receives the first r rank
-        rows of the server model (for ``lora_exact`` those are the top-r
-        singular directions of the exact aggregate)."""
-        bcast = agg.broadcast_to_clients(aggregated, self.hp.n_clients)
-        if self._keep_rx is not None:
-            bcast = pt.tree_map_with_path(
-                lambda p, leaf: self._leaf(self.client_adapters, p)
-                if self._keep_rx.search(p) else leaf, bcast)
-        if self.rank_mask is not None:
-            bcast = peft.apply_rank_masks(bcast, self.rank_mask)
-        return bcast
+        method's keep-local regex retain each client's own value, and on
+        a heterogeneous fleet each client re-masks the broadcast down to
+        its own rank: a rank-r client receives the first r rank rows of
+        the server model (for ``lora_exact`` those are the top-r singular
+        directions of the exact aggregate).  The logic itself lives in
+        ``core.aggregation.rebroadcast_keep_personal`` — shared with the
+        production shard_map pipeline (launch/train.py), so the two paths
+        cannot diverge."""
+        return agg.rebroadcast_keep_personal(
+            aggregated, self.client_adapters, self._keep_rx, self.rank_mask)
 
     def global_stage(self, aggregated: Params, server_batches: list[dict],
                      rng) -> Params:

@@ -17,13 +17,14 @@ the same block index across its token blocks and Pallas skips the
 re-fetch (revisiting an unchanged block index is a no-op DMA).
 
 A second entry point covers the paper's decomposed-DoRA deployment
-shape, where tenants share every *direction* factor and differ only in
-the per-rank magnitude vector (ΔB_M — a few hundred bytes per tenant):
+shape, where tenants share every direction/magnitude factor and differ
+only in their RAW per-rank magnitude delta (ΔB_M — a few hundred bytes
+per tenant); the effective magnitude forms inside the kernel:
 
-    y[i] = scale · (((x[i] ⊙ A_mag) @ A_dir) ⊙ mag[idx[i]]) @ B_dir
+    y[i] = scale · (((x[i] ⊙ A_mag) @ A_dir) ⊙ (B_mag + Δmag[idx[i]])) @ B_dir
 
-Here only the tiny (1, r) magnitude block is gathered per row; the
-shared factors load once and stay VMEM-resident across the whole grid.
+Here only the tiny (1, r) delta block is gathered per row; the shared
+factors load once and stay VMEM-resident across the whole grid.
 
 Heterogeneous pools: slots may hold adapters of different ranks, padded
 to the pool's r_max.  A second scalar-prefetch vector carries each row's
@@ -31,6 +32,11 @@ rank and the kernel masks intermediate columns ≥ that rank before the
 up-projection — so a freed slot re-registered at a lower rank can never
 leak its previous occupant's high-rank rows, and the masked result is
 bit-identical to running the tenant's own-rank adapter unpadded.
+Because the magnitude pool stores the delta raw, the same mask covers
+the magnitude path: a rank-r tenant is served the first r rank rows of
+the *shared* model plus its delta (exactly the federated re-mask
+semantics), and a rank-0 slot — the null slot, or a freed one —
+contributes nothing at all.
 
 VMEM working set (bs=256, d=1024, r=16, f32): x(256·1024) + a(1024·16)
 + b(16·1024) + out(256·1024) ≈ 2.2 MB « 16 MB v5e VMEM.
@@ -133,15 +139,17 @@ def bgmv_matmul(x, a_pool, b_pool, idx, ranks=None, *, scale: float = 1.0,
     )(*args, x, a_pool, b_pool)
 
 
-def _bgmv_mag_kernel(idx_ref, x_ref, adir_ref, amag_ref, mag_ref, bdir_ref,
-                     o_ref, *, scale: float):
+def _bgmv_mag_kernel(idx_ref, x_ref, adir_ref, amag_ref, bmag_ref, dmag_ref,
+                     bdir_ref, o_ref, *, scale: float):
     del idx_ref
     x = x_ref[0]                                          # (bs, d_in)
     xs = x * amag_ref[...][None, :].astype(x.dtype)
     h = jax.lax.dot_general(
         xs, adir_ref[...].astype(x.dtype), (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)               # (bs, r)
-    h = h * mag_ref[0][None, :]
+    # effective magnitude: shared B_mag + this row's raw ΔB_M — the same
+    # single addition the merged lora_delta path performs
+    h = h * (bmag_ref[...] + dmag_ref[0])[None, :]
     y = jax.lax.dot_general(
         h.astype(x.dtype), bdir_ref[...].astype(x.dtype),
         (((1,), (0,)), ((), ())),
@@ -150,10 +158,12 @@ def _bgmv_mag_kernel(idx_ref, x_ref, adir_ref, amag_ref, mag_ref, bdir_ref,
 
 
 def _bgmv_mag_ranked_kernel(idx_ref, rank_ref, x_ref, adir_ref, amag_ref,
-                            mag_ref, bdir_ref, o_ref, *, scale: float):
-    """Mixed-rank magnitude variant: magnitudes at or above this row's
-    rank are masked, so a low-rank tenant personalizes only its own rank
-    rows of the shared directions."""
+                            bmag_ref, dmag_ref, bdir_ref, o_ref, *,
+                            scale: float):
+    """Mixed-rank magnitude variant: intermediate columns at or above
+    this row's rank are masked AFTER the magnitude product, so a rank-r
+    tenant is served the first r rank rows of the shared model plus its
+    delta — and a rank-0 (null/freed) slot contributes nothing."""
     del idx_ref
     i = pl.program_id(0)
     x = x_ref[0]                                          # (bs, d_in)
@@ -161,7 +171,7 @@ def _bgmv_mag_ranked_kernel(idx_ref, rank_ref, x_ref, adir_ref, amag_ref,
     h = jax.lax.dot_general(
         xs, adir_ref[...].astype(x.dtype), (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)               # (bs, r)
-    h = h * mag_ref[0][None, :]
+    h = h * (bmag_ref[...] + dmag_ref[0])[None, :]
     keep = (jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
             < rank_ref[i])
     h = jnp.where(keep, h, 0.0)
@@ -173,13 +183,14 @@ def _bgmv_mag_ranked_kernel(idx_ref, rank_ref, x_ref, adir_ref, amag_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "bs", "interpret"))
-def bgmv_mag_matmul(x, a_dir, a_mag, mag_pool, b_dir, idx, ranks=None, *,
-                    scale: float = 1.0, bs: int = 256,
+def bgmv_mag_matmul(x, a_dir, a_mag, b_mag, dmag_pool, b_dir, idx,
+                    ranks=None, *, scale: float = 1.0, bs: int = 256,
                     interpret: bool = False):
     """Decomposed-DoRA magnitude path: shared a_dir (d_in, r) /
-    a_mag (d_in,) / b_dir (r, d_out); mag_pool (n_slots, r) gathered
-    per row via idx (B,).  x (B, S, d_in) → (B, S, d_out).  ``ranks``
-    (n_slots,) int32 masks magnitudes ≥ the slot's rank."""
+    a_mag (d_in,) / b_mag (r,) / b_dir (r, d_out); raw-delta pool
+    dmag_pool (n_slots, r) gathered per row via idx (B,).
+    x (B, S, d_in) → (B, S, d_out).  ``ranks`` (n_slots,) int32 masks
+    the magnitude product ≥ the slot's rank (shared rows included)."""
     B, S, d_in = x.shape
     r = a_dir.shape[-1]
     d_out = b_dir.shape[-1]
@@ -195,6 +206,7 @@ def bgmv_mag_matmul(x, a_dir, a_mag, mag_pool, b_dir, idx, ranks=None, *,
                          _imap(lambda i, s, idx_ref: (i, s, 0))),
             pl.BlockSpec((d_in, r), _imap(lambda i, s, idx_ref: (0, 0))),
             pl.BlockSpec((d_in,), _imap(lambda i, s, idx_ref: (0,))),
+            pl.BlockSpec((r,), _imap(lambda i, s, idx_ref: (0,))),
             pl.BlockSpec((1, r),
                          _imap(lambda i, s, idx_ref: (idx_ref[i], 0))),
             pl.BlockSpec((r, d_out), _imap(lambda i, s, idx_ref: (0, 0))),
@@ -214,4 +226,4 @@ def bgmv_mag_matmul(x, a_dir, a_mag, mag_pool, b_dir, idx, ranks=None, *,
         out_shape=jax.ShapeDtypeStruct((B, S, d_out), x.dtype),
         interpret=interpret,
     )(*args, x, a_dir, a_mag.astype(jnp.float32),
-      mag_pool.astype(jnp.float32), b_dir)
+      b_mag.astype(jnp.float32), dmag_pool.astype(jnp.float32), b_dir)

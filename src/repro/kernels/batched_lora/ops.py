@@ -64,24 +64,26 @@ def bgmv(x, a_pool, b_pool, idx, *, scale: float = 1.0, impl=None,
     return y[:, 0] if squeeze else y
 
 
-def bgmv_mag(x, a_dir, a_mag, mag_pool, b_dir, idx, *, scale: float = 1.0,
-             impl=None, ranks=None):
-    """Decomposed-DoRA magnitude path:
-    y[i] = scale · (((x[i] ⊙ a_mag) @ a_dir) ⊙ mag_pool[idx[i]]) @ b_dir.
+def bgmv_mag(x, a_dir, a_mag, b_mag, dmag_pool, b_dir, idx, *,
+             scale: float = 1.0, impl=None, ranks=None):
+    """Decomposed-DoRA magnitude path (raw-delta pool):
+    y[i] = scale · (((x[i] ⊙ a_mag) @ a_dir)
+                    ⊙ (b_mag + dmag_pool[idx[i]])) @ b_dir.
 
-    ``ranks`` (L,) int32: heterogeneous pool — magnitudes ≥ the slot's
-    rank are masked per row."""
+    ``ranks`` (L,) int32: heterogeneous pool — the magnitude product ≥
+    the slot's rank is masked per row (shared b_mag rows included, so a
+    rank-0 slot serves the bare backbone)."""
     impl = _resolve(impl)
     squeeze = x.ndim == 2
     if squeeze:
         x = x[:, None, :]
     if impl == "einsum":
-        y = bgmv_mag_ref(x, a_dir, a_mag, mag_pool, b_dir, idx, scale,
-                         ranks=ranks)
+        y = bgmv_mag_ref(x, a_dir, a_mag, b_mag, dmag_pool, b_dir, idx,
+                         scale, ranks=ranks)
     else:
         xp, S, bs = _pad_tokens(x)
-        y = bgmv_mag_matmul(xp, a_dir, a_mag, mag_pool, b_dir, idx, ranks,
-                            scale=scale, bs=bs,
+        y = bgmv_mag_matmul(xp, a_dir, a_mag, b_mag, dmag_pool, b_dir, idx,
+                            ranks, scale=scale, bs=bs,
                             interpret=(impl == "interpret") or not _on_tpu())
         y = y[:, :S]
     return y[:, 0] if squeeze else y

@@ -8,12 +8,15 @@ path reproduces the per-tenant merged-adapter path bit-for-bit in
 float32:
 
   pairs      y[i] = (x[i] @ A[idx[i]]) @ B[idx[i]] · scale
-  magnitude  y[i] = (((x[i] ⊙ A_mag) @ A_dir) ⊙ mag[idx[i]]) @ B_dir · scale
+  magnitude  y[i] = (((x[i] ⊙ A_mag) @ A_dir) ⊙ (B_mag + Δmag[idx[i]]))
+                     @ B_dir · scale
 
 Heterogeneous pools: ``ranks`` (L,) int32 masks the low-rank
 intermediate at columns ≥ the row's slot rank (same op position as the
 Pallas kernels' mask), so padded or stale rows above a tenant's own rank
-contribute exactly nothing.
+contribute exactly nothing — on the magnitude path that includes the
+shared B_mag rows, serving each tenant its own rank-slice of the shared
+model (and the rank-0 null slot nothing).
 """
 from __future__ import annotations
 
@@ -37,12 +40,12 @@ def bgmv_ref(x, a_pool, b_pool, idx, scale: float = 1.0, ranks=None):
     return jnp.einsum("bsr,bro->bso", h, b) * scale
 
 
-def bgmv_mag_ref(x, a_dir, a_mag, mag_pool, b_dir, idx, scale: float = 1.0,
-                 ranks=None):
-    """Decomposed-DoRA magnitude path; shared directions, per-row
-    magnitude gather.  Shapes as in bgmv_mag_matmul."""
+def bgmv_mag_ref(x, a_dir, a_mag, b_mag, dmag_pool, b_dir, idx,
+                 scale: float = 1.0, ranks=None):
+    """Decomposed-DoRA magnitude path; shared directions + magnitudes,
+    per-row raw-delta gather.  Shapes as in bgmv_mag_matmul."""
     h = (x * a_mag.astype(x.dtype)) @ a_dir.astype(x.dtype)   # (B, S, r)
-    m = jnp.take(mag_pool, idx, axis=0)                       # (B, r)
+    m = b_mag[None] + jnp.take(dmag_pool, idx, axis=0)        # (B, r)
     h = h * m[:, None, :].astype(x.dtype)
     if ranks is not None:
         h = jnp.where(_rank_keep(h, idx, ranks), h, 0.0)

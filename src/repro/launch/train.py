@@ -1,4 +1,4 @@
-"""Production federated train step.
+"""Production federated train step + the paper's three-stage pipeline.
 
 TPU-native mapping of the paper's round (DESIGN.md §4):
 
@@ -23,12 +23,31 @@ TPU-native mapping of the paper's round (DESIGN.md §4):
   · FedProx's proximal anchor is the shard's round-start adapters — a
     per-shard leaf captured by the local-step scan, no extra state.
 
-One train_step call is one federated ROUND: ``settings.local_steps``
-optimizer steps per client, then one aggregation.  Every method in the
-core.methods registry trains with the same math here as in the
-single-process simulator (fed/simulate.py) — the 8-device parity sweep
-in tests/test_distributed.py pins shard_map round == FedSim round for
-all of them, mixed-rank and weighted fleets included.
+``make_fed_train_step`` returns ONE federated round (stage 1 + the
+collective).  ``make_fed_pipeline_step`` extends that into the paper's
+full three-stage pipeline (Eqs. 9–11) as three jitted shard_map
+programs sharing one layout:
+
+  stage 1  the round above — per-client local steps, then the method's
+           collective; also emits the aggregate as a replicated leaf;
+  stage 2  the global optimizer: only ``method.stage_global_mask``
+           leaves (ΔA_D for the paper, Eq. 9) train on the *replicated*
+           server batch mixture — the aggregate carries no client axis,
+           its optimizer state lives outside the client axis, and no
+           collective is issued (every shard runs the same replicated
+           math); the result is rebroadcast with the same
+           keep-local/het-re-mask semantics as stage 1;
+  stage 3  per-client personalization: only ``method.stage_local_mask``
+           leaves (ΔB_M, Eq. 10) train per shard with the Eq. 11
+           ½λ‖·‖²_F regularizer and NO collective — personalization
+           never crosses shards.
+
+``FedPipeline.run_pipeline`` sequences the three stages exactly like
+the single-process oracle (``FedSim.run_round`` → ``global_stage`` →
+``personalize``); the rebroadcast/keep-local/het-re-mask logic is the
+shared ``core.aggregation.client_rebroadcast`` so the two paths cannot
+diverge.  The parity sweep in tests/test_distributed.py pins the full
+pipeline to the simulator for every registry method.
 
 Gradient accumulation: each local step's batch is split into
 micro-batches (a lax.scan, so HLO stays one body deep) so scan-boundary
@@ -40,7 +59,7 @@ from __future__ import annotations
 import dataclasses
 import re
 from functools import partial
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +104,11 @@ class TrainSettings:
     # per-client data-size aggregation weights (len == dp_size(mesh));
     # None → uniform.  Mirrors FedHyper.client_weights.
     client_weights: Optional[tuple] = None
+    # ---- pipeline stages 2/3 (mirror FedHyper) -----------------------
+    server_lr: float = 5e-4       # stage-2 global-optimizer lr
+    global_steps: int = 5         # stage-2 steps per global_step call
+    personal_steps: int = 20      # stage-3 steps per personal_step call
+    lam: float = 1e-3             # Eq. 11 Frobenius regularizer (stage 3)
 
 
 def pick_micro_batches(cfg: ArchConfig, per_client_batch: int,
@@ -100,19 +124,59 @@ def pick_micro_batches(cfg: ArchConfig, per_client_batch: int,
     return min(micro, per_client_batch)
 
 
-def _stage_mask(method, adapters, stage: str):
-    if stage == "global":
-        return method.stage_global_mask(adapters)
-    if stage == "local":
-        return method.stage_local_mask(adapters)
-    return method.train_mask(adapters)
+@dataclasses.dataclass(frozen=True)
+class FedPipeline:
+    """The three jitted shard_map stage programs plus the sequencing
+    driver.  Signatures (C = dp_size(mesh); trees as in
+    ``make_fed_train_step``):
+
+      round_step(base, adapters, opt_state, step, batch, anchor=None)
+          → (adapters, opt_state, aggregated, metrics)
+      global_step(base, aggregated, adapters, server_batch)
+          → (aggregated, adapters, metrics)
+      personal_step(base, adapters, batch) → (adapters, metrics)
+
+    ``aggregated`` is the replicated server model (no client axis) — the
+    same tree ``FedSim.aggregate`` returns.  ``server_batch`` is a
+    replicated {tokens, loss_mask} dict of ``global_steps · B`` rows,
+    step-major; ``batch`` trees carry the leading client axis.
+    ``anchor`` is the FedProx proximal reference (defaults to the call's
+    input adapters — correct for round-only training; the pipeline
+    driver threads the post-round rebroadcast through subsequent rounds
+    exactly like ``FedSim._round_ref``)."""
+    round_step: Callable
+    global_step: Callable
+    personal_step: Callable
+    opt_init: Callable
+    method: Any
+    # unjitted stage-1 body — make_fed_train_step wraps it so the
+    # round-only engine can drop the aggregate output INSIDE its own jit
+    # (XLA then DCEs the replicated materialization the pipeline needs)
+    round_step_raw: Callable = None
+
+    def run_pipeline(self, base, adapters, opt_state, step, batch,
+                     server_batch, personal_batch, prox_anchor=None):
+        """One full paper-pipeline iteration: stage-1 round → stage-2
+        global optimizer → stage-3 personalization, with the simulator's
+        sequencing (``FedSim.run_round`` → ``global_stage`` →
+        ``personalize``).  Returns (adapters, opt_state, aggregated,
+        prox_anchor, metrics); pass the returned ``prox_anchor`` (and
+        ``step + local_steps``) into the next iteration — for prox
+        methods the anchor is the post-round rebroadcast, which stages
+        2/3 must not disturb (mirrors ``FedSim._round_ref``)."""
+        adapters, opt_state, agg, met1 = self.round_step(
+            base, adapters, opt_state, step, batch, prox_anchor)
+        anchor = adapters if self.method.prox else None
+        agg, adapters, met2 = self.global_step(base, agg, adapters,
+                                               server_batch)
+        adapters, met3 = self.personal_step(base, adapters, personal_batch)
+        return adapters, opt_state, agg, anchor, {
+            "round": met1, "global": met2, "personal": met3}
 
 
-def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
-    """Returns (train_step, opt_init).  train_step signature:
-
-        train_step(base, adapters, opt_state, step, batch)
-            → (adapters, opt_state, metrics)
+def make_fed_pipeline_step(cfg: ArchConfig, mesh,
+                           settings: TrainSettings) -> FedPipeline:
+    """Build the three-stage pipeline engine (see FedPipeline).
 
     base: global param tree (model-sharded, replicated over data axes).
     adapters: leading client axis C = dp_size(mesh), sharded 1-per-shard
@@ -120,10 +184,12 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
     rank-masked, as FedSim lays them out).
     batch: {"tokens": (C, local_steps·B_c, S), ...} sharded likewise,
     step-major: local step t consumes rows [t·B_c, (t+1)·B_c).
-    step: global local-step counter; one call advances it by
+    step: global local-step counter; one round advances it by
     ``settings.local_steps``, so the caller passes step + local_steps to
-    the next call (the optimizer's bias-correction schedule matches the
-    simulator's per-step counter).
+    the next round (the optimizer's bias-correction schedule matches the
+    simulator's per-step counter; stages 2/3 restart their counters at 0
+    each call with freshly initialized optimizer state, exactly like
+    ``FedSim.global_stage``/``personalize``).
 
     No rng is threaded into the loss, so adapter dropout is NOT applied
     here (the simulator applies it per step when cfg.lora_dropout > 0);
@@ -137,7 +203,6 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
     daxes = data_axes(mesh)
     dp = dp_size(mesh)
     micro = settings.micro_batches
-    T = settings.local_steps
     is_moe = cfg.n_experts > 0
     method = get_method(settings.method)
     keep_rx = re.compile(method.keep_local) if method.keep_local else None
@@ -145,7 +210,13 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
     # step time) means an aggregator with no shard_map form fails fast,
     # never silently training with different math than the simulator
     collective = fedagg.collective_form(method)
+    # leaves the host aggregate zeroes in the server model (fedalt's
+    # individual pair): the collective meaned them, the stage-2 server
+    # model must not see that mean
+    zrx = fedagg.aggregate_zero_rx(method)
+    zero_rx = re.compile(zrx) if zrx else None
     prox_mu = settings.prox_mu if method.prox else 0.0
+    lam = settings.lam if method.personal_reg is not None else 0.0
 
     # ---- fleet layout: ranks, coverage masks, aggregation weights ------
     het = settings.client_ranks is not None
@@ -167,105 +238,20 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
     else:
         weight_c = jnp.ones((dp,), jnp.float32)
 
-    def client_body(base, adapters, opt_state, step0, batch, weight, covers):
-        # ---- inside the manual region: one client per shard -------------
-        adapters = jax.tree.map(lambda x: x[0], adapters)   # drop C axis
-        opt_state = jax.tree.map(lambda x: x[0], opt_state)
-        batch = {k: v[0] for k, v in batch.items()}
-        w = weight[0]
-        cover = jax.tree.map(lambda x: x[0], covers)
-        mesh_tag = ("manual", mesh.shape["data"]) if is_moe else None
-        # FedProx anchor: this shard's round-start adapters, captured as
-        # a per-shard leaf by the local-step scan below
-        anchor = adapters
-
-        def loss_fn(ad, mb):
-            params = pt.merge_trees(base, ad)
-            loss, met = M.loss_and_metrics(params, mb, cfg,
-                                           mesh=mesh_tag,
-                                           remat=settings.remat)
-            if prox_mu:
-                d = pt.tree_sub(ad, anchor)
-                loss = loss + 0.5 * prox_mu * pt.tree_dot(d, d)
-            return loss, met
-
-        # batch rows: step-major, then micro-batched.  Gradient
-        # accumulation over micro-batches via lax.scan: one HLO body
-        # regardless of depth (an unrolled loop made 88-layer compiles
-        # explode), forward-only carry (grads), no cross-step residuals.
-        B_c = batch["tokens"].shape[0]
-        if B_c % (T * micro):
-            raise ValueError(
-                f"per-client batch {B_c} is not divisible by local_steps "
-                f"({T}) x micro_batches ({micro})")
-        mb_sz = B_c // (T * micro)
-        sbatch = {k: v.reshape((T, micro, mb_sz) + v.shape[1:])
-                  for k, v in batch.items()}
-
-        def local_step(carry, sb):
-            ad, ost, step = carry
-            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), ad)
-
-            def acc_body(g_acc, mb):
-                (_, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                    ad, mb)
-                g_acc = jax.tree.map(
-                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                return g_acc, met
-
-            g_acc, mets = jax.lax.scan(acc_body, g0, sb)
-            g_acc = jax.tree.map(lambda x: x / micro, g_acc)
-            g_acc = clip_by_global_norm(g_acc, settings.clip)
-            upd, ost = opt.update(g_acc, ost, ad, step)
-            if het:
-                # heterogeneous fleet: zero the update rows above this
-                # client's rank (adapters are allocated at the server rank)
-                upd = jax.tree.map(jnp.multiply, upd, cover)
-            ad = apply_updates(ad, upd)
-            met = jax.tree.map(lambda x: jnp.sum(x, axis=0) / micro, mets)
-            return (ad, ost, step + 1), met
-
-        (adapters, opt_state, _), mets = jax.lax.scan(
-            local_step, (adapters, opt_state, step0), sbatch)
-
-        # ---- the method's collective aggregation: the only cross-client
-        # (and only cross-pod) traffic.  Keep-local leaves (the paper's
-        # personal ΔB_M, FedALT's individual pair) are restored from this
-        # shard's own post-round values — personalization never crosses
-        # shards.
-        agg = collective(adapters, axes=daxes, weight=w, cover=cover)
-        out = (_select_personal(adapters, agg, keep_rx)
-               if keep_rx is not None else agg)
-        if het:
-            # rebroadcast re-mask: a rank-r client receives the first r
-            # rank rows of the aggregate (matches FedSim's rebroadcast)
-            out = jax.tree.map(jnp.multiply, out, cover)
-        met_last = jax.tree.map(lambda m: jax.lax.pmean(m[-1], daxes), mets)
-
-        out = jax.tree.map(lambda x: x[None], out)
-        opt_state = jax.tree.map(lambda x: x[None], opt_state)
-        return out, opt_state, met_last
-
-    def _select_personal(local, agg, rx):
-        return pt.tree_map_with_path(
-            lambda p, leaf_agg: _pick(local, p) if rx.search(p) else leaf_agg,
-            agg)
-
-    def _pick(tree, path):
-        node = tree
-        for k in path.split("/"):
-            node = node[k]
-        return node
-
-    # abstract adapter tree (drives the trainable mask, the shard specs,
-    # and the per-client coverage masks); heterogeneous fleets allocate
-    # at the server rank, exactly as FedSim does
+    # abstract adapter tree (drives the per-stage trainable masks, the
+    # shard specs, and the per-client coverage masks); heterogeneous
+    # fleets allocate at the server rank, exactly as FedSim does
     mk = (partial(method.make_adapter, rank=alloc_rank) if het
           else method.make_adapter)
     abs_ad = jax.eval_shape(
         lambda: mk(abstract_base(cfg), cfg, jax.random.PRNGKey(0)))
-    mask = _stage_mask(method, abs_ad, settings.stage)
-    opt = masked(adamw(settings.lr), mask)
+    # per-stage optimizers over the per-stage masks — one adamw per
+    # stage, exactly the simulator's opt / opt_global / opt_local
+    opt = masked(adamw(settings.lr),
+                 method.stage_mask(abs_ad, settings.stage))
+    opt_g = masked(adamw(settings.server_lr), method.stage_global_mask(abs_ad))
+    opt_l = masked(adamw(settings.lr), method.stage_local_mask(abs_ad))
+    reg_mask = method.personal_reg(abs_ad) if method.personal_reg else None
     # per-client coverage masks over the rank axis of every leaf; on a
     # uniform fleet these are all-ones (and unused outside the coverage
     # collective), so the uniform program pays nothing
@@ -276,26 +262,205 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
     ost_spec = shd.client_specs(ost_abs, mesh)
     cov_spec = shd.client_specs(covers_c, mesh)
     w_spec = P(shd.client_axis(mesh))
+    # the aggregated server model carries no client axis: replicated in,
+    # replicated out (stages 1 → 2 hand it off in this layout)
+    agg_spec = shd.replicated_specs(abs_ad)
+    mesh_tag = ("manual", mesh.shape["data"]) if is_moe else None
 
     def batch_spec_of(batch):
         return {k: P(shd.client_axis(mesh)) for k in batch}
 
-    def train_step(base, adapters, opt_state, step, batch):
+    # ---- shared per-shard training scan --------------------------------
+    # One loop body for all three stages: T optimizer steps, each
+    # micro-batched via lax.scan (one HLO body regardless of depth — an
+    # unrolled loop made 88-layer compiles explode), forward-only carry
+    # (grads), LoRA grads accumulated in f32.
+    def train_scan(base, ad, ost, step0, batch, *, T, stage_opt, cover,
+                   stage_lam, stage_prox, anchor, stage):
+        def loss_fn(ad_, mb):
+            params = pt.merge_trees(base, ad_)
+            loss, met = M.loss_and_metrics(params, mb, cfg, mesh=mesh_tag,
+                                           remat=settings.remat)
+            if stage_lam:
+                # Eq. 11 ½λ‖·‖²_F over the method's personal_reg leaves
+                reg = sum(jnp.sum(jnp.square(x)) for m, x in zip(
+                    jax.tree.leaves(reg_mask), jax.tree.leaves(ad_)) if m)
+                loss = loss + 0.5 * stage_lam * reg
+            if stage_prox:
+                d = pt.tree_sub(ad_, anchor)
+                loss = loss + 0.5 * stage_prox * pt.tree_dot(d, d)
+            return loss, met
+
+        B_c = batch["tokens"].shape[0]
+        if B_c % (T * micro):
+            raise ValueError(
+                f"{stage} batch of {B_c} rows is not divisible by steps "
+                f"({T}) x micro_batches ({micro})")
+        mb_sz = B_c // (T * micro)
+        sbatch = {k: v.reshape((T, micro, mb_sz) + v.shape[1:])
+                  for k, v in batch.items()}
+
+        def local_step(carry, sb):
+            ad_, ost_, step = carry
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), ad_)
+
+            def acc_body(g_acc, mb):
+                (_, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    ad_, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return g_acc, met
+
+            g_acc, mets = jax.lax.scan(acc_body, g0, sb)
+            g_acc = jax.tree.map(lambda x: x / micro, g_acc)
+            g_acc = clip_by_global_norm(g_acc, settings.clip)
+            upd, ost_ = stage_opt.update(g_acc, ost_, ad_, step)
+            if cover is not None:
+                # heterogeneous fleet: zero the update rows above this
+                # client's rank (adapters are allocated at the server rank)
+                upd = jax.tree.map(jnp.multiply, upd, cover)
+            ad_ = apply_updates(ad_, upd)
+            met = jax.tree.map(lambda x: jnp.sum(x, axis=0) / micro, mets)
+            return (ad_, ost_, step + 1), met
+
+        (ad, ost, _), mets = jax.lax.scan(local_step, (ad, ost, step0),
+                                          sbatch)
+        return ad, ost, jax.tree.map(lambda m: m[-1], mets)
+
+    # ---- stage 1: the federated round ----------------------------------
+    def round_body(base, adapters, opt_state, step0, batch, anchor, weight,
+                   covers):
+        # inside the manual region: one client per shard
+        adapters = jax.tree.map(lambda x: x[0], adapters)   # drop C axis
+        opt_state = jax.tree.map(lambda x: x[0], opt_state)
+        batch = {k: v[0] for k, v in batch.items()}
+        anchor = jax.tree.map(lambda x: x[0], anchor)
+        w = weight[0]
+        cover = jax.tree.map(lambda x: x[0], covers)
+        adapters, opt_state, mets = train_scan(
+            base, adapters, opt_state, step0, batch,
+            T=settings.local_steps, stage_opt=opt,
+            cover=cover if het else None, stage_lam=0.0,
+            stage_prox=prox_mu, anchor=anchor, stage="round")
+
+        # the method's collective aggregation: the only cross-client (and
+        # only cross-pod) traffic.  Keep-local leaves (the paper's
+        # personal ΔB_M, FedALT's individual pair) are restored from this
+        # shard's own post-round values — personalization never crosses
+        # shards.
+        agg = collective(adapters, axes=daxes, weight=w, cover=cover)
+        if zero_rx is not None:
+            agg = pt.tree_map_with_path(
+                lambda p, x: jnp.zeros_like(x) if zero_rx.search(p) else x,
+                agg)
+        out = fedagg.client_rebroadcast(agg, adapters, keep_rx,
+                                        cover if het else None)
+        met_last = jax.tree.map(lambda m: jax.lax.pmean(m, daxes), mets)
+        return (jax.tree.map(lambda x: x[None], out),
+                jax.tree.map(lambda x: x[None], opt_state), agg, met_last)
+
+    def round_step(base, adapters, opt_state, step, batch, anchor=None):
+        if anchor is None:
+            # round-only training: the proximal reference is the call's
+            # input adapters (a round ends in rebroadcast, so the next
+            # round's input IS the last rebroadcast)
+            anchor = adapters
         body = shard_map_compat(
-            client_body,
+            round_body,
             mesh,
             in_specs=(base_manual_specs(base, cfg), ad_spec, ost_spec, P(),
-                      batch_spec_of(batch), w_spec, cov_spec),
-            out_specs=(ad_spec, ost_spec, P()),
+                      batch_spec_of(batch), ad_spec, w_spec, cov_spec),
+            out_specs=(ad_spec, ost_spec, agg_spec, P()),
             manual_axes=daxes,
         )
-        return body(base, adapters, opt_state, step, batch, weight_c,
-                    covers_c)
+        return body(base, adapters, opt_state, step, batch, anchor,
+                    weight_c, covers_c)
+
+    # ---- stage 2: the global optimizer (replicated server model) -------
+    def global_body(base, agg, adapters, sbatch, covers):
+        own = jax.tree.map(lambda x: x[0], adapters)
+        cover = jax.tree.map(lambda x: x[0], covers)
+        # the server model trains at the full allocated rank with no rank
+        # mask and a fresh zero-state optimizer (FedSim.global_stage);
+        # agg/sbatch are replicated, so every shard runs identical math —
+        # no collective
+        ost = opt_g.init(agg)
+        agg, _, mets = train_scan(
+            base, agg, ost, jnp.zeros((), jnp.int32), sbatch,
+            T=settings.global_steps, stage_opt=opt_g, cover=None,
+            stage_lam=0.0, stage_prox=0.0, anchor=None, stage="global")
+        out = fedagg.client_rebroadcast(agg, own, keep_rx,
+                                        cover if het else None)
+        return agg, jax.tree.map(lambda x: x[None], out), mets
+
+    def global_step(base, aggregated, adapters, server_batch):
+        body = shard_map_compat(
+            global_body,
+            mesh,
+            in_specs=(base_manual_specs(base, cfg), agg_spec, ad_spec, P(),
+                      cov_spec),
+            out_specs=(agg_spec, ad_spec, P()),
+            manual_axes=daxes,
+        )
+        return body(base, aggregated, adapters, server_batch, covers_c)
+
+    # ---- stage 3: per-client personalization (no collective) -----------
+    def personal_body(base, adapters, batch, covers):
+        ad = jax.tree.map(lambda x: x[0], adapters)
+        batch = {k: v[0] for k, v in batch.items()}
+        cover = jax.tree.map(lambda x: x[0], covers)
+        ost = opt_l.init(ad)
+        ad, _, mets = train_scan(
+            base, ad, ost, jnp.zeros((), jnp.int32), batch,
+            T=settings.personal_steps, stage_opt=opt_l,
+            cover=cover if het else None, stage_lam=lam, stage_prox=0.0,
+            anchor=None, stage="personal")
+        met_last = jax.tree.map(lambda m: jax.lax.pmean(m, daxes), mets)
+        return jax.tree.map(lambda x: x[None], ad), met_last
+
+    def personal_step(base, adapters, batch):
+        body = shard_map_compat(
+            personal_body,
+            mesh,
+            in_specs=(base_manual_specs(base, cfg), ad_spec,
+                      batch_spec_of(batch), cov_spec),
+            out_specs=(ad_spec, P()),
+            manual_axes=daxes,
+        )
+        return body(base, adapters, batch, covers_c)
 
     def opt_init(adapters_c):
         return jax.vmap(opt.init)(adapters_c)
 
-    return train_step, opt_init
+    return FedPipeline(round_step=jax.jit(round_step),
+                       global_step=jax.jit(global_step),
+                       personal_step=jax.jit(personal_step),
+                       opt_init=opt_init, method=method,
+                       round_step_raw=round_step)
+
+
+def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
+    """Returns (train_step, opt_init).  train_step signature:
+
+        train_step(base, adapters, opt_state, step, batch)
+            → (adapters, opt_state, metrics)
+
+    One train_step call is one federated ROUND: ``settings.local_steps``
+    optimizer steps per client, then one aggregation — the stage-1
+    program of ``make_fed_pipeline_step`` with the aggregate output
+    dropped.  Every method in the core.methods registry trains with the
+    same math here as in the single-process simulator (fed/simulate.py).
+    """
+    pipe = make_fed_pipeline_step(cfg, mesh, settings)
+
+    def train_step(base, adapters, opt_state, step, batch):
+        # the aggregate is dropped inside this jit so round-only training
+        # never pays for materializing the pipeline's replicated output
+        adapters, opt_state, _, met = pipe.round_step_raw(
+            base, adapters, opt_state, step, batch)
+        return adapters, opt_state, met
+
+    return jax.jit(train_step), pipe.opt_init
 
 
 def abstract_base(cfg: ArchConfig):

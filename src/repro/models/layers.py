@@ -124,28 +124,33 @@ def lora_delta_batched(p: Params, x, adapter_idx, scale: float):
     kernels/batched_lora and serve/adapter_store).  Pooled leaves:
 
       {pool_A, pool_B}                        — per-slot LoRA pairs
-      {bgmv_A_dir, bgmv_A_mag, bgmv_B_dir,
-       pool_B_mag}                            — decomposed-DoRA: shared
-                                                directions, per-slot
-                                                effective B magnitudes
-                                                (the paper's ΔB_M
-                                                deployment shape)
+      {bgmv_A_dir, bgmv_A_mag, bgmv_B_mag,
+       bgmv_B_dir, pool_dB_mag}               — decomposed-DoRA: shared
+                                                direction/magnitude
+                                                factors, per-slot RAW
+                                                ΔB_M deltas (the paper's
+                                                deployment shape; the
+                                                kernel forms
+                                                B_mag + ΔB_M itself)
 
     An optional {pool_ranks} leaf ((L,) int32) marks a heterogeneous
     pool: slots are padded to r_max and the kernel masks each row's
-    intermediate at its slot's own rank.
+    intermediate at its slot's own rank — on the magnitude layout that
+    mask covers the shared B_mag rows too, so each tenant gets its own
+    rank-slice of the shared model and a rank-0 slot gets none of it.
     """
     from repro.kernels import bgmv, bgmv_mag
     ranks = p.get("pool_ranks")
     if "pool_A" in p:
         return bgmv(x, p["pool_A"], p["pool_B"], adapter_idx, scale=scale,
                     ranks=ranks)
-    return bgmv_mag(x, p["bgmv_A_dir"], p["bgmv_A_mag"], p["pool_B_mag"],
-                    p["bgmv_B_dir"], adapter_idx, scale=scale, ranks=ranks)
+    return bgmv_mag(x, p["bgmv_A_dir"], p["bgmv_A_mag"], p["bgmv_B_mag"],
+                    p["pool_dB_mag"], p["bgmv_B_dir"], adapter_idx,
+                    scale=scale, ranks=ranks)
 
 
 def _has_pooled(p: Params) -> bool:
-    return "pool_A" in p or "pool_B_mag" in p
+    return "pool_A" in p or "pool_dB_mag" in p
 
 
 def linear(p: Params, x, *, lora_scale: float = 0.0, dropout_rng=None,

@@ -15,19 +15,27 @@ so ``lax.scan`` slices off ``n_sb`` and every layer sees a clean
                    (B_mag+dB_mag)·B_dir).
 
   kind="dora_mag"  the paper's deployment shape: every tenant shares the
-                   direction factors (A_dir+dA_dir, A_mag, B_dir) and
-                   differs only in the effective per-rank magnitude
-                   B_mag+dB_mag — pool_B_mag (L, r).  Bytes per tenant =
-                   4·r per target (a few hundred bytes total), so one
-                   host holds millions of personalized variants.
+                   direction/magnitude factors (A_dir+dA_dir, A_mag,
+                   B_dir, B_mag) and differs only in its RAW per-rank
+                   magnitude delta ΔB_M — pool_dB_mag (L, r); the
+                   effective magnitude B_mag+ΔB_M is formed inside the
+                   BGMV kernel.  Bytes per tenant = 4·r per target (a
+                   few hundred bytes total), so one host holds millions
+                   of personalized variants.
 
 Heterogeneous tenants: one pool serves adapters of mixed ranks.  The
-store's ``rank`` is the pool allocation r_max; a tenant may register any
-rank ≤ r_max — its leaves are zero-padded into the slot and its true
-rank is recorded in the slot-rank table (saved with the tenant table,
-exposed as a ``pool_ranks`` leaf for kind='pairs' so the BGMV kernel
-masks each row at its slot's own rank; kind='dora_mag' needs no mask —
-rows above a tenant's rank simply keep the shared model's magnitudes).
+store's ``rank`` is the pool allocation — pass the fleet's server rank
+to serve a server-rank fleet (it may exceed cfg.lora_rank; for
+kind='dora_mag' it defaults to the shared tree's own rank).  A tenant
+may register any rank ≤ the pool rank — its leaves are zero-padded into
+the slot and its true rank is recorded in the slot-rank table (saved
+with the tenant table, exposed as a ``pool_ranks`` leaf for BOTH kinds
+so the BGMV kernel masks each row at its slot's own rank).  Storing the
+dora_mag delta RAW is what makes that mask correct for magnitudes too:
+a rank-r tenant's federated model is the first r rank rows of the
+server model plus its ΔB_M (FedSim's rebroadcast re-mask), so serving
+must mask the shared rows above r as well — and the null/evicted slot
+(rank 0) masks everything, serving the bare backbone.
 
 Register/evict is LRU over slots; ``save``/``load`` round-trip the pools
 plus the tenant table through ``checkpoint/ckpt.py`` (tenant ids are
@@ -38,6 +46,7 @@ from __future__ import annotations
 
 from typing import Any, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -54,7 +63,7 @@ _DECOMPOSED = ("A_dir", "A_mag", "B_dir", "B_mag")
 
 # pool leaves carrying a slot axis (cleared on evict); the bgmv_* leaves
 # are shared across tenants and never change per slot
-_SLOT_KEYS = ("pool_A", "pool_B", "pool_B_mag")
+_SLOT_KEYS = ("pool_A", "pool_B", "pool_dB_mag")
 
 
 def _encode_id(tenant: str) -> np.ndarray:
@@ -85,6 +94,12 @@ class AdapterStore:
                              "adapter tree (direction factors)")
         self.cfg = cfg
         self.kind = kind
+        if not rank and kind == "dora_mag":
+            # the pool allocation follows the shared model's own rank —
+            # a fleet trained at server_rank > cfg.lora_rank serves
+            # without truncation
+            rank = int(jax.tree.leaves(pt.filter_tree(
+                shared, lambda p: p.endswith("A_dir")))[0].shape[-1])
         self.rank = rank or cfg.lora_rank
         self.n_slots = n_slots
         self.null_slot = n_slots                      # all-zero identity slot
@@ -123,12 +138,12 @@ class AdapterStore:
                     "bgmv_A_dir": jnp.asarray(a_dir, jnp.float32),
                     "bgmv_A_mag": jnp.asarray(sh["A_mag"], jnp.float32),
                     "bgmv_B_dir": jnp.asarray(sh["B_dir"], jnp.float32),
-                    "pool_B_mag": jnp.zeros((*lead, L, r), jnp.float32),
+                    "bgmv_B_mag": jnp.asarray(sh["B_mag"], jnp.float32),
+                    # RAW ΔB_M per slot — the kernel adds the shared
+                    # B_mag and rank-masks the product, so slots above a
+                    # tenant's rank (and the null slot) contribute zero
+                    "pool_dB_mag": jnp.zeros((*lead, L, r), jnp.float32),
                 }
-        if kind == "dora_mag":
-            self._shared_B_mag = {
-                p: jnp.asarray(_get(shared, f"{p}/B_mag"), jnp.float32)
-                for p in self.targets}
 
         self._slot_of: dict[str, int] = {}            # tenant → slot
         self._tenant_of: dict[int, str] = {}          # slot → tenant
@@ -193,14 +208,18 @@ class AdapterStore:
     # register
     # ------------------------------------------------------------------
 
-    def register(self, tenant: str, adapter: Params) -> int:
+    def register(self, tenant: str, adapter: Params, rank: int = 0) -> int:
         """Pack one tenant's adapter tree into a pool slot (LRU evict when
         full).  Accepts raw-LoRA {lora_A, lora_B} or decomposed-DoRA
         leaves for kind='pairs'; a dB_mag overlay (or full decomposed
         tree) for kind='dora_mag'.  The tenant's rank may be anything
         ≤ the pool's r_max — lower ranks are zero-padded into the slot
-        and recorded in the slot-rank table.  Raises ValueError on
-        rank/target mismatch."""
+        and recorded in the slot-rank table.  ``rank``: the tenant's TRUE
+        rank when it differs from the leaves' allocation — a server-rank
+        fleet pads every client's adapters to the server rank (rows above
+        the client's own rank are zero), so the shape alone over-states
+        the rank and the BGMV mask would not truncate.  Raises ValueError
+        on rank/target mismatch."""
         _encode_id(tenant)                            # validate early
         packed, t_ranks = {}, set()
         for p in self.targets:
@@ -209,6 +228,12 @@ class AdapterStore:
         if len(t_ranks) != 1:
             raise ValueError(f"adapter rank mismatch across targets: "
                              f"{sorted(t_ranks)}")
+        if rank:
+            if not 1 <= rank <= min(t_ranks):
+                raise ValueError(
+                    f"explicit rank {rank} mismatch: outside [1, "
+                    f"{min(t_ranks)}] (the adapter leaves' own rank)")
+            t_ranks = {rank}
         extra = [p for p in pt.tree_paths(adapter)
                  if not any(p.startswith(t + "/") for t in self.targets)]
         if extra:
@@ -255,11 +280,11 @@ class AdapterStore:
             if db.shape != (*lead, r_t) or r_t > r:
                 raise ValueError(f"{prefix}: dB_mag rank mismatch "
                                  f"{db.shape} vs {(*lead, f'<={r}')}")
-            db = self._pad_rank(db, -1)
-            # same single addition the merged lora_delta path performs;
-            # rows above the tenant's rank carry a zero delta, i.e. the
-            # shared model's magnitudes
-            return {"pool_B_mag": self._shared_B_mag[prefix] + db}, r_t
+            # stored RAW: the kernel forms B_mag + ΔB_M itself and its
+            # rank mask covers the magnitude rows too — padded rows,
+            # stale rows, and the null slot all contribute exactly zero
+            return {"pool_dB_mag": self._pad_rank(
+                jnp.asarray(db, jnp.float32), -1)}, r_t
         if "lora_A" in sub:
             A, B = sub["lora_A"], sub["lora_B"]
         elif "A_dir" in sub:
@@ -288,9 +313,12 @@ class AdapterStore:
     def overlay(self) -> Params:
         """Pooled overlay pytree to merge into the backbone params —
         ``layers.linear`` consults these leaves when adapter_idx is set.
-        kind='pairs' pools also carry the per-slot rank table as a
-        ``pool_ranks`` leaf (broadcast over any scanned-block lead axis)
-        so the BGMV kernel masks each row at its slot's own rank."""
+        Both kinds carry the per-slot rank table as a ``pool_ranks`` leaf
+        (broadcast over any scanned-block lead axis) so the BGMV kernel
+        masks each row at its slot's own rank — for kind='dora_mag' the
+        mask covers the magnitude rows (shared B_mag + raw ΔB_M), which
+        is what serves a rank-r tenant its own rank-r slice of the shared
+        model and the null slot (rank 0) the bare backbone."""
         slot_ranks = jnp.asarray(self._slot_ranks)
         out: dict = {}
         for prefix, pool in self._pools.items():
@@ -299,10 +327,9 @@ class AdapterStore:
             for k in keys:
                 cur = cur.setdefault(k, {})
             cur.update(pool)
-            if self.kind == "pairs":
-                lead, _, _ = self.targets[prefix]
-                cur["pool_ranks"] = jnp.broadcast_to(
-                    slot_ranks, (*lead, self.n_slots + 1))
+            lead, _, _ = self.targets[prefix]
+            cur["pool_ranks"] = jnp.broadcast_to(
+                slot_ranks, (*lead, self.n_slots + 1))
         return out
 
     def bytes_per_tenant(self, tenant: str | None = None) -> int:
@@ -343,10 +370,13 @@ class AdapterStore:
 
     def load(self, path: str) -> int:
         """Restore pools + tenant table saved by ``save`` into this store
-        (must be constructed with the same base/cfg/n_slots/kind).
-        Checkpoints written before the slot-rank table existed restore
-        every occupied slot at the pool's full rank (their pools were
-        never padded)."""
+        (must be constructed with the same base/cfg/n_slots/kind and the
+        same pool rank).  Checkpoints written before the slot-rank table
+        existed restore every occupied slot at the pool's full rank
+        (their pools were never padded).  kind='dora_mag' checkpoints
+        from the pre-raw-delta layout (a ``pool_B_mag`` pool of merged
+        magnitudes) do not restore — the merge is not invertible per
+        slot; re-register the tenants."""
         like = self.state_tree()
         like["meta"]["slot_ranks"] = np.full((self.n_slots + 1,), self.rank,
                                              np.int32)

@@ -87,6 +87,14 @@ def client_specs(tree, mesh: Mesh):
     return jax.tree.map(lambda _: P(ax), tree)
 
 
+def replicated_specs(tree):
+    """PartitionSpec pytree replicating every leaf — the layout of the
+    federated pipeline's stage-2 state (the aggregated server model and
+    the server batch mixture carry no client axis and are identical on
+    every shard)."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
 def batch_spec(mesh: Mesh, ndim: int, batch_axis: int = 0) -> P:
     """Shard the batch dim over every data-like axis present in the mesh."""
     entries: list[Any] = [None] * ndim

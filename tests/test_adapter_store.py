@@ -121,6 +121,86 @@ def test_bytes_per_tenant_is_tiny_for_mag_kind(base, shared):
     assert mag_store.bytes_per_tenant() < pair_store.bytes_per_tenant() // 8
 
 
+def test_server_rank_pool_above_cfg_rank(base):
+    """A server-rank fleet (server_rank=16 > cfg.lora_rank=4) must pool
+    without truncation: tenants of ranks {2, 4, 8} and the rank-16
+    server adapter all register, each at its true rank."""
+    store = AdapterStore(base, CFG, n_slots=4, kind="pairs", rank=16)
+    assert store.rank == 16
+    for t, r in enumerate((2, 4, 8, 16)):
+        store.register(f"t{t}", _raw_adapter(base, 10 + t, rank=r))
+        assert store.rank_of(f"t{t}") == r
+    ov = store.overlay()
+    for p, leaf in zip(pt.tree_paths(ov), jax.tree.leaves(ov)):
+        if p.endswith("pool_A"):
+            assert leaf.shape[-1] == 16, p
+
+
+def test_register_explicit_rank_for_padded_fleet_adapters(base):
+    """A heterogeneous fleet allocates every client's adapters at the
+    server rank (rows above the client's own rank are zero) — the shape
+    alone over-states the rank, so register(rank=) records the true one
+    (and rejects a rank above the leaves' allocation)."""
+    store = AdapterStore(base, CFG, n_slots=2, kind="pairs", rank=16)
+    ad16 = _raw_adapter(base, 21, rank=16)
+    masks = peft.client_rank_masks(ad16, jnp.asarray([4]))
+    padded = jax.tree.map(lambda x, m: x * m[0], ad16, masks)
+    store.register("fleet4", padded, rank=4)
+    assert store.rank_of("fleet4") == 4
+    with pytest.raises(ValueError, match="mismatch"):
+        store.register("bad", padded, rank=32)
+
+
+def test_dora_mag_pool_follows_shared_server_rank(base):
+    """kind='dora_mag' with a server-rank shared tree must allocate the
+    pool at the shared tree's rank (it used to pin to cfg.lora_rank and
+    reject the fleet), and tenants below it pad in at their true rank."""
+    shared16 = peft.add_lora(base, CFG, jax.random.PRNGKey(7),
+                             decomposed=True, rank=16)
+    store = AdapterStore(base, CFG, n_slots=3, kind="dora_mag",
+                         shared=shared16)
+    assert store.rank == 16
+    for t, r in enumerate((2, 8, 16)):
+        overlay = pt.tree_map_with_path(
+            lambda p, x: 0.1 * (t + 1) * jnp.ones(x.shape[:-1] + (r,)),
+            pt.filter_tree(shared16, lambda p: p.endswith("dB_mag")))
+        store.register(f"m{t}", overlay)
+        assert store.rank_of(f"m{t}") == r
+    for p, leaf in zip(pt.tree_paths(store.overlay()),
+                       jax.tree.leaves(store.overlay())):
+        if p.endswith("pool_dB_mag"):
+            assert leaf.shape[-1] == 16, p
+
+
+def test_dora_mag_pool_stores_raw_deltas(base, shared):
+    """The magnitude pool holds the RAW ΔB_M (the shared B_mag lives in
+    its own bgmv_B_mag leaf) so the kernel's rank mask can cover the
+    magnitude rows; evicting zeroes the slot's delta and its rank."""
+    store = AdapterStore(base, CFG, n_slots=2, kind="dora_mag",
+                         shared=shared)
+    overlay = _mag_overlay(shared, 4)
+    slot = store.register("alice", overlay)
+    ov = store.overlay()
+    for prefix in store.targets:
+        got = pt.tree_get(ov, f"{prefix}/pool_dB_mag")
+        want = pt.tree_get(overlay, f"{prefix}/dB_mag")
+        lead, _, _ = store.targets[prefix]
+        idx = (slice(None), slot) if lead else (slot,)
+        np.testing.assert_array_equal(np.asarray(got[idx]),
+                                      np.asarray(want))
+        np.testing.assert_array_equal(
+            np.asarray(pt.tree_get(ov, f"{prefix}/bgmv_B_mag")),
+            np.asarray(pt.tree_get(shared, f"{prefix}/B_mag")))
+    assert int(pt.tree_get(ov, f"{list(store.targets)[0]}/pool_ranks"
+                           ).reshape(-1)[slot]) == CFG.lora_rank
+    store.evict("alice")
+    ov = store.overlay()
+    for prefix in store.targets:
+        got = pt.tree_get(ov, f"{prefix}/pool_dB_mag")
+        assert float(jnp.abs(got).max()) == 0.0
+    assert store._slot_ranks[slot] == 0
+
+
 def test_checkpoint_roundtrip(base, shared, tmp_path):
     path = str(tmp_path / "store.msgpack")
     store = AdapterStore(base, CFG, n_slots=3, kind="dora_mag", shared=shared)

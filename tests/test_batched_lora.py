@@ -40,11 +40,13 @@ def test_bgmv_mag_pallas_vs_ref(B, S, d, r, o, L):
     x = jnp.asarray(RNG.normal(size=(B, S, d)), jnp.float32)
     ad = jnp.asarray(RNG.normal(size=(d, r)) * 0.3, jnp.float32)
     am = jnp.asarray(RNG.uniform(0.5, 1.5, size=(d,)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(size=(r,)), jnp.float32)
     mp = jnp.asarray(RNG.normal(size=(L, r)), jnp.float32)
     bd = jnp.asarray(RNG.normal(size=(r, o)) * 0.3, jnp.float32)
     idx = jnp.asarray(RNG.integers(0, L, size=(B,)), jnp.int32)
-    y_ref = bgmv_mag(x, ad, am, mp, bd, idx, scale=4.0, impl="einsum")
-    y_pal = bgmv_mag(x, ad, am, mp, bd, idx, scale=4.0, impl="interpret")
+    y_ref = bgmv_mag(x, ad, am, bm, mp, bd, idx, scale=4.0, impl="einsum")
+    y_pal = bgmv_mag(x, ad, am, bm, mp, bd, idx, scale=4.0,
+                     impl="interpret")
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
                                rtol=1e-5, atol=1e-5)
 
@@ -121,16 +123,42 @@ def test_bgmv_mag_ranked_pallas_vs_ref():
     x = jnp.asarray(RNG.normal(size=(B, S, d)), jnp.float32)
     ad = jnp.asarray(RNG.normal(size=(d, r)) * 0.3, jnp.float32)
     am = jnp.asarray(RNG.uniform(0.5, 1.5, size=(d,)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(size=(r,)), jnp.float32)
     mp = jnp.asarray(RNG.normal(size=(L, r)), jnp.float32)
     bd = jnp.asarray(RNG.normal(size=(r, o)) * 0.3, jnp.float32)
     idx = jnp.asarray(RNG.integers(0, L, size=(B,)), jnp.int32)
-    ranks = jnp.asarray(RNG.integers(1, r + 1, size=(L,)), jnp.int32)
-    y_ref = bgmv_mag(x, ad, am, mp, bd, idx, scale=4.0, impl="einsum",
+    ranks = jnp.asarray(RNG.integers(0, r + 1, size=(L,)), jnp.int32)
+    y_ref = bgmv_mag(x, ad, am, bm, mp, bd, idx, scale=4.0, impl="einsum",
                      ranks=ranks)
-    y_pal = bgmv_mag(x, ad, am, mp, bd, idx, scale=4.0, impl="interpret",
-                     ranks=ranks)
+    y_pal = bgmv_mag(x, ad, am, bm, mp, bd, idx, scale=4.0,
+                     impl="interpret", ranks=ranks)
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_bgmv_mag_ranked_masks_shared_rows_too():
+    """The raw-delta magnitude path must serve slot rank rᵢ as the first
+    rᵢ rows of the SHARED model plus the delta — rows ≥ rᵢ (including
+    the shared B_mag contribution) are gone, and a rank-0 slot
+    contributes exactly nothing."""
+    B, S, d, r, o, L = 4, 6, 32, 8, 48, 4
+    x = jnp.asarray(RNG.normal(size=(B, S, d)), jnp.float32)
+    ad = jnp.asarray(RNG.normal(size=(d, r)) * 0.3, jnp.float32)
+    am = jnp.asarray(RNG.uniform(0.5, 1.5, size=(d,)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(size=(r,)), jnp.float32)
+    mp = jnp.asarray(RNG.normal(size=(L, r)), jnp.float32)
+    bd = jnp.asarray(RNG.normal(size=(r, o)) * 0.3, jnp.float32)
+    idx = jnp.arange(B, dtype=jnp.int32)
+    ranks = jnp.asarray([0, 2, 4, 8], jnp.int32)
+    y = bgmv_mag(x, ad, am, bm, mp, bd, idx, scale=1.5, impl="einsum",
+                 ranks=ranks)
+    np.testing.assert_array_equal(np.asarray(y[0]), 0.0)   # rank-0 slot
+    for i in range(1, B):
+        rr = int(ranks[i])
+        h = (x[i] * am) @ ad[:, :rr]
+        want = (h * (bm + mp[i])[:rr]) @ bd[:rr] * 1.5
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_bgmv_full_rank_table_matches_unranked():
@@ -190,17 +218,18 @@ def test_linear_pooled_matches_per_row_merged():
                     x[i:i + 1], lora_scale=2.0)
         np.testing.assert_array_equal(np.asarray(y[i:i + 1]), np.asarray(yi))
 
-    # decomposed magnitude layout
+    # decomposed magnitude layout: shared B_mag + raw per-slot ΔB_M
     ad = jnp.asarray(RNG.normal(size=(d, r)) * 0.3, jnp.float32)
     am = jnp.asarray(RNG.uniform(0.5, 1.5, size=(d,)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(size=(r,)), jnp.float32)
     bd = jnp.asarray(RNG.normal(size=(r, o)) * 0.3, jnp.float32)
-    mags = jnp.asarray(RNG.normal(size=(L, r)), jnp.float32)
+    dmags = jnp.asarray(RNG.normal(size=(L, r)), jnp.float32)
     y = linear({"kernel": kern, "bgmv_A_dir": ad, "bgmv_A_mag": am,
-                "bgmv_B_dir": bd, "pool_B_mag": mags}, x,
-               lora_scale=2.0, adapter_idx=idx)
+                "bgmv_B_mag": bm, "bgmv_B_dir": bd, "pool_dB_mag": dmags},
+               x, lora_scale=2.0, adapter_idx=idx)
     for i in range(L):
         p = {"kernel": kern, "A_dir": ad, "A_mag": am, "B_dir": bd,
-             "B_mag": mags[i]}
+             "B_mag": bm, "dB_mag": dmags[i]}
         yi = linear(p, x[i:i + 1], lora_scale=2.0)
         np.testing.assert_array_equal(np.asarray(y[i:i + 1]), np.asarray(yi))
 

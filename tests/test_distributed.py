@@ -89,8 +89,8 @@ def compare(name, prod, ref):
                            if p.endswith("lora_A")):
             pa, pb = pref + "/lora_A", pref + "/lora_B"
             np.testing.assert_allclose(
-                np.einsum("c...ir,c...ro->c...io", prod.pop(pa), prod.pop(pb)),
-                np.einsum("c...ir,c...ro->c...io", ref.pop(pa), ref.pop(pb)),
+                np.einsum("...ir,...ro->...io", prod.pop(pa), prod.pop(pb)),
+                np.einsum("...ir,...ro->...io", ref.pop(pa), ref.pop(pb)),
                 rtol=5e-4, atol=5e-5, err_msg=f"{name}:{pref}")
     for p in sorted(prod):
         np.testing.assert_allclose(prod[p], ref[p], rtol=2e-4, atol=2e-5,
@@ -120,6 +120,78 @@ def run_case(name, ranks=None, weights=None, prox_mu=0.0):
         assert np.isfinite(float(met["ce"])), (name, r)
     compare(name, na, sim.client_adapters)
     print("OK", name, "ranks" if ranks else "", "weights" if weights else "")
+
+
+# ---- full three-stage pipeline: shard_map == FedSim stage by stage ----
+TG, TP = 2, 2          # stage-2 / stage-3 steps per pipeline iteration
+
+
+def make_server_batches(n):
+    return [{"tokens": jnp.asarray(
+                 rng.integers(5, cfg.vocab_size, size=(B, S)), jnp.int32),
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+            for _ in range(n)]
+
+
+def flat(bs, axis):
+    return {k: jnp.concatenate([b[k] for b in bs], axis=axis)
+            for k in bs[0]}
+
+
+def keep_leaves(method, tree):
+    import re
+    if not method.keep_local:
+        return {}
+    rx = re.compile(method.keep_local)
+    return {p: np.asarray(x) for p, x in
+            zip(pt.tree_paths(tree), jax.tree.leaves(tree)) if rx.search(p)}
+
+
+def run_pipeline_case(name, ranks=None, weights=None, prox_mu=0.0):
+    from repro.launch.train import make_fed_pipeline_step
+    method = get_method(name)
+    hp = FedHyper(method=name, n_clients=C, local_steps=T, batch=B,
+                  seq_len=S, lr=1e-2, server_lr=5e-3, global_steps=TG,
+                  personal_steps=TP, lam=1e-2, prox_mu=prox_mu,
+                  client_ranks=ranks, client_weights=weights)
+    sim = FedSim(cfg, hp)
+    st = TrainSettings(lr=hp.lr, micro_batches=1, clip=hp.clip, remat=False,
+                       method=name, local_steps=T, prox_mu=prox_mu,
+                       client_ranks=ranks, client_weights=weights,
+                       server_lr=hp.server_lr, global_steps=TG,
+                       personal_steps=TP, lam=hp.lam)
+    pipe = make_fed_pipeline_step(cfg, mesh, st)
+    na, no = sim.client_adapters, sim.opt_state
+    step0 = jnp.zeros((), jnp.int32)
+    anchor = None
+    agg_p = None
+    for r in range(ROUNDS):
+        cb, sb = make_batches(), make_server_batches(TG)
+        pb = (make_batches() + make_batches())[:TP]
+        na, no, agg_p, met = pipe.round_step(
+            sim.base, na, no, step0, flat(cb, 1), anchor)
+        anchor = na if method.prox else None
+        kept = keep_leaves(method, na)
+        agg_p, na, _ = pipe.global_step(sim.base, agg_p, na, flat(sb, 0))
+        # keep-local leaves must pass through stage 2 untouched
+        for p, want in kept.items():
+            node = na
+            for k in p.split("/"):
+                node = node[k]
+            np.testing.assert_array_equal(np.asarray(node), want,
+                                          err_msg=f"{name}:stage2-kept:{p}")
+        na, _ = pipe.personal_step(sim.base, na, flat(pb, 1))
+
+        sim.local_round(cb, jax.random.PRNGKey(r))
+        agg_s = sim.aggregate()
+        agg_s = sim.global_stage(agg_s, sb, jax.random.PRNGKey(100 + r))
+        sim.personalize(pb, jax.random.PRNGKey(200 + r))
+        step0 = step0 + T
+        assert np.isfinite(float(met["ce"])), (name, r)
+    compare(name, na, sim.client_adapters)
+    compare(name, agg_p, agg_s)
+    print("PIPE-OK", name, "ranks" if ranks else "",
+          "weights" if weights else "")
 """
 
 
@@ -153,6 +225,44 @@ run_case("lora", weights=(1., 2., 3., 4.))
 print("HET-OK")
 """)
     assert "HET-OK" in out, out
+
+
+@pytest.mark.slow
+def test_pipeline_parity_all_methods():
+    """The full three-stage pipeline (stage-1 round → stage-2 global
+    optimizer on replicated server batches → stage-3 per-client
+    personalization) matches the FedSim sequence ``run_round →
+    global_stage → personalize`` for every registry method over 2 full
+    iterations — final client adapters AND the aggregated server model;
+    keep-local leaves are verified untouched by stage 2."""
+    out = _run(PARITY_HARNESS + r"""
+names = available_methods()
+for name in names:
+    m = get_method(name)
+    run_pipeline_case(name, prox_mu=0.05 if m.prox else 0.0)
+print("PIPE-SWEPT", len(names))
+""", timeout=1800)
+    assert "PIPE-SWEPT 11" in out, out
+
+
+@pytest.mark.slow
+def test_pipeline_parity_het_and_weighted_fleets():
+    """Mixed-rank and data-size-weighted fleets through the full
+    pipeline: stage 2 trains the server model at the full allocated rank
+    and the rebroadcast re-masks each client to its own rank; stage 3
+    masks every personalization update the same way the simulator
+    does."""
+    out = _run(PARITY_HARNESS + r"""
+run_pipeline_case("fedlora_opt", ranks=(1, 2, 3, 4))
+run_pipeline_case("lora_zeropad", ranks=(1, 2, 3, 4))
+run_pipeline_case("lora_replication", ranks=(1, 2, 3, 4),
+                  weights=(1., 2., 3., 4.))
+run_pipeline_case("lora_exact", ranks=(1, 2, 3, 4), weights=(4., 3., 2., 1.))
+run_pipeline_case("fedalt", ranks=(2, 4, 4, 2))
+run_pipeline_case("lora", weights=(1., 2., 3., 4.))
+print("PIPE-HET-OK")
+""", timeout=1800)
+    assert "PIPE-HET-OK" in out, out
 
 
 def test_fed_train_step_rejects_bad_fleets():

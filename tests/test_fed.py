@@ -69,6 +69,47 @@ def test_comm_accounting_counts_adapters_only():
     assert sim.comm_bytes < pt.tree_bytes(sim.base) / 2   # « backbone
 
 
+def test_comm_accounting_bills_collective_class():
+    """Gather-class methods (lora_exact, lora_trimmed) move
+    (C+1)·|adapters| per client per round — each client uplinks its
+    factors once and downlinks every client's stack — while the psum
+    family moves 2·|adapters|.  The engine must bill the method's true
+    comm class, not a flat psum rate."""
+    from repro.core.methods import get_method
+    assert agg.comm_class(get_method("lora")) == "psum"
+    assert agg.comm_class(get_method("fedlora_opt")) == "psum"
+    assert agg.comm_class(get_method("lora_exact")) == "all_gather"
+    assert agg.comm_class(get_method("lora_trimmed")) == "all_gather"
+    with pytest.raises(ValueError, match="n_clients"):
+        agg.comm_bytes_per_round({"a": jnp.zeros((2, 2))},
+                                 comm="all_gather")
+
+    C = 4
+    for method, factor in [("lora", 2), ("lora_exact", C + 1),
+                           ("lora_trimmed", C + 1)]:
+        sim = FedSim(CFG, FedHyper(method=method, n_clients=C))
+        sim.aggregate()
+        per_client = pt.tree_bytes(sim.adapter_template)
+        assert sim.comm_bytes == C * factor * per_client, method
+
+    # heterogeneous fleet: each client bills its own rank rows, still at
+    # the gather rate
+    ranks = (2, 4, 4)
+    sim = FedSim(CFG, FedHyper(method="lora_exact", n_clients=3,
+                               client_ranks=ranks))
+    sim.aggregate()
+    expect = 0
+    for r in ranks:
+        for path, leaf in zip(pt.tree_paths(sim.adapter_template),
+                              jax.tree.leaves(sim.adapter_template)):
+            shape = list(leaf.shape)
+            ax = peft.rank_axis(path)
+            if ax is not None:
+                shape[leaf.ndim + ax] = min(r, shape[leaf.ndim + ax])
+            expect += (3 + 1) * int(np.prod(shape)) * leaf.dtype.itemsize
+    assert sim.comm_bytes == expect
+
+
 def test_stage_masks_select_expected_leaves():
     ad = peft.add_lora(M.init_params(jax.random.PRNGKey(0), CFG), CFG,
                        jax.random.PRNGKey(1), decomposed=True)

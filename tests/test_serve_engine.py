@@ -182,6 +182,70 @@ def test_mixed_rank_continuous_batching(base):
         np.testing.assert_array_equal(results[rids[t]], np.asarray(ref[0]))
 
 
+def _rank_masked_decomposed(shared, r_t, delta_overlay, pool_rank):
+    """A rank-r_t tenant's own federated model: the shared decomposed
+    tree re-masked to the first r_t rank rows (FedSim's rebroadcast
+    re-mask) plus its ΔB_M delta, padded to the pool allocation."""
+    from repro.core.peft import rank_axis
+
+    def mask_one(p, x):
+        ax = rank_axis(p)
+        if ax is None:
+            return x
+        ax_abs = x.ndim + ax
+        keep = jnp.arange(x.shape[ax_abs]) < r_t
+        return x * keep.reshape([-1 if a == ax_abs else 1
+                                 for a in range(x.ndim)])
+
+    tree = pt.tree_map_with_path(mask_one, shared)
+    for p in pt.tree_paths(delta_overlay):
+        d = pt.tree_get(delta_overlay, p)
+        pad = [(0, 0)] * (d.ndim - 1) + [(0, pool_rank - d.shape[-1])]
+        pt.set_leaf(tree, p, jnp.pad(d, pad))
+    return tree
+
+
+def test_mixed_rank_dora_mag_matches_truncated_per_tenant(base):
+    """Mixed-rank ΔB_M tenants {2, 4, 8} in a server-rank-16 pool + the
+    null slot in ONE batch: each row must exact-match the merged run of
+    its own federated model — the shared model's first r rank rows plus
+    its delta (the raw-delta pool + magnitude rank mask; a pre-merged
+    magnitude pool would serve the full-rank shared rows to every
+    tenant), the null row the bare backbone."""
+    shared16 = peft.add_lora(base, CFG, jax.random.PRNGKey(4),
+                             decomposed=True, rank=16)
+    shared16 = pt.tree_map_with_path(
+        lambda p, x: x + 0.25 if p.endswith("B_mag") else x, shared16)
+    store = AdapterStore(base, CFG, n_slots=4, kind="dora_mag",
+                         shared=shared16)
+    assert store.rank == 16
+    ranks = {0: 2, 1: 4, 2: 8}
+    deltas = {}
+    for t, r in ranks.items():
+        key = jax.random.PRNGKey(40 + t)
+        deltas[t] = pt.tree_map_with_path(
+            lambda p, x: 0.2 * jax.random.normal(
+                jax.random.fold_in(key, hash(p) % 2**30),
+                x.shape[:-1] + (r,)),
+            pt.filter_tree(shared16, lambda p: p.endswith("dB_mag")))
+        store.register(f"m{t}", deltas[t])
+        assert store.rank_of(f"m{t}") == r
+    eng = ServeEngine(base, CFG, store, max_rows=4, max_prompt_len=8,
+                      max_len=24, decode_chunk=8)
+    prompts = _prompts(4, 8)
+    outs = eng.generate([(f"m{t}", prompts[t]) for t in ranks]
+                        + [(None, prompts[3])], n_new=5)
+    for t, r in ranks.items():
+        tree = _rank_masked_decomposed(shared16, r, deltas[t], store.rank)
+        merged = merge_adapters(base, tree)
+        ref = greedy_generate(merged, {"tokens": jnp.asarray(prompts[t:t+1])},
+                              CFG, n_new=5)
+        np.testing.assert_array_equal(outs[t], np.asarray(ref[0]))
+    ref = greedy_generate(base, {"tokens": jnp.asarray(prompts[3:4])}, CFG,
+                          n_new=5)
+    np.testing.assert_array_equal(outs[3], np.asarray(ref[0]))
+
+
 def test_slot_reuse_masks_stale_high_rank_rows(base):
     """Evicting a rank-8 tenant and re-registering a rank-2 tenant into
     the same slot must serve the rank-2 adapter exactly — the rank mask
@@ -246,8 +310,9 @@ def test_pooled_routing_outranks_fused_path(base, shared):
          "B_mag": jnp.ones((r,), jnp.float32),
          "bgmv_A_dir": jnp.asarray(RNG.normal(size=(d, r)) * 0.3, jnp.float32),
          "bgmv_A_mag": jnp.ones((d,), jnp.float32),
+         "bgmv_B_mag": jnp.ones((r,), jnp.float32),
          "bgmv_B_dir": jnp.asarray(RNG.normal(size=(r, o)) * 0.3, jnp.float32),
-         "pool_B_mag": jnp.asarray(RNG.normal(size=(L, r)), jnp.float32)}
+         "pool_dB_mag": jnp.asarray(RNG.normal(size=(L, r)), jnp.float32)}
     x = jnp.asarray(RNG.normal(size=(2, 3, d)), jnp.float32)
     idx = jnp.asarray([0, 1], jnp.int32)
     y_fused = linear(p, x, lora_scale=2.0, fused=True, adapter_idx=idx)
