@@ -1,4 +1,4 @@
-.PHONY: test test-serve test-het test-dist test-fast perf serve-bench bench-smoke
+.PHONY: test test-serve test-het test-dist test-quant test-fast perf serve-bench bench-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -18,6 +18,11 @@ test-het:
 test-dist:
 	bash scripts/ci.sh --dist
 
+# quantized hot paths (int8/int4 codecs + dequant-fused matmul +
+# quantized serving, compressed-uplink aggregation + billing)
+test-quant:
+	bash scripts/ci.sh --quant
+
 # tier-1 minus the slow sweeps and the multi-device dist tests
 test-fast:
 	bash scripts/ci.sh --fast
@@ -33,5 +38,5 @@ serve-bench:
 # the CI benchmark smoke job, locally: micro entries + regression check
 # against the checked-in trajectory (benchmarks/baselines/)
 bench-smoke:
-	PYTHONPATH=src python -m benchmarks.run --only perf,het,dist,pipeline --fresh
+	PYTHONPATH=src python -m benchmarks.run --only perf,het,dist,pipeline,quant --fresh
 	PYTHONPATH=src python scripts/check_bench.py

@@ -45,8 +45,39 @@ def table(recs: list[dict]) -> list[str]:
     return lines
 
 
+def quant_decode_table() -> list[str]:
+    """Analytic batch-1 decode roofline for the quantized backbone on
+    the serve bench config: decode reads every live weight byte once per
+    token, so step time is tree_bytes/HBM_BW and the f32/int8 byte ratio
+    IS the bandwidth-bound decode speedup (adapters + logit-critical
+    leaves stay f32; see docs/quantization.md)."""
+    import jax
+
+    from benchmarks.common import BENCH_CFG
+    from repro.kernels.quant_matmul.ops import quantize_backbone
+    from repro.launch.analysis import HBM_BW
+    from repro.models import model as M
+    from repro.utils import pytree as pt
+
+    base = M.init_params(jax.random.PRNGKey(0), BENCH_CFG)
+    f32 = pt.tree_bytes(base)
+    lines = [f"{'decode backbone':24s} {'bytes':>10s} {'step_s':>10s} "
+             f"{'speedup':>8s}   (batch-1, weight-bytes-bound)"]
+    for mode, tree in [("f32", base),
+                       ("int8", quantize_backbone(base, "int8")),
+                       ("int4", quantize_backbone(base, "int4"))]:
+        b = pt.tree_bytes(tree)
+        lines.append(f"{BENCH_CFG.name + '/' + mode:24s} {b:10d} "
+                     f"{b / HBM_BW:10.3e} {f32 / b:7.2f}x")
+    return lines
+
+
 def main():
     recs = load_records()
+    print()
+    for line in quant_decode_table():
+        print(line)
+    print()
     if not recs:
         print("no dry-run records found — run "
               "`python -m repro.launch.dryrun --all` first")

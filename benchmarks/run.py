@@ -13,7 +13,7 @@ import os
 import time
 
 ALL = ("table1", "table2", "fig1", "fig3", "perf", "het", "dist",
-       "pipeline", "serve", "roofline")
+       "pipeline", "quant", "serve", "roofline")
 
 
 def main():
@@ -99,9 +99,18 @@ def main():
         for r in rows:
             csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},"
                              f"ratio_vs_engine={r['ratio']:.2f}")
+    if "quant" in which:
+        from benchmarks import perf_micro
+        rows = cached("quant", lambda: perf_micro.run_quant()[0])
+        results["quant"] = rows
+        for r in rows:
+            extra = (f"bytes_ratio={r['bytes_ratio']:.2f}"
+                     if "bytes_ratio" in r else "smoke_cpu")
+            csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},{extra}")
     if "serve" in which:
         from benchmarks import serve_multitenant
-        rows = cached("serve", lambda: serve_multitenant.run()[0])
+        rows = cached("serve", lambda: (serve_multitenant.run()[0]
+                                        + serve_multitenant.run_quant()[0]))
         results["serve"] = rows
         for r in rows:
             csv_lines.append(f"{r['arch']},{r['us']:.0f},"
@@ -110,6 +119,8 @@ def main():
         from benchmarks import roofline
         recs = roofline.load_records()
         results["roofline_n"] = len(recs)
+        for line in roofline.quant_decode_table():
+            print(line)
         for line in roofline.table(recs):
             print(line)
         for r in recs:

@@ -2,9 +2,14 @@
 """CI benchmark smoke gate.
 
 Reads the JSON the benchmark harness wrote (``python -m benchmarks.run
---only perf,het,dist --fresh`` → experiments/bench/) and fails if the
-heterogeneous-round overhead ratio regressed past the bar recorded in
-``benchmarks/baselines/het_round.json`` (the PR-3 seed trajectory).
+--only perf,het,dist,pipeline,quant --fresh`` → experiments/bench/) and
+fails if a gated ratio regressed past its checked-in bar:
+
+  * ``baselines/het_round.json`` — the masked mixed-rank round must stay
+    within ``max_ratio`` of the uniform round (PR-3 trajectory);
+  * ``baselines/quant_decode.json`` — the analytic f32/int8 decode byte
+    ratio of the quantized backbone must stay above ``min_ratio``
+    (PR-6 trajectory; see docs/quantization.md).
 
 Exit status is the contract: 0 = within the bar, 1 = regression or
 missing results.  The CI lane uploads experiments/bench/ as an artifact
@@ -17,24 +22,31 @@ import os
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BASELINE = os.path.join(ROOT, "benchmarks", "baselines", "het_round.json")
-RESULTS = os.path.join(ROOT, "experiments", "bench", "het.json")
+BASELINES = os.path.join(ROOT, "benchmarks", "baselines")
+BENCH = os.path.join(ROOT, "experiments", "bench")
 
 
-def main() -> int:
-    with open(BASELINE) as f:
+def _load(name: str, results: str):
+    with open(os.path.join(BASELINES, name)) as f:
         base = json.load(f)
-    if not os.path.exists(RESULTS):
-        print(f"[check_bench] FAIL: no benchmark results at {RESULTS} — "
+    path = os.path.join(BENCH, results)
+    if not os.path.exists(path):
+        print(f"[check_bench] FAIL: no benchmark results at {path} — "
               "run `make bench-smoke` (= `python -m benchmarks.run --only "
-              "perf,het,dist --fresh` + this check) first")
-        return 1
-    with open(RESULTS) as f:
-        rows = json.load(f)
+              "perf,het,dist,pipeline,quant --fresh` + this check) first")
+        return base, None
+    with open(path) as f:
+        return base, json.load(f)
+
+
+def check_het() -> bool:
+    base, rows = _load("het_round.json", "het.json")
+    if rows is None:
+        return False
     het = [r for r in rows if r.get("arch") == "fed_round/het_masked"]
     if not het:
-        print(f"[check_bench] FAIL: no fed_round/het_masked row in {RESULTS}")
-        return 1
+        print("[check_bench] FAIL: no fed_round/het_masked row in het.json")
+        return False
     ratio = float(het[0]["ratio"])
     bar = float(base["max_ratio"])
     recorded = base["recorded"]
@@ -45,6 +57,37 @@ def main() -> int:
         print("[check_bench] FAIL: masked mixed-rank round regressed past "
               "the bar — the het fleet is paying more than rank-mask "
               "elementwise work on top of the uniform round")
+        return False
+    return True
+
+
+def check_quant() -> bool:
+    base, rows = _load("quant_decode.json", "quant.json")
+    if rows is None:
+        return False
+    q8 = [r for r in rows if r.get("arch") == "quant/decode_int8"]
+    if not q8:
+        print("[check_bench] FAIL: no quant/decode_int8 row in quant.json")
+        return False
+    ratio = float(q8[0]["bytes_ratio"])
+    bar = float(base["min_ratio"])
+    recorded = base["recorded"]
+    print(f"[check_bench] quant decode byte ratio {ratio:.2f}x "
+          f"(bar {bar:.2f}x; recorded {recorded['ratio']:.2f}x in "
+          f"PR {recorded['pr']})")
+    if ratio < bar:
+        print("[check_bench] FAIL: the int8 backbone stopped being "
+              "materially smaller than f32 — a projection leaf is no "
+              "longer quantizing (or scales ballooned), so the "
+              "bytes-bound decode win is gone")
+        return False
+    return True
+
+
+def main() -> int:
+    ok = check_het()
+    ok = check_quant() and ok
+    if not ok:
         return 1
     print("[check_bench] OK")
     return 0

@@ -12,6 +12,10 @@
 #                              # parity sweeps on 8 virtual host devices
 #                              # (tests spawn their own subprocess with the
 #                              # XLA flag)
+#   scripts/ci.sh --quant      # quantized hot paths: int8/int4 codecs +
+#                              # dequant-fused matmul + quantized serving
+#                              # (test_quant.py), compressed-uplink
+#                              # aggregation laws + comm billing
 #   scripts/ci.sh --fast       # tier-1 minus the slow sweeps and the
 #                              # multi-device dist tests
 #                              # (-m 'not slow and not dist')
@@ -39,6 +43,15 @@ case "${1:-}" in
     # device count at first init, and conftest keeps the parent process
     # single-device on purpose)
     exec python -m pytest -x -q -m dist tests/test_distributed.py "$@"
+    ;;
+  --quant)
+    shift
+    # serving quant (codecs, kernel-vs-oracle, quantize_backbone,
+    # quantized engine) + the compressed-uplink side (codec property
+    # laws in test_aggregation_properties.py, billing + round behaviour
+    # in test_fed.py)
+    exec python -m pytest -x -q tests/test_quant.py \
+      tests/test_aggregation_properties.py tests/test_fed.py "$@"
     ;;
   --fast)
     shift

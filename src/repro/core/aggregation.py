@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any
 
 import jax
@@ -206,6 +207,108 @@ def exact_fedavg(client_adapters: Params, weights=None, *, ranks=None,
     return out
 
 
+# ---------------------------------------------------------------------------
+# compressed client→server uplink (COMPRESSED comm class)
+# ---------------------------------------------------------------------------
+#
+# The psum/all_gather classes move full-precision adapters.  The COMPRESSED
+# class encodes each client's update *before* the collective and decodes
+# server-side, so the uplink bills int8 codes (or a sparse top-k set)
+# instead of f32 — the downlink aggregate stays dense f32.  Two codecs:
+#
+#   q8    stochastic-rounded symmetric int8 with one f32 scale per leaf.
+#         Stochastic rounding makes the codec *unbiased* (E[decode] = x
+#         per coordinate), so the aggregate error is pure zero-mean
+#         rounding noise — the property suite pins both laws.
+#   topk  magnitude top-k sparsification (deterministic, biased); k =
+#         ⌈topk_ratio·n⌉ per leaf.
+#
+# Parity contract: the simulator's host aggregate (CompressedFedAvg) and
+# the shard_map collective derive the q8 rounding key from the same
+# (seed, round step, client index, leaf index) chain, so both engines
+# draw bit-identical rounding masks — the dist parity sweep covers the
+# compressed methods like every other.
+
+
+def client_index(axes) -> jnp.ndarray:
+    """Linear index of this shard along the stacked client axis inside a
+    shard_map manual region — row-major over ``axes``, matching the order
+    ``jax.lax.all_gather`` (and the simulator's client stacking) uses."""
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    idx = jnp.zeros((), jnp.int32)
+    for ax in axes:
+        idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def _sr_int8_roundtrip(x, key):
+    """Stochastically-rounded symmetric int8 encode→decode of one leaf
+    (one f32 scale per leaf).  q = ⌊y⌋ + Bernoulli(y − ⌊y⌋) is unbiased
+    per coordinate, and an all-zero leaf round-trips to exact zeros (the
+    heterogeneous-rank padding rows never pick up noise)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+    y = jnp.clip(x.astype(jnp.float32) / scale, -127.0, 127.0)
+    lo = jnp.floor(y)
+    q = lo + (jax.random.uniform(key, x.shape) < (y - lo))
+    return (q * scale).astype(x.dtype)
+
+
+def _topk_roundtrip(x, ratio: float):
+    """Keep the ⌈ratio·n⌉ largest-magnitude coordinates of the leaf, zero
+    the rest.  Deterministic (no rng) and biased — the property suite
+    bounds its aggregate error instead of an unbiasedness law."""
+    k = max(1, int(math.ceil(ratio * x.size)))
+    if k >= x.size:
+        return x
+    flat = x.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat).astype(jnp.float32), k)
+    return jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(x.shape)
+
+
+def compress_update(adapters: Params, *, mode: str, step=0, client_idx=0,
+                    topk_ratio: float = 0.01, seed: int = 0) -> Params:
+    """Encode→decode one client's adapter update through the compressed
+    uplink.  ``mode`` "q8" draws its stochastic-rounding mask from a key
+    chained over (seed, step, client_idx, leaf index) — both engines pass
+    the same chain, so their draws match bit-for-bit; "topk" is
+    deterministic and ignores the rng inputs."""
+    if mode == "topk":
+        return jax.tree.map(lambda x: _topk_roundtrip(x, topk_ratio),
+                            adapters)
+    if mode != "q8":
+        raise ValueError(f"unknown compression mode {mode!r} (q8 | topk)")
+    base = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), step), client_idx)
+    leaves, treedef = jax.tree.flatten(adapters)
+    enc = [_sr_int8_roundtrip(x, jax.random.fold_in(base, i))
+           for i, x in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, enc)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedFedAvg:
+    """Host aggregate: every client's update rides the compressed uplink
+    (``compress_update``) before the weighted mean — the client-stacked
+    twin of the COMPRESSED collective.  ``needs_step`` (class attribute)
+    tells ``FedSim.aggregate`` to pass its round counter so the q8
+    rounding keys match the production engine's."""
+    mode: str                     # "q8" | "topk"
+    topk_ratio: float = 0.01
+    seed: int = 0
+
+    needs_step = True             # no annotation → class attr, not a field
+
+    def __call__(self, client_adapters: Params, weights=None, *,
+                 step=0) -> Params:
+        C = jax.tree.leaves(client_adapters)[0].shape[0]
+        enc = jax.vmap(
+            lambda ad, c: compress_update(
+                ad, mode=self.mode, step=step, client_idx=c,
+                topk_ratio=self.topk_ratio, seed=self.seed)
+        )(client_adapters, jnp.arange(C))
+        return fedavg(enc, weights)
+
+
 def broadcast_to_clients(agg: Params, n_clients: int) -> Params:
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), agg)
@@ -261,7 +364,8 @@ def comm_bytes_per_round(adapters_one_client: Params,
                          exclude_rx: str | None = None,
                          rank: int | None = None,
                          comm: str = "psum",
-                         n_clients: int | None = None) -> int:
+                         n_clients: int | None = None,
+                         topk_ratio: float = 0.01) -> int:
     """Per-client bytes for one round's aggregation (adapter leaves only
     — the frozen backbone never moves; the PEFT communication story).
     Leaves matching ``exclude_rx`` stay client-local (a method's
@@ -272,13 +376,18 @@ def comm_bytes_per_round(adapters_one_client: Params,
     never leave the device).
 
     ``comm`` is the collective's comm class (``CollectiveAgg.comm``,
-    resolved via ``comm_class``):
+    resolved via ``comm_class``), billed per transmitted leaf of n
+    elements × ``itemsize`` bytes:
 
-      psum        2·|adapters| — updates up, aggregate down.
-      all_gather  (C+1)·|adapters| — each client uplinks its adapters
+      psum        2·n·itemsize — updates up, aggregate down.
+      all_gather  (C+1)·n·itemsize — each client uplinks its adapters
                   once and downlinks all C clients' stacks (the gather
                   methods re-run the host aggregator per client), so
                   ``n_clients`` is required.
+      q8          n·1 + 4 up (int8 codes + one f32 scale per leaf),
+                  n·itemsize down (the dense f32 aggregate).
+      topk        k·(itemsize + 4) up (k = max(1, ⌈topk_ratio·n⌉)
+                  value/int32-index pairs), n·itemsize down.
     """
     import re
     from repro.core.peft import rank_axis
@@ -286,25 +395,31 @@ def comm_bytes_per_round(adapters_one_client: Params,
     if exclude_rx is not None:
         rx = re.compile(exclude_rx)
         tree = pt.filter_tree(tree, lambda p: not rx.search(p))
-    if comm == "psum":
-        factor = 2
-    elif comm == "all_gather":
-        if n_clients is None:
-            raise ValueError("all_gather comm accounting needs n_clients "
-                             "(each client downlinks every client's stack)")
-        factor = n_clients + 1
-    else:
-        raise ValueError(f"unknown comm class {comm!r} (psum | all_gather)")
-    if rank is None:
-        return factor * pt.tree_bytes(tree)
+    if comm == "all_gather" and n_clients is None:
+        raise ValueError("all_gather comm accounting needs n_clients "
+                         "(each client downlinks every client's stack)")
+    if comm not in ("psum", "all_gather", "q8", "topk"):
+        raise ValueError(f"unknown comm class {comm!r} "
+                         "(psum | all_gather | q8 | topk)")
     total = 0
     for path, leaf in zip(pt.tree_paths(tree), jax.tree.leaves(tree)):
         shape = list(leaf.shape)
-        ax = rank_axis(path)
-        if ax is not None:
-            shape[leaf.ndim + ax] = min(rank, shape[leaf.ndim + ax])
-        total += int(np.prod(shape)) * leaf.dtype.itemsize
-    return factor * total
+        if rank is not None:
+            ax = rank_axis(path)
+            if ax is not None:
+                shape[leaf.ndim + ax] = min(rank, shape[leaf.ndim + ax])
+        n = int(np.prod(shape))
+        sz = leaf.dtype.itemsize
+        if comm == "psum":
+            total += 2 * n * sz
+        elif comm == "all_gather":
+            total += (n_clients + 1) * n * sz
+        elif comm == "q8":
+            total += n + 4 + n * sz
+        else:                               # topk
+            k = max(1, int(math.ceil(topk_ratio * n)))
+            total += k * (sz + 4) + n * sz
+    return total
 
 
 def fedavg_excluding(client_adapters: Params, weights=None, *,
@@ -361,7 +476,7 @@ def client_adapters_leaf(path, new_leaf, client_adapters, rx):
 # shard_map train step (launch/train.py) never holds that stack: each
 # client's adapters live on its own shard, and aggregation must be a
 # cross-shard collective issued from inside the manual region.  A
-# ``CollectiveAgg`` is that shard_map-expressible form.  Two comm classes:
+# ``CollectiveAgg`` is that shard_map-expressible form.  Comm classes:
 #
 #   psum        weighted psum of updates over psum of weights — one
 #               all-reduce of adapter bytes.  Covers the whole mean
@@ -374,6 +489,10 @@ def client_adapters_leaf(path, new_leaf, client_adapters, rx):
 #               C× the comm of psum, compute replicated per shard; the
 #               payload is adapter-sized, so both stay trivially small
 #               next to one microbatch of activations.
+#   q8 / topk   COMPRESSED: encode the update on-shard (compress_update)
+#               before a weighted psum of the *decoded* values — the
+#               uplink bills int8 codes / a sparse top-k set, the
+#               downlink the dense f32 aggregate.
 #
 # Parity with the host aggregators is by construction for the gather
 # class (same function, same bits in) and by algebra for the psum class
@@ -391,11 +510,27 @@ class CollectiveAgg:
     masks (1.0 everywhere on uniform fleets).  Returns the aggregated
     tree, replicated across shards.
     """
-    kind: str            # "wmean" | "coverage" | "gather_exact" | "gather_trimmed"
-    comm: str            # "psum" | "all_gather" — comm class (docs/accounting)
+    kind: str            # "wmean" | "coverage" | "gather_exact" |
+                         # "gather_trimmed" | "q8" | "topk"
+    comm: str            # "psum" | "all_gather" | "q8" | "topk" — comm
+                         # class (docs/accounting)
     trim_ratio: float = 0.0
+    topk_ratio: float = 0.01
+    seed: int = 0
 
-    def __call__(self, adapters: Params, *, axes, weight, cover=None):
+    def __call__(self, adapters: Params, *, axes, weight, cover=None,
+                 step=0):
+        if self.kind in ("q8", "topk"):
+            # encode this client's update before it hits the wire; the
+            # weighted psum of decoded updates is then the same algebra
+            # as WMEAN over the compressed tree
+            enc = compress_update(
+                adapters, mode=self.kind, step=step,
+                client_idx=client_index(axes),
+                topk_ratio=self.topk_ratio, seed=self.seed)
+            den = jax.lax.psum(weight, axes)
+            return jax.tree.map(
+                lambda x: jax.lax.psum(x * weight, axes) / den, enc)
         if self.kind == "wmean":
             den = jax.lax.psum(weight, axes)
             return jax.tree.map(
@@ -420,11 +555,16 @@ class CollectiveAgg:
 WMEAN = CollectiveAgg(kind="wmean", comm="psum")
 COVERAGE = CollectiveAgg(kind="coverage", comm="psum")
 GATHER_EXACT = CollectiveAgg(kind="gather_exact", comm="all_gather")
+COMPRESSED_Q8 = CollectiveAgg(kind="q8", comm="q8")
 
 
 def gather_trimmed(trim_ratio: float) -> CollectiveAgg:
     return CollectiveAgg(kind="gather_trimmed", comm="all_gather",
                          trim_ratio=trim_ratio)
+
+
+def compressed_topk(topk_ratio: float) -> CollectiveAgg:
+    return CollectiveAgg(kind="topk", comm="topk", topk_ratio=topk_ratio)
 
 
 def collective_form(method) -> CollectiveAgg:
@@ -439,6 +579,11 @@ def collective_form(method) -> CollectiveAgg:
     if getattr(method, "collective", None) is not None:
         return method.collective
     a = method.aggregate
+    if isinstance(a, CompressedFedAvg):
+        # the collective inherits the host codec's parameters, so the
+        # two engines can never disagree on mode/ratio/seed
+        return CollectiveAgg(kind=a.mode, comm=a.mode,
+                             topk_ratio=a.topk_ratio, seed=a.seed)
     if a in (fedavg, decomposed_fedavg, zeropad_fedavg):
         return WMEAN
     if a is replication_fedavg:

@@ -24,6 +24,12 @@ Built-ins:
   lora_trimmed  raw LoRA + coordinate-wise trimmed-mean aggregation
                 (robust to client outliers, cf. Koo et al.)
 
+Compressed-uplink family (COMPRESSED comm class — the client update is
+encoded before the collective, see docs/quantization.md):
+
+  lora_fedavg_q8    stochastic-rounded int8 uplink (unbiased codec)
+  lora_fedavg_topk  magnitude top-k sparsified uplink (5% density)
+
 Heterogeneous-rank family (mixed-rank fleets; adapters allocated at
 r_max with per-client rank masks — see docs/heterogeneous_ranks.md):
 
@@ -217,6 +223,30 @@ register(FedMethod(
     collective=agg.gather_trimmed(0.25),
     description=("LoRA + coordinate-wise trimmed-mean aggregation — "
                  "robust to adversarial/outlier clients (cf. Koo et al.)"),
+))
+
+register(FedMethod(
+    name="lora_fedavg_q8",
+    het_ranks=True,
+    make_adapter=partial(peft.add_lora, decomposed=False),
+    train_mask=peft.mask_all,
+    aggregate=agg.CompressedFedAvg(mode="q8"),
+    collective=agg.COMPRESSED_Q8,
+    description=("raw LoRA + FedAvg over a stochastic-rounded int8 "
+                 "uplink — ~4× less uplink traffic, unbiased rounding "
+                 "(COMPRESSED comm class)"),
+))
+
+register(FedMethod(
+    name="lora_fedavg_topk",
+    het_ranks=True,
+    make_adapter=partial(peft.add_lora, decomposed=False),
+    train_mask=peft.mask_all,
+    aggregate=agg.CompressedFedAvg(mode="topk", topk_ratio=0.05),
+    collective=agg.compressed_topk(0.05),
+    description=("raw LoRA + FedAvg over a magnitude top-k sparsified "
+                 "uplink (5% density, deterministic; COMPRESSED comm "
+                 "class)"),
 ))
 
 register(FedMethod(

@@ -121,8 +121,14 @@ class FedSim:
         self._keep_rx = (re.compile(self.method.keep_local)
                          if self.method.keep_local else None)
         # the comm class the method's aggregation moves on the wire
-        # (psum: 2·|adapters|; all_gather: (C+1)·|adapters| per client)
+        # (psum: 2·|adapters|; all_gather: (C+1)·|adapters|; q8/topk:
+        # compressed uplink + dense downlink — see comm_bytes_per_round)
         self._comm_class = agg.comm_class(self.method)
+        self._topk_ratio = 0.01
+        try:
+            self._topk_ratio = agg.collective_form(self.method).topk_ratio
+        except ValueError:
+            pass                  # simulator-only aggregate: psum billing
 
         C = hp.n_clients
         self.client_adapters = agg.broadcast_to_clients(ad, C)
@@ -297,18 +303,27 @@ class FedSim:
         """Method aggregation (Eqs. 5–8 for ours, FedAvg/trimmed-mean for
         baselines) + comm accounting; broadcasts the aggregate back with
         keep-local leaves (e.g. dB_mag) preserved per client."""
-        aggregated = self._agg(self.client_adapters)
+        if getattr(self.method.aggregate, "needs_step", False):
+            # compressed codecs derive their stochastic-rounding keys
+            # from the round counter (post-round, = the step the
+            # production round_body passes), so both engines draw
+            # identical masks
+            aggregated = self._agg(self.client_adapters, step=self._step)
+        else:
+            aggregated = self._agg(self.client_adapters)
         C = self.hp.n_clients
         if self._client_ranks is None:
             self.comm_bytes += C * agg.comm_bytes_per_round(
                 self.adapter_template, exclude_rx=self.method.keep_local,
-                comm=self._comm_class, n_clients=C)
+                comm=self._comm_class, n_clients=C,
+                topk_ratio=self._topk_ratio)
         else:
             # heterogeneous fleet: each client moves only its own rank rows
             for r in self.hp.client_ranks:
                 self.comm_bytes += agg.comm_bytes_per_round(
                     self.adapter_template, exclude_rx=self.method.keep_local,
-                    rank=int(r), comm=self._comm_class, n_clients=C)
+                    rank=int(r), comm=self._comm_class, n_clients=C,
+                    topk_ratio=self._topk_ratio)
         bcast = self._rebroadcast_keep_personal(aggregated)
         self.client_adapters = bcast
         if self.method.prox:

@@ -1,0 +1,80 @@
+"""Reference quantization + dequant-matmul oracle (weight-only int8/int4).
+
+Symmetric, zero-preserving layouts shared by the Pallas kernel, the XLA
+serving fallback, and the compressed federated uplink:
+
+  int8   q (..., d_in, d_out) int8 in [-127, 127]
+  int4   q (..., d_in/2, d_out) uint8 — two nibbles packed along d_in,
+         stored biased (v = q + 8, q in [-7, 7]) so the sign survives
+         the pack; zero quantizes to the exact zero code either way.
+  scale  (..., G, d_out) float32 — per output channel (G = 1, the
+         default) or per group of ``group_size`` input rows
+         (G = d_in / group_size).
+
+The storage dtype IS the format tag: int8 leaves are plain int8, packed
+int4 leaves are uint8 — consumers recover d_in from the activation and
+the group size from the scale shape, so no side metadata travels with
+the param tree.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-8          # scale floor: an all-zero channel dequantizes to zero
+
+
+def _grouped(w, group_size):
+    *lead, d_in, d_out = w.shape
+    g = d_in if group_size is None else int(group_size)
+    if d_in % g:
+        raise ValueError(f"group_size {g} does not divide d_in {d_in}")
+    return w.reshape(*lead, d_in // g, g, d_out)
+
+
+def quantize_int8(w, *, group_size=None):
+    """w (..., d_in, d_out) f32 → (q int8, scale f32 (..., G, d_out))."""
+    w = jnp.asarray(w, jnp.float32)
+    wg = _grouped(w, group_size)
+    scale = jnp.maximum(jnp.max(jnp.abs(wg), axis=-2), _EPS) / 127.0
+    q = jnp.clip(jnp.round(wg / scale[..., None, :]), -127, 127)
+    return q.reshape(w.shape).astype(jnp.int8), scale
+
+
+def quantize_int4(w, *, group_size=None):
+    """w (..., d_in, d_out) f32, d_in even →
+    (packed uint8 (..., d_in/2, d_out), scale f32 (..., G, d_out))."""
+    w = jnp.asarray(w, jnp.float32)
+    if w.shape[-2] % 2:
+        raise ValueError(f"int4 packing needs even d_in, got {w.shape[-2]}")
+    wg = _grouped(w, group_size)
+    scale = jnp.maximum(jnp.max(jnp.abs(wg), axis=-2), _EPS) / 7.0
+    q = jnp.clip(jnp.round(wg / scale[..., None, :]), -7, 7)
+    v = (q.reshape(w.shape) + 8.0).astype(jnp.uint8)       # biased nibbles
+    return v[..., 0::2, :] | (v[..., 1::2, :] << 4), scale
+
+
+def unpack_int4(packed):
+    """(..., d_in/2, d_out) uint8 → (..., d_in, d_out) int8 in [-7, 7]."""
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    *lead, p, d_out = packed.shape
+    return jnp.stack([lo, hi], axis=-2).reshape(*lead, 2 * p, d_out)
+
+
+def dequantize(q, scale):
+    """Recover the f32 weight from an int8 or packed-int4 leaf."""
+    if q.dtype == jnp.uint8:
+        q = unpack_int4(q)
+    *lead, d_in, d_out = q.shape
+    G = scale.shape[-2]
+    wg = q.astype(jnp.float32).reshape(*lead, G, d_in // G, d_out)
+    return (wg * scale[..., None, :]).reshape(*lead, d_in, d_out)
+
+
+def quant_matmul_ref(x, q, scale):
+    """x (..., d_in) @ dequant(q, scale) → (..., d_out): the oracle the
+    Pallas kernel must match, and the XLA fallback off-TPU.  XLA fuses
+    the dequant into the dot's operand read, so even the fallback never
+    keeps a second f32 copy of the weights live across calls."""
+    w = dequantize(q, scale).astype(x.dtype)
+    return jnp.einsum("...k,kn->...n", x, w)

@@ -31,12 +31,15 @@ programs sharing one layout:
   stage 1  the round above — per-client local steps, then the method's
            collective; also emits the aggregate as a replicated leaf;
   stage 2  the global optimizer: only ``method.stage_global_mask``
-           leaves (ΔA_D for the paper, Eq. 9) train on the *replicated*
-           server batch mixture — the aggregate carries no client axis,
-           its optimizer state lives outside the client axis, and no
-           collective is issued (every shard runs the same replicated
-           math); the result is rebroadcast with the same
-           keep-local/het-re-mask semantics as stage 1;
+           leaves (ΔA_D for the paper, Eq. 9) train on the server batch
+           mixture — the aggregate carries no client axis and its
+           optimizer state lives outside the client axis.  When the
+           server batch divides evenly over the client axis, each shard
+           computes gradients on its own slice of every micro-batch and
+           a token-weighted psum recovers the full-batch gradient (dp×
+           fewer backbone FLOPs per shard); otherwise every shard runs
+           the identical replicated math.  The result is rebroadcast
+           with the same keep-local/het-re-mask semantics as stage 1;
   stage 3  per-client personalization: only ``method.stage_local_mask``
            leaves (ΔB_M, Eq. 10) train per shard with the Eq. 11
            ½λ‖·‖²_F regularizer and NO collective — personalization
@@ -130,7 +133,8 @@ class FedPipeline:
     driver.  Signatures (C = dp_size(mesh); trees as in
     ``make_fed_train_step``):
 
-      round_step(base, adapters, opt_state, step, batch, anchor=None)
+      round_step(base, adapters, opt_state, step, batch, anchor=None,
+                 rng=None)
           → (adapters, opt_state, aggregated, metrics)
       global_step(base, aggregated, adapters, server_batch)
           → (aggregated, adapters, metrics)
@@ -143,7 +147,9 @@ class FedPipeline:
     ``anchor`` is the FedProx proximal reference (defaults to the call's
     input adapters — correct for round-only training; the pipeline
     driver threads the post-round rebroadcast through subsequent rounds
-    exactly like ``FedSim._round_ref``)."""
+    exactly like ``FedSim._round_ref``).  ``rng`` threads the adapter
+    dropout keys through stage-1 local training (see
+    make_fed_pipeline_step)."""
     round_step: Callable
     global_step: Callable
     personal_step: Callable
@@ -155,7 +161,8 @@ class FedPipeline:
     round_step_raw: Callable = None
 
     def run_pipeline(self, base, adapters, opt_state, step, batch,
-                     server_batch, personal_batch, prox_anchor=None):
+                     server_batch, personal_batch, prox_anchor=None,
+                     rng=None):
         """One full paper-pipeline iteration: stage-1 round → stage-2
         global optimizer → stage-3 personalization, with the simulator's
         sequencing (``FedSim.run_round`` → ``global_stage`` →
@@ -165,7 +172,7 @@ class FedPipeline:
         methods the anchor is the post-round rebroadcast, which stages
         2/3 must not disturb (mirrors ``FedSim._round_ref``)."""
         adapters, opt_state, agg, met1 = self.round_step(
-            base, adapters, opt_state, step, batch, prox_anchor)
+            base, adapters, opt_state, step, batch, prox_anchor, rng)
         anchor = adapters if self.method.prox else None
         agg, adapters, met2 = self.global_step(base, agg, adapters,
                                                server_batch)
@@ -191,10 +198,16 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
     each call with freshly initialized optimizer state, exactly like
     ``FedSim.global_stage``/``personalize``).
 
-    No rng is threaded into the loss, so adapter dropout is NOT applied
-    here (the simulator applies it per step when cfg.lora_dropout > 0);
-    the parity contract with FedSim — and the paper's fine-tuning
-    setting — is lora_dropout = 0.
+    Adapter dropout: pass ``rng`` into ``round_step`` and each local
+    step derives this client's dropout key as
+    ``jax.random.split(fold_in(rng, step), C)[client]`` — the exact key
+    chain ``FedSim.local_round`` uses, so ``cfg.lora_dropout > 0``
+    trains with the same masks in both engines (bit-exact at
+    micro_batches=1; micro-batching reshapes the activations, which
+    redraws the Bernoulli masks).  With ``rng=None`` the loss sees no
+    key and dropout is off regardless of cfg, the previous contract.
+    Stages 2/3 thread no rng — pipeline parity holds at
+    lora_dropout = 0, the paper's fine-tuning setting.
     """
     if cfg.use_fused_dora:
         raise ValueError(
@@ -276,10 +289,12 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
     # unrolled loop made 88-layer compiles explode), forward-only carry
     # (grads), LoRA grads accumulated in f32.
     def train_scan(base, ad, ost, step0, batch, *, T, stage_opt, cover,
-                   stage_lam, stage_prox, anchor, stage):
-        def loss_fn(ad_, mb):
+                   stage_lam, stage_prox, anchor, stage, rng=None,
+                   grad_axes=None):
+        def loss_fn(ad_, mb, rng_):
             params = pt.merge_trees(base, ad_)
-            loss, met = M.loss_and_metrics(params, mb, cfg, mesh=mesh_tag,
+            loss, met = M.loss_and_metrics(params, mb, cfg, rng=rng_,
+                                           mesh=mesh_tag,
                                            remat=settings.remat)
             if stage_lam:
                 # Eq. 11 ½λ‖·‖²_F over the method's personal_reg leaves
@@ -292,27 +307,56 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
             return loss, met
 
         B_c = batch["tokens"].shape[0]
-        if B_c % (T * micro):
+        shards = dp if grad_axes is not None else 1
+        if B_c % (T * micro * shards):
             raise ValueError(
                 f"{stage} batch of {B_c} rows is not divisible by steps "
-                f"({T}) x micro_batches ({micro})")
-        mb_sz = B_c // (T * micro)
-        sbatch = {k: v.reshape((T, micro, mb_sz) + v.shape[1:])
-                  for k, v in batch.items()}
+                f"({T}) x micro_batches ({micro})"
+                + (f" x shards ({shards})" if shards > 1 else ""))
+        mb_sz = B_c // (T * micro * shards)
+        if grad_axes is not None:
+            # data-parallel stage: each shard takes its slice of every
+            # micro-batch; the token-weighted psum below recovers the
+            # full-batch gradient
+            cidx = fedagg.client_index(grad_axes)
+            sbatch = {k: v.reshape((T, micro, shards, mb_sz)
+                                   + v.shape[1:])[:, :, cidx]
+                      for k, v in batch.items()}
+        else:
+            sbatch = {k: v.reshape((T, micro, mb_sz) + v.shape[1:])
+                      for k, v in batch.items()}
 
         def local_step(carry, sb):
             ad_, ost_, step = carry
+            # per-step dropout key: the simulator's chain
+            # split(fold_in(rng, step), C)[client], so both engines draw
+            # the same masks for the same step/client
+            step_rng = (jax.random.split(jax.random.fold_in(rng, step), dp)
+                        [fedagg.client_index(daxes)]
+                        if rng is not None else None)
             g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), ad_)
 
-            def acc_body(g_acc, mb):
+            def acc_body(carry_g, mb):
+                g_acc, n_acc = carry_g
                 (_, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                    ad_, mb)
+                    ad_, mb, step_rng)
+                # grad weight: the CE denominator (n_tok) when sharded,
+                # so uneven loss masks still reduce to the full-batch
+                # gradient; 1 on the replicated/per-client path
+                n = (met["n_tok"] if grad_axes is not None
+                     else jnp.ones((), jnp.float32))
                 g_acc = jax.tree.map(
-                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                return g_acc, met
+                    lambda a, b: a + b.astype(jnp.float32) * n, g_acc, g)
+                return (g_acc, n_acc + n), met
 
-            g_acc, mets = jax.lax.scan(acc_body, g0, sb)
-            g_acc = jax.tree.map(lambda x: x / micro, g_acc)
+            (g_acc, n_tot), mets = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), sb)
+            if grad_axes is not None:
+                n_tot = jax.lax.psum(n_tot, grad_axes)
+                g_acc = jax.tree.map(
+                    lambda x: jax.lax.psum(x, grad_axes) / n_tot, g_acc)
+            else:
+                g_acc = jax.tree.map(lambda x: x / micro, g_acc)
             g_acc = clip_by_global_norm(g_acc, settings.clip)
             upd, ost_ = stage_opt.update(g_acc, ost_, ad_, step)
             if cover is not None:
@@ -329,7 +373,7 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
 
     # ---- stage 1: the federated round ----------------------------------
     def round_body(base, adapters, opt_state, step0, batch, anchor, weight,
-                   covers):
+                   covers, rng, *, use_rng):
         # inside the manual region: one client per shard
         adapters = jax.tree.map(lambda x: x[0], adapters)   # drop C axis
         opt_state = jax.tree.map(lambda x: x[0], opt_state)
@@ -341,14 +385,17 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
             base, adapters, opt_state, step0, batch,
             T=settings.local_steps, stage_opt=opt,
             cover=cover if het else None, stage_lam=0.0,
-            stage_prox=prox_mu, anchor=anchor, stage="round")
+            stage_prox=prox_mu, anchor=anchor, stage="round",
+            rng=rng if use_rng else None)
 
         # the method's collective aggregation: the only cross-client (and
         # only cross-pod) traffic.  Keep-local leaves (the paper's
         # personal ΔB_M, FedALT's individual pair) are restored from this
         # shard's own post-round values — personalization never crosses
-        # shards.
-        agg = collective(adapters, axes=daxes, weight=w, cover=cover)
+        # shards.  ``step`` feeds the COMPRESSED codecs' rounding keys:
+        # the post-round counter, = FedSim._step at FedSim.aggregate time.
+        agg = collective(adapters, axes=daxes, weight=w, cover=cover,
+                         step=step0 + settings.local_steps)
         if zero_rx is not None:
             agg = pt.tree_map_with_path(
                 lambda p, x: jnp.zeros_like(x) if zero_rx.search(p) else x,
@@ -359,36 +406,51 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
         return (jax.tree.map(lambda x: x[None], out),
                 jax.tree.map(lambda x: x[None], opt_state), agg, met_last)
 
-    def round_step(base, adapters, opt_state, step, batch, anchor=None):
+    def round_step(base, adapters, opt_state, step, batch, anchor=None,
+                   rng=None):
         if anchor is None:
             # round-only training: the proximal reference is the call's
             # input adapters (a round ends in rebroadcast, so the next
             # round's input IS the last rebroadcast)
             anchor = adapters
+        use_rng = rng is not None
+        if not use_rng:
+            rng = jnp.zeros((2,), jnp.uint32)   # placeholder, never consumed
         body = shard_map_compat(
-            round_body,
+            partial(round_body, use_rng=use_rng),
             mesh,
             in_specs=(base_manual_specs(base, cfg), ad_spec, ost_spec, P(),
-                      batch_spec_of(batch), ad_spec, w_spec, cov_spec),
+                      batch_spec_of(batch), ad_spec, w_spec, cov_spec, P()),
             out_specs=(ad_spec, ost_spec, agg_spec, P()),
             manual_axes=daxes,
         )
         return body(base, adapters, opt_state, step, batch, anchor,
-                    weight_c, covers_c)
+                    weight_c, covers_c, rng)
 
     # ---- stage 2: the global optimizer (replicated server model) -------
     def global_body(base, agg, adapters, sbatch, covers):
         own = jax.tree.map(lambda x: x[0], adapters)
         cover = jax.tree.map(lambda x: x[0], covers)
         # the server model trains at the full allocated rank with no rank
-        # mask and a fresh zero-state optimizer (FedSim.global_stage);
-        # agg/sbatch are replicated, so every shard runs identical math —
-        # no collective
+        # mask and a fresh zero-state optimizer (FedSim.global_stage).
+        # agg/sbatch come in replicated; when the server batch divides
+        # evenly over the client axis each shard grads its own slice of
+        # every micro-batch and the token-weighted psum inside train_scan
+        # recovers the full-batch gradient (dp× fewer backbone FLOPs per
+        # shard, updates stay replicated); otherwise every shard runs the
+        # identical replicated math
+        B_s = sbatch["tokens"].shape[0]
+        shard2 = dp > 1 and B_s % (settings.global_steps * micro * dp) == 0
         ost = opt_g.init(agg)
         agg, _, mets = train_scan(
             base, agg, ost, jnp.zeros((), jnp.int32), sbatch,
             T=settings.global_steps, stage_opt=opt_g, cover=None,
-            stage_lam=0.0, stage_prox=0.0, anchor=None, stage="global")
+            stage_lam=0.0, stage_prox=0.0, anchor=None, stage="global",
+            grad_axes=daxes if shard2 else None)
+        if shard2:
+            # per-shard metrics differ (different rows) — mean them so
+            # the replicated out_spec holds
+            mets = jax.tree.map(lambda m: jax.lax.pmean(m, daxes), mets)
         out = fedagg.client_rebroadcast(agg, own, keep_rx,
                                         cover if het else None)
         return agg, jax.tree.map(lambda x: x[None], out), mets
@@ -442,7 +504,7 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
 def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
     """Returns (train_step, opt_init).  train_step signature:
 
-        train_step(base, adapters, opt_state, step, batch)
+        train_step(base, adapters, opt_state, step, batch, rng=None)
             → (adapters, opt_state, metrics)
 
     One train_step call is one federated ROUND: ``settings.local_steps``
@@ -453,11 +515,11 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
     """
     pipe = make_fed_pipeline_step(cfg, mesh, settings)
 
-    def train_step(base, adapters, opt_state, step, batch):
+    def train_step(base, adapters, opt_state, step, batch, rng=None):
         # the aggregate is dropped inside this jit so round-only training
         # never pays for materializing the pipeline's replicated output
         adapters, opt_state, _, met = pipe.round_step_raw(
-            base, adapters, opt_state, step, batch)
+            base, adapters, opt_state, step, batch, rng=rng)
         return adapters, opt_state, met
 
     return jax.jit(train_step), pipe.opt_init

@@ -67,6 +67,16 @@ class ArchConfig:
                                   # kernel (interpret off-TPU); forward-only
                                   # — the kernel has no VJP, so keep False
                                   # for training
+    # --- serving-time weight-only quantization ---
+    backbone_quant: Optional[str] = None  # "int8" | "int4": store frozen
+                                          # attention/FFN projection kernels
+                                          # quantized with per-channel f32
+                                          # scales and dequant-fuse inside
+                                          # the matmul tile (see
+                                          # kernels/quant_matmul); adapters
+                                          # and the federated deltas stay
+                                          # f32.  Serving only — training
+                                          # paths keep None.
     # --- misc ---
     tie_embeddings: bool = False
     norm_eps: float = 1e-6

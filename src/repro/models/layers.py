@@ -4,6 +4,12 @@ Everything is a pure function over nested-dict params.  Linear layers
 understand adapter params living alongside their kernel:
 
   {kernel}                                  — plain frozen projection
+  {kernel_q, kernel_scale}                  — weight-only quantized frozen
+                                              projection (int8 / packed
+                                              int4 + per-group f32 scales;
+                                              see kernels/quant_matmul) —
+                                              adapters ride alongside in
+                                              full precision
   {kernel, lora_A, lora_B}                  — raw LoRA (baseline)
   {kernel, A_dir, A_mag, B_dir, B_mag,
    dA_dir, dB_mag}                          — DoRA-decomposed LoRA
@@ -158,7 +164,8 @@ def linear(p: Params, x, *, lora_scale: float = 0.0, dropout_rng=None,
     if (fused and "A_dir" in p and lora_scale
             and (adapter_idx is None or not _has_pooled(p))
             and (dropout_rng is None or dropout == 0.0)
-            and "bias" not in p and p["kernel"].ndim == 2):
+            and "bias" not in p and "kernel" in p
+            and p["kernel"].ndim == 2):
         # (pooled per-row routing outranks the fused single-adapter path:
         # taking the fused branch here would silently serve every tenant
         # the shared adapter)
@@ -169,7 +176,13 @@ def linear(p: Params, x, *, lora_scale: float = 0.0, dropout_rng=None,
         return fused_dora(x, p["kernel"], p["A_dir"], p["A_mag"],
                           p["B_dir"], p["B_mag"], p.get("dA_dir"),
                           p.get("dB_mag"), scale=lora_scale)
-    y = x @ p["kernel"].astype(x.dtype)
+    if "kernel_q" in p:
+        # quantized frozen backbone: dequant-fused matmul (Pallas on TPU,
+        # XLA oracle elsewhere); all adapter deltas below stay f32 on top
+        from repro.kernels import quant_matmul
+        y = quant_matmul(x, p["kernel_q"], p["kernel_scale"])
+    else:
+        y = x @ p["kernel"].astype(x.dtype)
     if "bias" in p:
         y = y + p["bias"].astype(y.dtype)
     if adapter_idx is not None and lora_scale and _has_pooled(p):

@@ -67,6 +67,12 @@ class ServeEngine:
             # would silently drop real prefix tokens for short prompts
             raise ValueError("sliding-window (local) attention is not "
                              "supported by ServeEngine yet")
+        if cfg.backbone_quant:
+            # store the frozen backbone quantized (int8/int4 + per-channel
+            # scales); the per-tenant BGMV deltas stay f32 on top, so one
+            # quantize pass serves every tenant
+            from repro.kernels import quantize_backbone
+            base = quantize_backbone(base, cfg.backbone_quant)
         self.base, self.cfg, self.store = base, cfg, store
         self.max_rows = max_rows
         self.max_len = max_len

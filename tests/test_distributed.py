@@ -93,8 +93,22 @@ def compare(name, prod, ref):
                 np.einsum("...ir,...ro->...io", ref.pop(pa), ref.pop(pb)),
                 rtol=5e-4, atol=5e-5, err_msg=f"{name}:{pref}")
     for p in sorted(prod):
-        np.testing.assert_allclose(prod[p], ref[p], rtol=2e-4, atol=2e-5,
-                                   err_msg=f"{name}:{p}")
+        if name == "lora_fedavg_q8":
+            # the engines agree to ~ulp, and a stochastic-rounding draw
+            # whose fractional part sits within that drift of its uniform
+            # sample can legitimately flip between them — allow isolated
+            # diffs up to one SR bin, but still demand near-total strict
+            # agreement: a broken rounding-key chain flips ~half the
+            # draws on every leaf and fails the 99% gate
+            bin_ = max(np.abs(prod[p]).max(), np.abs(ref[p]).max()) / 127.0
+            np.testing.assert_allclose(prod[p], ref[p], rtol=2e-4,
+                                       atol=2 * bin_ + 2e-5,
+                                       err_msg=f"{name}:{p}")
+            close = np.isclose(prod[p], ref[p], rtol=2e-4, atol=2e-5)
+            assert close.mean() > 0.99, (name, p, float(close.mean()))
+        else:
+            np.testing.assert_allclose(prod[p], ref[p], rtol=2e-4, atol=2e-5,
+                                       err_msg=f"{name}:{p}")
 
 
 def run_case(name, ranks=None, weights=None, prox_mu=0.0):
@@ -207,7 +221,7 @@ for name in names:
     run_case(name, prox_mu=0.05 if m.prox else 0.0)
 print("SWEPT", len(names))
 """)
-    assert "SWEPT 11" in out, out
+    assert "SWEPT 13" in out, out
 
 
 @pytest.mark.slow
@@ -222,9 +236,74 @@ run_case("lora_replication", ranks=(1, 2, 3, 4), weights=(1., 2., 3., 4.))
 run_case("lora_exact", ranks=(1, 2, 3, 4), weights=(4., 3., 2., 1.))
 run_case("fedalt", ranks=(2, 4, 4, 2))
 run_case("lora", weights=(1., 2., 3., 4.))
+run_case("lora_fedavg_q8", ranks=(1, 2, 3, 4), weights=(1., 2., 3., 4.))
 print("HET-OK")
 """)
     assert "HET-OK" in out, out
+
+
+@pytest.mark.slow
+def test_round_parity_with_adapter_dropout():
+    """cfg.lora_dropout > 0 on the production path: threading ``rng``
+    into the round draws the simulator's exact per-step/per-client
+    dropout keys (micro_batches=1), so the round parity gate extends to
+    dropout-on training — including over the compressed q8 uplink."""
+    out = _run(PARITY_HARNESS + r"""
+import dataclasses as _dc
+cfg = _dc.replace(cfg, lora_dropout=0.3)
+
+
+def run_dropout_case(name):
+    hp = FedHyper(method=name, n_clients=C, local_steps=T, batch=B,
+                  seq_len=S, lr=1e-2)
+    sim = FedSim(cfg, hp)
+    st = TrainSettings(lr=hp.lr, micro_batches=1, clip=hp.clip, remat=False,
+                       method=name, local_steps=T)
+    step_fn, _ = make_fed_train_step(cfg, mesh, st)
+    na, no = sim.client_adapters, sim.opt_state
+    step0 = jnp.zeros((), jnp.int32)
+    for r in range(ROUNDS):
+        batches = make_batches()
+        big = {k: jnp.concatenate([b[k] for b in batches], axis=1)
+               for k in batches[0]}
+        na, no, met = step_fn(sim.base, na, no, step0, big,
+                              rng=jax.random.PRNGKey(r))
+        sim.run_round(batches, jax.random.PRNGKey(r))
+        step0 = step0 + T
+        assert np.isfinite(float(met["ce"])), (name, r)
+    compare(name, na, sim.client_adapters)
+    print("DROPOUT-OK", name)
+
+
+run_dropout_case("lora")
+run_dropout_case("lora_fedavg_q8")
+""")
+    assert out.count("DROPOUT-OK") == 2, out
+
+
+@pytest.mark.slow
+def test_pipeline_stage2_sharded_server_batch():
+    """When the replicated server batch divides evenly over the client
+    axis, stage 2 shards rows across clients and recovers the full-batch
+    gradient with a token-weighted psum — the pipeline must still match
+    the simulator's replicated stage-2 math (dp× fewer FLOPs is a pure
+    layout change)."""
+    out = _run(PARITY_HARNESS + r"""
+# widen the server batches so TG·B_srv (= 8) divides over C=4 shards
+# and the sharded stage-2 path engages (the default B=2 batches leave
+# it on the replicated fallback)
+def make_server_batches(n):
+    return [{"tokens": jnp.asarray(
+                 rng.integers(5, cfg.vocab_size, size=(4, S)), jnp.int32),
+             "loss_mask": jnp.ones((4, S), jnp.float32)}
+            for _ in range(n)]
+
+
+run_pipeline_case("lora")
+run_pipeline_case("fedlora_opt")
+print("STAGE2-SHARD-OK")
+""", timeout=1800)
+    assert "STAGE2-SHARD-OK" in out, out
 
 
 @pytest.mark.slow
@@ -242,7 +321,7 @@ for name in names:
     run_pipeline_case(name, prox_mu=0.05 if m.prox else 0.0)
 print("PIPE-SWEPT", len(names))
 """, timeout=1800)
-    assert "PIPE-SWEPT 11" in out, out
+    assert "PIPE-SWEPT 13" in out, out
 
 
 @pytest.mark.slow
