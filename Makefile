@@ -1,4 +1,4 @@
-.PHONY: test test-serve test-het test-dist test-quant test-fast perf serve-bench bench-smoke
+.PHONY: test test-serve test-het test-dist test-quant test-obs test-fast perf serve-bench bench-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -23,6 +23,11 @@ test-dist:
 test-quant:
 	bash scripts/ci.sh --quant
 
+# telemetry layer (registry/events/tracing, disabled-sink invariance,
+# report round-trip, checkpoint migration shim)
+test-obs:
+	bash scripts/ci.sh --obs
+
 # tier-1 minus the slow sweeps and the multi-device dist tests
 test-fast:
 	bash scripts/ci.sh --fast
@@ -36,7 +41,9 @@ serve-bench:
 	PYTHONPATH=src python -m benchmarks.serve_multitenant
 
 # the CI benchmark smoke job, locally: micro entries + regression check
-# against the checked-in trajectory (benchmarks/baselines/)
+# against the checked-in trajectory (benchmarks/baselines/); the obs
+# entry also leaves its telemetry JSONL artifact at
+# experiments/bench/obs_telemetry.jsonl
 bench-smoke:
-	PYTHONPATH=src python -m benchmarks.run --only perf,het,dist,pipeline,quant --fresh
+	PYTHONPATH=src python -m benchmarks.run --only perf,het,dist,pipeline,quant,obs --fresh
 	PYTHONPATH=src python scripts/check_bench.py

@@ -368,6 +368,129 @@ def run_quant(log=print, reps: int = 6):
     return rows, ratios["int8"]
 
 
+def run_obs(log=print, n_clients: int = 4, local_steps: int = 5,
+            reps: int = 6, serve_reps: int = 24,
+            out_path: str = "experiments/bench/obs_telemetry.jsonl"):
+    """Telemetry overhead gate: the instrumented loops (live obs sink,
+    JSONL events on) vs the same loops with the no-op sink, on the two
+    hot paths the observability layer touches — the masked het federated
+    round (run_het_round settings) and the multi-tenant serve loop.
+    The enabled path pays host-side clocks, dict updates and JSONL
+    writes only (the jitted programs are byte-identical either way), so
+    the interleaved min-of-reps ratio must stay under the checked-in
+    1.05x bar (baselines/obs_overhead.json).  Side effect: ``out_path``
+    is left holding the run's events + a metrics snapshot — the CI
+    telemetry artifact that ``telemetry_section`` renders."""
+    import os
+
+    from benchmarks import serve_multitenant
+    from repro import obs
+    from repro.fed.simulate import FedHyper, FedSim
+    from repro.serve import AdapterStore, ServeEngine
+    from repro.utils import pytree as pt
+
+    # fresh artifact: drop the live file and any rotated segments
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    for p in [out_path] + [f"{out_path}.{i}" for i in range(1, 4)]:
+        if os.path.exists(p):
+            os.remove(p)
+
+    # batch 16 (vs run_het_round's 32): a shorter round is *harder* on
+    # this gate — the per-round host epilogue is fixed cost, so its
+    # relative weight grows — and buys enough reps for a stable floor
+    ranks = tuple([2, 4, 8] * (n_clients // 3 + 1))[:n_clients]
+    hp = FedHyper(method="fedlora_opt", n_clients=n_clients,
+                  local_steps=local_steps, batch=16, seq_len=64,
+                  client_ranks=ranks)
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(
+                    rng.integers(5, FED_CFG.vocab_size,
+                                 size=(n_clients, hp.batch, hp.seq_len)),
+                    jnp.int32),
+                "loss_mask": jnp.ones((n_clients, hp.batch, hp.seq_len),
+                                      jnp.float32)}
+               for _ in range(local_steps)]
+    key = jax.random.PRNGKey(0)
+    sim = FedSim(FED_CFG, hp)
+
+    def one_round():
+        t0 = time.perf_counter()
+        sim.run_round(batches, key)
+        jax.block_until_ready(sim.client_adapters)
+        return time.perf_counter() - t0
+
+    # 8 tenants through 4 rows: long enough for a stable min-of-reps
+    # (a ~10ms loop cannot resolve a 5% bar through box noise) and the
+    # queue actually queues, so admission/retire telemetry is on the
+    # measured path
+    n_tenants, n_new = 8, 48
+    cfg, base, shared, tenants, prompts = serve_multitenant._setting(
+        n_tenants)
+    store = AdapterStore(base, cfg, n_slots=n_tenants, kind="dora_mag",
+                         shared=shared)
+    for name, tree in tenants.items():
+        store.register(name, pt.filter_tree(
+            tree, lambda p: p.endswith("dB_mag")))
+    engine = ServeEngine(base, cfg, store, max_rows=n_tenants // 2,
+                         max_prompt_len=prompts.shape[1],
+                         max_len=prompts.shape[1] + n_new + 8,
+                         decode_chunk=8)
+    reqs = [(f"tenant{t}", prompts[t]) for t in range(n_tenants)]
+
+    def one_serve():
+        t0 = time.perf_counter()
+        engine.generate(reqs, n_new=n_new)
+        return time.perf_counter() - t0
+
+    obs.disable()
+    one_round(), one_serve()                    # compile + warm, obs off
+    ts = {"round_off": [], "round_on": [], "serve_off": [], "serve_on": []}
+
+    def measure(fn, off_key, on_key, n, attempts):
+        # interleaved pairs, min as the estimator — but adaptive: box
+        # noise only ever *adds* time, so a ratio stuck above the bar
+        # after one batch earns more samples (the floors converge to
+        # the true ratio), while quiet boxes exit after one batch.  A
+        # genuine leak (sync/transfer/per-step callback on the hot
+        # path) shifts the floor itself and keeps failing every batch.
+        for _ in range(attempts):
+            for _ in range(n):
+                obs.disable()
+                ts[off_key].append(fn())
+                obs.enable(out_path)            # append mode: events keep
+                ts[on_key].append(fn())
+            if min(ts[on_key]) / min(ts[off_key]) <= 1.03:
+                break
+        return min(ts[on_key]) / min(ts[off_key])
+
+    r_ratio = measure(one_round, "round_off", "round_on", reps, attempts=3)
+    # the serve loop is ~100x cheaper than the round, so buy its noise
+    # floor down with many more interleaved reps — min-of-few on a
+    # tens-of-ms loop cannot resolve a 5% bar on a shared box
+    s_ratio = measure(one_serve, "serve_off", "serve_on", serve_reps,
+                      attempts=4)
+    # still enabled from the last interleaved pair — its registry holds
+    # that pair's metrics, which is what the snapshot epilogue dumps
+    obs.emit_snapshot()
+    obs.disable()
+
+    us = {k: min(v) * 1e6 for k, v in ts.items()}
+    log(f"[perf] obs/het_round disabled={us['round_off']:9.0f}us "
+        f"instrumented={us['round_on']:9.0f}us ratio={r_ratio:.3f}x")
+    log(f"[perf] obs/serve     disabled={us['serve_off']:9.0f}us "
+        f"instrumented={us['serve_on']:9.0f}us ratio={s_ratio:.3f}x "
+        f"(bar: 1.05x; events -> {out_path})")
+    rows = [{"arch": "obs/het_round_disabled", "us": us["round_off"],
+             "ratio": 1.0},
+            {"arch": "obs/het_round_instrumented", "us": us["round_on"],
+             "ratio": r_ratio},
+            {"arch": "obs/serve_disabled", "us": us["serve_off"],
+             "ratio": 1.0},
+            {"arch": "obs/serve_instrumented", "us": us["serve_on"],
+             "ratio": s_ratio}]
+    return rows, max(r_ratio, s_ratio)
+
+
 def main():
     rows = run()
     fed_rows, speedup = run_fed_round()

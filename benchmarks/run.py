@@ -3,7 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--only table1,fig1,...]
 
 Prints ``name,us_per_call,derived`` CSV per run (plus human-readable
-logs) and writes JSON to experiments/bench/.
+logs) and writes JSON to experiments/bench/.  Every row is recorded
+through a ``repro.obs.MetricsRegistry`` — the CSV and the ``metrics``
+key in results.json are both rendered from its ``snapshot()``, so the
+bench results share the exact schema the engines' telemetry emits.
 """
 from __future__ import annotations
 
@@ -12,8 +15,10 @@ import json
 import os
 import time
 
+from repro.obs import MetricsRegistry
+
 ALL = ("table1", "table2", "fig1", "fig3", "perf", "het", "dist",
-       "pipeline", "quant", "serve", "roofline")
+       "pipeline", "quant", "serve", "obs", "roofline")
 
 
 def main():
@@ -38,7 +43,13 @@ def main():
 
     os.makedirs("experiments/bench", exist_ok=True)
     results = {}
-    csv_lines = ["name,us_per_call,derived"]
+    reg = MetricsRegistry()
+
+    def record(name, us, derived):
+        # one labeled series per bench row; the CSV below and the
+        # results.json "metrics" key render from reg.snapshot()
+        reg.gauge("bench/us_per_call").set(float(us), name=name,
+                                           derived=str(derived))
 
     t00 = time.time()
     if "table1" in which:
@@ -46,59 +57,59 @@ def main():
         rows = cached("table1", table1_accuracy.run)
         results["table1"] = rows
         for r in rows:
-            csv_lines.append(
-                f"table1/{r['dataset']}/{r['method']},{r['wall_s']*1e6:.0f},"
-                f"global_acc={r['global_acc']:.4f};local_acc={r['local_acc']:.4f}")
+            record(f"table1/{r['dataset']}/{r['method']}", r['wall_s']*1e6,
+                   f"global_acc={r['global_acc']:.4f};"
+                   f"local_acc={r['local_acc']:.4f}")
     if "table2" in which:
         from benchmarks import table2_rank
         rows = cached("table2", table2_rank.run)
         results["table2"] = rows
         for r in rows:
-            csv_lines.append(f"table2/r{r['r']}xn{r['n']},{r['wall_s']*1e6:.0f},"
-                             f"acc={r['acc']:.4f};pct_params={r['pct_params']:.4f}")
+            record(f"table2/r{r['r']}xn{r['n']}", r['wall_s']*1e6,
+                   f"acc={r['acc']:.4f};pct_params={r['pct_params']:.4f}")
     if "fig1" in which:
         from benchmarks import fig1_sensitivity
         rep = cached("fig1", fig1_sensitivity.run)
         results["fig1"] = rep
-        csv_lines.append(f"fig1/sensitivity,{rep['wall_s']*1e6:.0f},"
-                         f"dirA_over_dirB={rep['obs1_dir_ratio_A_over_B']:.3f};"
-                         f"magB_over_magA={rep['obs2_mag_ratio_B_over_A']:.3f}")
+        record("fig1/sensitivity", rep['wall_s']*1e6,
+               f"dirA_over_dirB={rep['obs1_dir_ratio_A_over_B']:.3f};"
+               f"magB_over_magA={rep['obs2_mag_ratio_B_over_A']:.3f}")
     if "fig3" in which:
         from benchmarks import fig3_pipeline
         rows = cached("fig3", fig3_pipeline.run)
         results["fig3"] = rows
         for r in rows:
             tag = "post-serial" if r["pipeline"] else "pre-serial"
-            csv_lines.append(f"fig3/{tag},{r['wall_s']*1e6:.0f},"
-                             f"local_acc={r['local_acc']:.4f}")
+            record(f"fig3/{tag}", r['wall_s']*1e6,
+                   f"local_acc={r['local_acc']:.4f}")
     if "perf" in which:
         from benchmarks import perf_micro
         rows = cached("perf", perf_micro.run)
         results["perf"] = rows
         for r in rows:
-            csv_lines.append(f"perf/{r['arch']}/fwd,{r['fwd_us']:.0f},smoke_cpu")
-            csv_lines.append(f"perf/{r['arch']}/decode,{r['dec_us']:.0f},smoke_cpu")
+            record(f"perf/{r['arch']}/fwd", r['fwd_us'], "smoke_cpu")
+            record(f"perf/{r['arch']}/decode", r['dec_us'], "smoke_cpu")
     if "het" in which:
         from benchmarks import perf_micro
         rows = cached("het", lambda: perf_micro.run_het_round()[0])
         results["het"] = rows
         for r in rows:
-            csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},"
-                             f"ratio_vs_uniform={r['ratio']:.2f}")
+            record(f"perf/{r['arch']}", r['us'],
+                   f"ratio_vs_uniform={r['ratio']:.2f}")
     if "dist" in which:
         from benchmarks import perf_micro
         rows = cached("dist", lambda: perf_micro.run_dist_round()[0])
         results["dist"] = rows
         for r in rows:
-            csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},"
-                             f"ratio_vs_engine={r['ratio']:.2f}")
+            record(f"perf/{r['arch']}", r['us'],
+                   f"ratio_vs_engine={r['ratio']:.2f}")
     if "pipeline" in which:
         from benchmarks import perf_micro
         rows = cached("pipeline", lambda: perf_micro.run_pipeline()[0])
         results["pipeline"] = rows
         for r in rows:
-            csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},"
-                             f"ratio_vs_engine={r['ratio']:.2f}")
+            record(f"perf/{r['arch']}", r['us'],
+                   f"ratio_vs_engine={r['ratio']:.2f}")
     if "quant" in which:
         from benchmarks import perf_micro
         rows = cached("quant", lambda: perf_micro.run_quant()[0])
@@ -106,15 +117,21 @@ def main():
         for r in rows:
             extra = (f"bytes_ratio={r['bytes_ratio']:.2f}"
                      if "bytes_ratio" in r else "smoke_cpu")
-            csv_lines.append(f"perf/{r['arch']},{r['us']:.0f},{extra}")
+            record(f"perf/{r['arch']}", r['us'], extra)
     if "serve" in which:
         from benchmarks import serve_multitenant
         rows = cached("serve", lambda: (serve_multitenant.run()[0]
                                         + serve_multitenant.run_quant()[0]))
         results["serve"] = rows
         for r in rows:
-            csv_lines.append(f"{r['arch']},{r['us']:.0f},"
-                             f"tokens_s={r['tokens_s']:.1f}")
+            record(r['arch'], r['us'], f"tokens_s={r['tokens_s']:.1f}")
+    if "obs" in which:
+        from benchmarks import perf_micro
+        rows = cached("obs", lambda: perf_micro.run_obs()[0])
+        results["obs"] = rows
+        for r in rows:
+            record(f"perf/{r['arch']}", r['us'],
+                   f"ratio_vs_disabled={r['ratio']:.3f}")
     if "roofline" in which:
         from benchmarks import roofline
         recs = roofline.load_records()
@@ -130,10 +147,16 @@ def main():
             step_s = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
             vtag = "" if r.get("variant", "baseline") == "baseline" \
                 else f"+{r['variant']}"
-            csv_lines.append(
-                f"roofline/{r['arch']}{vtag}/{r['shape']}/{r['mesh']},"
-                f"{step_s*1e6:.1f},dom={ro['dominant']};fits={r['fits_16g']}")
+            record(f"roofline/{r['arch']}{vtag}/{r['shape']}/{r['mesh']}",
+                   step_s*1e6,
+                   f"dom={ro['dominant']};fits={r['fits_16g']}")
 
+    snap = reg.snapshot()
+    results["metrics"] = snap
+    csv_lines = ["name,us_per_call,derived"]
+    for s in snap["gauges"].get("bench/us_per_call", []):
+        csv_lines.append(f"{s['labels']['name']},{s['value']:.0f},"
+                         f"{s['labels']['derived']}")
     with open("experiments/bench/results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)
     print()

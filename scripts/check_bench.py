@@ -9,7 +9,12 @@ fails if a gated ratio regressed past its checked-in bar:
     within ``max_ratio`` of the uniform round (PR-3 trajectory);
   * ``baselines/quant_decode.json`` — the analytic f32/int8 decode byte
     ratio of the quantized backbone must stay above ``min_ratio``
-    (PR-6 trajectory; see docs/quantization.md).
+    (PR-6 trajectory; see docs/quantization.md);
+  * ``baselines/obs_overhead.json`` — the instrumented (live telemetry
+    sink) het round and serve loop must stay within ``max_ratio`` of
+    the disabled-sink run (PR-7 trajectory; see docs/observability.md —
+    the jitted programs are byte-identical, so anything past the bar is
+    host-side leakage into the hot loop).
 
 Exit status is the contract: 0 = within the bar, 1 = regression or
 missing results.  The CI lane uploads experiments/bench/ as an artifact
@@ -84,9 +89,36 @@ def check_quant() -> bool:
     return True
 
 
+def check_obs() -> bool:
+    base, rows = _load("obs_overhead.json", "obs.json")
+    if rows is None:
+        return False
+    bar = float(base["max_ratio"])
+    recorded = base["recorded"]
+    ok = True
+    for arch in ("obs/het_round_instrumented", "obs/serve_instrumented"):
+        row = [r for r in rows if r.get("arch") == arch]
+        if not row:
+            print(f"[check_bench] FAIL: no {arch} row in obs.json")
+            ok = False
+            continue
+        ratio = float(row[0]["ratio"])
+        print(f"[check_bench] {arch} ratio {ratio:.3f}x "
+              f"(bar {bar:.2f}x; recorded "
+              f"{recorded[arch.split('/')[1]]:.3f}x in PR {recorded['pr']})")
+        if ratio > bar:
+            print(f"[check_bench] FAIL: {arch} regressed past the bar — "
+                  "telemetry is no longer host-epilogue-only on that loop "
+                  "(a sync, transfer, or per-step callback leaked into the "
+                  "instrumented path)")
+            ok = False
+    return ok
+
+
 def main() -> int:
     ok = check_het()
     ok = check_quant() and ok
+    ok = check_obs() and ok
     if not ok:
         return 1
     print("[check_bench] OK")

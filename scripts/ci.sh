@@ -16,6 +16,10 @@
 #                              # dequant-fused matmul + quantized serving
 #                              # (test_quant.py), compressed-uplink
 #                              # aggregation laws + comm billing
+#   scripts/ci.sh --obs        # telemetry layer: registry/event-log units,
+#                              # disabled-sink engine invariance, report
+#                              # round-trip (test_obs.py) + the checkpoint
+#                              # migration shim tests
 #   scripts/ci.sh --fast       # tier-1 minus the slow sweeps and the
 #                              # multi-device dist tests
 #                              # (-m 'not slow and not dist')
@@ -52,6 +56,14 @@ case "${1:-}" in
     # in test_fed.py)
     exec python -m pytest -x -q tests/test_quant.py \
       tests/test_aggregation_properties.py tests/test_fed.py "$@"
+    ;;
+  --obs)
+    shift
+    # the telemetry suite owns the zero-cost-when-disabled contract;
+    # the adapter-store file rides along for the pool_B_mag migration
+    # shim (its warning path emits ckpt_migrate events)
+    exec python -m pytest -x -q tests/test_obs.py \
+      tests/test_adapter_store.py "$@"
     ;;
   --fast)
     shift

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+from repro import obs
 from repro.utils.pytree import tree_map_with_path, path_str
 
 _BF16 = "__bf16__"
@@ -45,6 +46,20 @@ def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(payload, use_bin_type=True))
     os.replace(tmp, path)
+    if obs.enabled():
+        obs.event("ckpt_save", path=str(path), step=int(step),
+                  leaves=len(payload["leaves"]),
+                  bytes=sum(len(r["b"]) for r in payload["leaves"].values()))
+        obs.inc("ckpt/saves")
+
+
+def checkpoint_leaf_paths(path: str) -> list[str]:
+    """Leaf paths stored in a checkpoint, without unpacking any arrays —
+    the cheap schema probe migration shims use to recognize old layouts
+    (e.g. AdapterStore's pre-raw-delta ``pool_B_mag`` pools)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    return sorted(payload["leaves"])
 
 
 def restore_checkpoint(path: str, like: Any, shardings: Any = None,
@@ -90,4 +105,8 @@ def restore_checkpoint(path: str, like: Any, shardings: Any = None,
         host_tree = jax.tree.map(jax.device_put, host_tree, shardings)
     else:
         host_tree = jax.tree.map(to_device, host_tree)
+    if obs.enabled():
+        obs.event("ckpt_restore", path=str(path),
+                  step=int(payload["step"]), leaves=len(recs))
+        obs.inc("ckpt/restores")
     return host_tree, payload["step"]

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import time
 from functools import partial
 from typing import Any
 
@@ -30,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import aggregation as agg
 from repro.core import peft
 from repro.core.methods import get_method
@@ -177,6 +179,10 @@ class FedSim:
                 # heterogeneous fleet: zero the update rows above this
                 # client's rank (adapters are allocated at r_max)
                 upd = jax.tree.map(jnp.multiply, upd, rmask)
+            # grad_norm rides the metrics unconditionally (not gated on
+            # telemetry) so the compiled program is identical with obs
+            # on and off — the no-op-invariance contract of repro.obs
+            met = dict(met, grad_norm=pt.global_norm(g))
             return apply_updates(adapters, upd), opt_state, met
 
         prox_mu = hp.prox_mu if method.prox else 0.0
@@ -224,12 +230,14 @@ class FedSim:
             return scan_fn
 
         # prox methods keep the round reference aliased to the adapters,
-        # so only the optimizer state is donated for them
-        self._round_scan = jax.jit(
+        # so only the optimizer state is donated for them.  obs.annotate
+        # names each jitted program in profiler traces (host-side wrapper
+        # only — the compiled computation is untouched).
+        self._round_scan = obs.annotate("fed/round_scan")(jax.jit(
             make_scan(vstep, 0, method.prox),
-            donate_argnums=(2,) if method.prox else (1, 2))
-        self._pers_scan = jax.jit(make_scan(vstep_pers, 31, False),
-                                  donate_argnums=(2,))
+            donate_argnums=(2,) if method.prox else (1, 2)))
+        self._pers_scan = obs.annotate("fed/stage3_personalize")(
+            jax.jit(make_scan(vstep_pers, 31, False), donate_argnums=(2,)))
 
         def global_fn(base, aggregated, opt_state, batches, rng):
             # the server model trains at the full allocated rank — no mask
@@ -243,7 +251,8 @@ class FedSim:
                 body, (aggregated, opt_state, jnp.zeros((), jnp.int32)),
                 batches)
             return ad, ost
-        self._global_scan = jax.jit(global_fn, donate_argnums=(2,))
+        self._global_scan = obs.annotate("fed/stage2_global")(
+            jax.jit(global_fn, donate_argnums=(2,)))
 
         def eval_fn(base, adapters, batch):
             params = pt.merge_trees(base, adapters)
@@ -263,6 +272,35 @@ class FedSim:
             agg_fn = partial(agg_fn, weights=jnp.asarray(
                 hp.client_weights, jnp.float32))
         self._agg = jax.jit(agg_fn)
+        self._drift_fn = None           # built on first telemetry-enabled
+        self._obs_wall: dict = {}       # last round's wall-clock split
+
+    def _client_drift(self, clients, aggregated):
+        """Per-client aggregate drift ‖clientᵢ − aggregate‖ over the
+        *shared* leaves (keep-local leaves are personal by contract and
+        excluded; heterogeneous fleets mask the diff to each client's own
+        rank rows).  Telemetry-only — built lazily so the disabled path
+        never compiles it."""
+        if self._drift_fn is None:
+            keep_rx, rmask = self._keep_rx, self.rank_mask
+
+            def fn(clients, aggregated):
+                cl = jax.tree_util.tree_leaves_with_path(clients)
+                ag = jax.tree.leaves(aggregated)
+                rm = (jax.tree.leaves(rmask) if rmask is not None
+                      else [None] * len(ag))
+                tot = jnp.zeros((), jnp.float32)
+                for (p, x), y, m in zip(cl, ag, rm):
+                    if keep_rx is not None and keep_rx.search(pt.path_str(p)):
+                        continue
+                    d = x - y[None]
+                    if m is not None:
+                        d = d * m
+                    tot = tot + jnp.sum(jnp.square(d),
+                                        axis=tuple(range(1, x.ndim)))
+                return jnp.sqrt(tot)
+            self._drift_fn = jax.jit(fn)
+        return self._drift_fn(clients, aggregated)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -278,8 +316,18 @@ class FedSim:
                 stacked, rng, self.rank_mask)
         if self.method.prox:
             args = args + (self._round_ref,)
+        enabled = obs.enabled()
+        t0 = time.perf_counter() if enabled else 0.0
         self.client_adapters, self.opt_state, self._step, mets = \
             self._round_scan(*args)
+        if enabled:
+            # block so the span covers device work; the disabled path
+            # keeps async dispatch (no sync is added there)
+            jax.block_until_ready(self.client_adapters)
+            dt = time.perf_counter() - t0
+            obs.observe("span_seconds", dt, span="fed/round_scan",
+                        method=self.hp.method)
+            self._obs_wall["scan"] = dt
         return {k: np.asarray(v) for k, v in mets.items()}
 
     def local_round_reference(self, batches: list[dict], rng) -> dict:
@@ -303,6 +351,8 @@ class FedSim:
         """Method aggregation (Eqs. 5–8 for ours, FedAvg/trimmed-mean for
         baselines) + comm accounting; broadcasts the aggregate back with
         keep-local leaves (e.g. dB_mag) preserved per client."""
+        enabled = obs.enabled()
+        t0 = time.perf_counter() if enabled else 0.0
         if getattr(self.method.aggregate, "needs_step", False):
             # compressed codecs derive their stochastic-rounding keys
             # from the round counter (post-round, = the step the
@@ -311,6 +361,13 @@ class FedSim:
             aggregated = self._agg(self.client_adapters, step=self._step)
         else:
             aggregated = self._agg(self.client_adapters)
+        if enabled:
+            jax.block_until_ready(aggregated)
+            dt = time.perf_counter() - t0
+            obs.observe("span_seconds", dt, span="fed/aggregate",
+                        method=self.hp.method)
+            self._obs_wall["aggregate"] = dt
+        prev_bytes = self.comm_bytes
         C = self.hp.n_clients
         if self._client_ranks is None:
             self.comm_bytes += C * agg.comm_bytes_per_round(
@@ -324,7 +381,23 @@ class FedSim:
                     self.adapter_template, exclude_rx=self.method.keep_local,
                     rank=int(r), comm=self._comm_class, n_clients=C,
                     topk_ratio=self._topk_ratio)
+        if enabled:
+            obs.inc("fed/comm_bytes", self.comm_bytes - prev_bytes,
+                    method=self.hp.method, comm=self._comm_class)
+            self._obs_wall["comm_bytes"] = self.comm_bytes - prev_bytes
+            # drift is measured pre-rebroadcast (the client models as
+            # they finished the round, vs the server aggregate)
+            self._obs_wall["drift"] = np.asarray(
+                self._client_drift(self.client_adapters, aggregated),
+                np.float64).reshape(-1)
+            t0 = time.perf_counter()
         bcast = self._rebroadcast_keep_personal(aggregated)
+        if enabled:
+            jax.block_until_ready(bcast)
+            dt = time.perf_counter() - t0
+            obs.observe("span_seconds", dt, span="fed/rebroadcast",
+                        method=self.hp.method)
+            self._obs_wall["rebroadcast"] = dt
         self.client_adapters = bcast
         if self.method.prox:
             self._round_ref = bcast
@@ -337,8 +410,41 @@ class FedSim:
         (launch/train.make_fed_train_step) against: after this call,
         ``self.client_adapters`` must match the train step's output
         adapters for the same initial state and batches."""
+        if not obs.enabled():
+            mets = self.local_round(batches, rng)
+            self.aggregate()
+            return mets
+        self._obs_wall = {}
+        t0 = time.perf_counter()
         mets = self.local_round(batches, rng)
         self.aggregate()
+        total = time.perf_counter() - t0
+        obs.observe("span_seconds", total, span="fed/round",
+                    method=self.hp.method)
+        obs.inc("fed/rounds", method=self.hp.method)
+        w = self._obs_wall
+        ce = np.asarray(mets["ce"], np.float64).reshape(-1)
+        gn = np.asarray(mets.get("grad_norm", np.zeros_like(ce)),
+                        np.float64).reshape(-1)
+        drift = np.asarray(w.get("drift", np.zeros_like(ce))).reshape(-1)
+        spread = float(ce.max() - ce.min()) if ce.size else 0.0
+        obs.set_gauge("fed/loss_spread", spread, method=self.hp.method)
+        for c in range(ce.size):
+            obs.observe("fed/client_ce", float(ce[c]),
+                        method=self.hp.method, client=c)
+        obs.event(
+            "fed_round", method=self.hp.method, step=int(self._step),
+            clients=int(ce.size),
+            ce=[round(float(v), 6) for v in ce],
+            grad_norm=[round(float(v), 6) for v in gn],
+            drift=[round(float(v), 6) for v in drift],
+            loss_spread=round(spread, 6),
+            comm_bytes=int(w.get("comm_bytes", 0)),
+            comm_class=self._comm_class,
+            wall={"scan": round(w.get("scan", 0.0), 6),
+                  "aggregate": round(w.get("aggregate", 0.0), 6),
+                  "rebroadcast": round(w.get("rebroadcast", 0.0), 6),
+                  "total": round(total, 6)})
         return mets
 
     @staticmethod
@@ -366,20 +472,39 @@ class FedSim:
         """Stage 2 — train the global-stage leaves (ΔA_D for the paper,
         Eq. 9) on the server task mixture, as one jitted scan."""
         opt_state = self.opt_global.init(aggregated)
+        enabled = obs.enabled()
+        t0 = time.perf_counter() if enabled else 0.0
         aggregated, _ = self._global_scan(
             self.base, aggregated, opt_state,
             self._stack_batches(server_batches), rng)
         self.client_adapters = self._rebroadcast_keep_personal(aggregated)
+        if enabled:
+            jax.block_until_ready(self.client_adapters)
+            dt = time.perf_counter() - t0
+            obs.observe("span_seconds", dt, span="fed/stage2_global",
+                        method=self.hp.method)
+            obs.event("fed_stage", stage="global", method=self.hp.method,
+                      steps=len(server_batches), wall=round(dt, 6))
         return aggregated
 
     def personalize(self, batches: list[dict], rng) -> None:
         """Stage 3 — per-client fine-tune of the local-stage leaves
         (ΔB_M with the Eq. 11 regularizer for the paper)."""
         opt_state = jax.vmap(self.opt_local.init)(self.client_adapters)
+        enabled = obs.enabled()
+        t0 = time.perf_counter() if enabled else 0.0
         self.client_adapters, _, _, _ = self._pers_scan(
             self.base, self.client_adapters, opt_state,
             jnp.zeros((), jnp.int32), self._stack_batches(batches), rng,
             self.rank_mask)
+        if enabled:
+            jax.block_until_ready(self.client_adapters)
+            dt = time.perf_counter() - t0
+            obs.observe("span_seconds", dt, span="fed/stage3_personalize",
+                        method=self.hp.method)
+            obs.event("fed_stage", stage="personalize",
+                      method=self.hp.method, steps=len(batches),
+                      wall=round(dt, 6))
 
     # ------------------------------------------------------------------
     # checkpointing

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels.batched_lora.bgmv import bgmv_matmul, bgmv_mag_matmul
 from repro.kernels.batched_lora.ref import bgmv_ref, bgmv_mag_ref
+from repro.obs.tracing import named_scope
 
 _BS = 256                       # token-block size for the Pallas grid
 
@@ -54,13 +55,15 @@ def bgmv(x, a_pool, b_pool, idx, *, scale: float = 1.0, impl=None,
     squeeze = x.ndim == 2
     if squeeze:
         x = x[:, None, :]
-    if impl == "einsum":
-        y = bgmv_ref(x, a_pool, b_pool, idx, scale, ranks=ranks)
-    else:
-        xp, S, bs = _pad_tokens(x)
-        y = bgmv_matmul(xp, a_pool, b_pool, idx, ranks, scale=scale, bs=bs,
-                        interpret=(impl == "interpret") or not _on_tpu())
-        y = y[:, :S]
+    with named_scope("kernels/bgmv"):
+        if impl == "einsum":
+            y = bgmv_ref(x, a_pool, b_pool, idx, scale, ranks=ranks)
+        else:
+            xp, S, bs = _pad_tokens(x)
+            y = bgmv_matmul(xp, a_pool, b_pool, idx, ranks, scale=scale,
+                            bs=bs,
+                            interpret=(impl == "interpret") or not _on_tpu())
+            y = y[:, :S]
     return y[:, 0] if squeeze else y
 
 
@@ -77,15 +80,17 @@ def bgmv_mag(x, a_dir, a_mag, b_mag, dmag_pool, b_dir, idx, *,
     squeeze = x.ndim == 2
     if squeeze:
         x = x[:, None, :]
-    if impl == "einsum":
-        y = bgmv_mag_ref(x, a_dir, a_mag, b_mag, dmag_pool, b_dir, idx,
-                         scale, ranks=ranks)
-    else:
-        xp, S, bs = _pad_tokens(x)
-        y = bgmv_mag_matmul(xp, a_dir, a_mag, b_mag, dmag_pool, b_dir, idx,
-                            ranks, scale=scale, bs=bs,
-                            interpret=(impl == "interpret") or not _on_tpu())
-        y = y[:, :S]
+    with named_scope("kernels/bgmv_mag"):
+        if impl == "einsum":
+            y = bgmv_mag_ref(x, a_dir, a_mag, b_mag, dmag_pool, b_dir, idx,
+                             scale, ranks=ranks)
+        else:
+            xp, S, bs = _pad_tokens(x)
+            y = bgmv_mag_matmul(xp, a_dir, a_mag, b_mag, dmag_pool, b_dir,
+                                idx, ranks, scale=scale, bs=bs,
+                                interpret=(impl == "interpret")
+                                or not _on_tpu())
+            y = y[:, :S]
     return y[:, 0] if squeeze else y
 
 

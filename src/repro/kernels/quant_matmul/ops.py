@@ -23,6 +23,7 @@ from repro.kernels.quant_matmul.quant_matmul import quant_matmul_kernel
 from repro.kernels.quant_matmul.ref import (dequantize, quant_matmul_ref,
                                             quantize_int4, quantize_int8,
                                             unpack_int4)
+from repro.obs.tracing import named_scope
 from repro.utils import pytree as pt
 
 _BM = 256                       # token-block size for the Pallas grid
@@ -53,21 +54,23 @@ def quant_matmul(x, q, scale, *, impl=None):
     ``q`` int8 (d_in, d_out) or packed-int4 uint8 (d_in/2, d_out);
     ``scale`` (G, d_out) f32 per-channel (G=1) or per-group scales."""
     impl = _resolve(impl)
-    if impl == "einsum":
-        return quant_matmul_ref(x, q, scale)
-    lead, d_in = x.shape[:-1], x.shape[-1]
-    xm = x.reshape(-1, d_in)
-    M, N = xm.shape[0], q.shape[-1]
-    bm, bn = min(_BM, M), min(_BN, N)
-    pm, pn = -M % bm, -N % bn
-    if pm:
-        xm = jnp.pad(xm, ((0, pm), (0, 0)))
-    if pn:                       # zero scales → padded columns dequant to 0
-        q = jnp.pad(q, ((0, 0), (0, pn)))
-        scale = jnp.pad(scale, ((0, 0), (0, pn)))
-    y = quant_matmul_kernel(xm, q, scale, bm=bm, bn=bn,
-                            interpret=(impl == "interpret") or not _on_tpu())
-    return y[:M, :N].reshape(*lead, N)
+    with named_scope("kernels/quant_matmul"):
+        if impl == "einsum":
+            return quant_matmul_ref(x, q, scale)
+        lead, d_in = x.shape[:-1], x.shape[-1]
+        xm = x.reshape(-1, d_in)
+        M, N = xm.shape[0], q.shape[-1]
+        bm, bn = min(_BM, M), min(_BN, N)
+        pm, pn = -M % bm, -N % bn
+        if pm:
+            xm = jnp.pad(xm, ((0, pm), (0, 0)))
+        if pn:                   # zero scales → padded columns dequant to 0
+            q = jnp.pad(q, ((0, 0), (0, pn)))
+            scale = jnp.pad(scale, ((0, 0), (0, pn)))
+        y = quant_matmul_kernel(
+            xm, q, scale, bm=bm, bn=bn,
+            interpret=(impl == "interpret") or not _on_tpu())
+        return y[:M, :N].reshape(*lead, N)
 
 
 def quantize_backbone(base, mode: str, *, group_size=None):

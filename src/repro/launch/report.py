@@ -1,7 +1,9 @@
-"""Generate EXPERIMENTS.md §Dry-run / §Roofline sections from the
-dry-run JSON artifacts.
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline / §Telemetry sections
+from the dry-run JSON artifacts and the obs event log.
 
     PYTHONPATH=src python -m repro.launch.report > experiments/roofline.md
+
+Pass a telemetry JSONL path via REPRO_TELEMETRY to append §Telemetry.
 """
 from __future__ import annotations
 
@@ -11,6 +13,7 @@ import os
 from collections import defaultdict
 
 DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+TELEMETRY = os.environ.get("REPRO_TELEMETRY", "")
 
 
 def load() -> list[dict]:
@@ -94,6 +97,94 @@ def roofline_section(recs) -> str:
     return "\n".join(out)
 
 
+def _mean(xs):
+    xs = list(xs)
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def telemetry_section(events) -> str:
+    """Render obs event-log JSONL (a path, rotation-aware, or an
+    already-loaded list of event dicts) into EXPERIMENTS-style tables:
+    one federated-rounds table (per-round loss/drift/comm/wall split)
+    and one serving table (per-run throughput + pool behaviour)."""
+    if isinstance(events, (str, os.PathLike)):
+        from repro.obs import read_events
+        events = read_events(str(events))
+    by_kind = defaultdict(list)
+    for e in events:
+        by_kind[e.get("kind", "?")].append(e)
+    out = ["## §Telemetry", ""]
+
+    rounds = by_kind["fed_round"]
+    if rounds:
+        out += ["### Federated rounds", "",
+                "| engine | method | step | clients | ce mean | spread | "
+                "grad-norm | drift mean | comm bytes (class) | "
+                "wall split (s) |",
+                "|---|---|---|---|---|---|---|---|---|---|"]
+        for e in rounds:
+            wall = e.get("wall", {})
+            split = ", ".join(f"{k}:{v:.3f}" for k, v in wall.items())
+            out.append(
+                f"| {e.get('engine', 'sim')} | {e.get('method', '?')} | "
+                f"{e.get('step', 0)} | {e.get('clients', 0)} | "
+                f"{_mean(e.get('ce', [])):.4f} | "
+                f"{e.get('loss_spread', 0.0):.4f} | "
+                f"{_mean(e.get('grad_norm', [])):.4f} | "
+                f"{_mean(e.get('drift', [])):.4f} | "
+                f"{e.get('comm_bytes', 0):,} ({e.get('comm_class', '?')}) | "
+                f"{split} |")
+        out.append("")
+
+    stages = by_kind["fed_stage"]
+    if stages:
+        out += ["### Pipeline stages", "",
+                "| engine | stage | method | ce | wall s |",
+                "|---|---|---|---|---|"]
+        for e in stages:
+            ce = e.get("ce", 0.0)
+            out.append(f"| {e.get('engine', 'sim')} | {e['stage']} | "
+                       f"{e.get('method', '?')} | {ce:.4f} | "
+                       f"{e.get('wall', 0.0):.3f} |")
+        out.append("")
+
+    runs = by_kind["serve_run"]
+    if runs:
+        admits = by_kind["serve_admit"]
+        waits = [a.get("wait", 0.0) for a in admits]
+        depth = max((a.get("queue_depth", 0) for a in admits), default=0)
+        out += ["### Serving", "",
+                "| requests | tokens | wall s | tokens/s | chunks | "
+                "prefills | rows |",
+                "|---|---|---|---|---|---|---|"]
+        for e in runs:
+            out.append(f"| {e.get('requests', 0)} | {e.get('tokens', 0)} | "
+                       f"{e.get('wall', 0.0):.3f} | "
+                       f"{e.get('tokens_per_s', 0.0):,.1f} | "
+                       f"{e.get('chunks', 0)} | {e.get('prefills', 0)} | "
+                       f"{e.get('rows', 0)} |")
+        out += ["",
+                f"admission wait mean {_mean(waits)*1e3:.2f} ms / max "
+                f"{max(waits, default=0.0)*1e3:.2f} ms over {len(admits)} "
+                f"admits; peak queue depth {depth}; pool registers "
+                f"{len(by_kind['pool_register'])}, evictions "
+                f"{len(by_kind['pool_evict'])}", ""]
+
+    snaps = by_kind["metrics_snapshot"]
+    if snaps:
+        counters = snaps[-1].get("snapshot", {}).get("counters", {})
+        total = lambda n: sum(s.get("value", 0.0)  # noqa: E731
+                              for s in counters.get(n, []))
+        lookups, regs = total("pool/lookups"), total("pool/registers")
+        if lookups or regs:
+            out += [f"pool hit-rate {lookups / max(lookups + regs, 1):.2%} "
+                    f"({int(lookups)} lookups / {int(regs)} registers)", ""]
+
+    if len(out) == 2:
+        out += ["_no telemetry events_", ""]
+    return "\n".join(out).rstrip()
+
+
 def summarize(recs) -> str:
     ok = [r for r in recs if r.get("status") == "ok"]
     bad = [r for r in recs if r.get("status") != "ok"]
@@ -111,6 +202,9 @@ def main():
     print(dryrun_section(recs))
     print()
     print(roofline_section(recs))
+    if TELEMETRY and os.path.exists(TELEMETRY):
+        print()
+        print(telemetry_section(TELEMETRY))
 
 
 if __name__ == "__main__":

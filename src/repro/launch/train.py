@@ -61,13 +61,16 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import time
 from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core import aggregation as fedagg
 from repro.core import peft
 from repro.core.methods import get_method
@@ -112,6 +115,13 @@ class TrainSettings:
     global_steps: int = 5         # stage-2 steps per global_step call
     personal_steps: int = 20      # stage-3 steps per personal_step call
     lam: float = 1e-3             # Eq. 11 Frobenius regularizer (stage 3)
+    # Telemetry: when True the round program additionally all_gathers
+    # per-client {ce, grad_norm, drift} as replicated metric leaves
+    # (repro.obs consumes them host-side — no callbacks enter the jit)
+    # and ``FedPipeline.run_pipeline`` emits fed_round/fed_stage events.
+    # False (the default) leaves the compiled programs byte-identical to
+    # the pre-telemetry ones.
+    telemetry: bool = False
 
 
 def pick_micro_batches(cfg: ArchConfig, per_client_batch: int,
@@ -147,9 +157,10 @@ class FedPipeline:
     ``anchor`` is the FedProx proximal reference (defaults to the call's
     input adapters — correct for round-only training; the pipeline
     driver threads the post-round rebroadcast through subsequent rounds
-    exactly like ``FedSim._round_ref``).  ``rng`` threads the adapter
-    dropout keys through stage-1 local training (see
-    make_fed_pipeline_step)."""
+    exactly like ``FedSim._round_ref``).  ``rng`` trees thread the
+    adapter dropout keys: stage 1 takes ``rng`` in ``round_step``,
+    stages 2/3 take ``rng`` as their last argument, with the simulator's
+    exact key chains (see make_fed_pipeline_step)."""
     round_step: Callable
     global_step: Callable
     personal_step: Callable
@@ -159,10 +170,17 @@ class FedPipeline:
     # round-only engine can drop the aggregate output INSIDE its own jit
     # (XLA then DCEs the replicated materialization the pipeline needs)
     round_step_raw: Callable = None
+    # telemetry (set from TrainSettings.telemetry): run_pipeline emits
+    # fed_round / fed_stage events using the per-client metric leaves the
+    # round program all_gathers; comm_bytes_round is the analytic wire
+    # cost of one round's collective (same accounting as FedSim)
+    telemetry: bool = False
+    comm_bytes_round: int = 0
+    comm_class: str = "psum"
 
     def run_pipeline(self, base, adapters, opt_state, step, batch,
                      server_batch, personal_batch, prox_anchor=None,
-                     rng=None):
+                     rng=None, global_rng=None, personal_rng=None):
         """One full paper-pipeline iteration: stage-1 round → stage-2
         global optimizer → stage-3 personalization, with the simulator's
         sequencing (``FedSim.run_round`` → ``global_stage`` →
@@ -171,14 +189,68 @@ class FedPipeline:
         ``step + local_steps``) into the next iteration — for prox
         methods the anchor is the post-round rebroadcast, which stages
         2/3 must not disturb (mirrors ``FedSim._round_ref``)."""
+        enabled = self.telemetry and obs.enabled()
+        t0 = time.perf_counter() if enabled else 0.0
         adapters, opt_state, agg, met1 = self.round_step(
             base, adapters, opt_state, step, batch, prox_anchor, rng)
+        if enabled:
+            jax.block_until_ready(adapters)
+            t1 = time.perf_counter()
         anchor = adapters if self.method.prox else None
         agg, adapters, met2 = self.global_step(base, agg, adapters,
-                                               server_batch)
-        adapters, met3 = self.personal_step(base, adapters, personal_batch)
+                                               server_batch, global_rng)
+        if enabled:
+            jax.block_until_ready(adapters)
+            t2 = time.perf_counter()
+        adapters, met3 = self.personal_step(base, adapters, personal_batch,
+                                            personal_rng)
+        if enabled:
+            jax.block_until_ready(adapters)
+            t3 = time.perf_counter()
+            self._emit_round_event(step, met1, met2, met3,
+                                   (t1 - t0, t2 - t1, t3 - t2, t3 - t0))
         return adapters, opt_state, agg, anchor, {
             "round": met1, "global": met2, "personal": met3}
+
+    def _emit_round_event(self, step, met1, met2, met3, wall):
+        """Host epilogue: feed the round program's replicated per-client
+        metric leaves into the global telemetry sink."""
+        name = self.method.name
+        dt_round, dt_global, dt_personal, total = wall
+        ce = np.asarray(met1.get("client_ce", []), np.float64).reshape(-1)
+        gn = np.asarray(met1.get("client_grad_norm", []),
+                        np.float64).reshape(-1)
+        drift = np.asarray(met1.get("client_drift", []),
+                           np.float64).reshape(-1)
+        spread = float(ce.max() - ce.min()) if ce.size else 0.0
+        obs.inc("fed/rounds", method=name, engine="pipeline")
+        obs.inc("fed/comm_bytes", self.comm_bytes_round, method=name,
+                comm=self.comm_class)
+        obs.set_gauge("fed/loss_spread", spread, method=name)
+        for span, dt in (("fed/round", dt_round),
+                         ("fed/stage2_global", dt_global),
+                         ("fed/stage3_personalize", dt_personal)):
+            obs.observe("span_seconds", dt, span=span, method=name)
+        for c in range(ce.size):
+            obs.observe("fed/client_ce", float(ce[c]), method=name, client=c)
+        obs.event(
+            "fed_round", engine="pipeline", method=name, step=int(step),
+            clients=int(ce.size),
+            ce=[round(float(v), 6) for v in ce],
+            grad_norm=[round(float(v), 6) for v in gn],
+            drift=[round(float(v), 6) for v in drift],
+            loss_spread=round(spread, 6),
+            comm_bytes=int(self.comm_bytes_round),
+            comm_class=self.comm_class,
+            wall={"round": round(dt_round, 6),
+                  "global": round(dt_global, 6),
+                  "personal": round(dt_personal, 6),
+                  "total": round(total, 6)})
+        for stage, met, dt in (("global", met2, dt_global),
+                               ("personal", met3, dt_personal)):
+            obs.event("fed_stage", engine="pipeline", stage=stage,
+                      method=name, ce=round(float(np.asarray(met["ce"])), 6),
+                      wall=round(dt, 6))
 
 
 def make_fed_pipeline_step(cfg: ArchConfig, mesh,
@@ -206,8 +278,16 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
     micro_batches=1; micro-batching reshapes the activations, which
     redraws the Bernoulli masks).  With ``rng=None`` the loss sees no
     key and dropout is off regardless of cfg, the previous contract.
-    Stages 2/3 thread no rng — pipeline parity holds at
-    lora_dropout = 0, the paper's fine-tuning setting.
+
+    Stages 2/3 take their own ``rng`` (last argument of ``global_step``
+    / ``personal_step``) with the simulator's key chains: stage 2 draws
+    ``fold_in(rng, step)`` per server step (no client split —
+    ``FedSim.global_stage``); stage 3 draws
+    ``split(fold_in(rng, 31 + step), C)[client]`` (``FedSim.personalize``
+    — the 31 offset decorrelates stage-3 masks from a stage-1 round fed
+    the same key).  A stage-2 rng forces the replicated stage-2 path
+    (each shard of the sharded path grads a different row slice, which
+    would redraw different Bernoulli masks than the full-batch oracle).
     """
     if cfg.use_fused_dora:
         raise ValueError(
@@ -290,7 +370,7 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
     # (grads), LoRA grads accumulated in f32.
     def train_scan(base, ad, ost, step0, batch, *, T, stage_opt, cover,
                    stage_lam, stage_prox, anchor, stage, rng=None,
-                   grad_axes=None):
+                   rng_fold=0, rng_split=True, grad_axes=None):
         def loss_fn(ad_, mb, rng_):
             params = pt.merge_trees(base, ad_)
             loss, met = M.loss_and_metrics(params, mb, cfg, rng=rng_,
@@ -328,12 +408,19 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
 
         def local_step(carry, sb):
             ad_, ost_, step = carry
-            # per-step dropout key: the simulator's chain
-            # split(fold_in(rng, step), C)[client], so both engines draw
-            # the same masks for the same step/client
-            step_rng = (jax.random.split(jax.random.fold_in(rng, step), dp)
-                        [fedagg.client_index(daxes)]
-                        if rng is not None else None)
+            # per-step dropout key: the simulator's chains —
+            # split(fold_in(rng, fold + step), C)[client] on per-client
+            # stages (fold 0 for the round, 31 for personalization), and
+            # the unsplit fold_in(rng, step) on the replicated stage-2
+            # server model — so both engines draw the same masks for the
+            # same step/client
+            if rng is None:
+                step_rng = None
+            else:
+                k = jax.random.fold_in(rng, rng_fold + step)
+                step_rng = (jax.random.split(k, dp)
+                            [fedagg.client_index(daxes)]
+                            if rng_split else k)
             g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), ad_)
 
             def acc_body(carry_g, mb):
@@ -357,6 +444,11 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
                     lambda x: jax.lax.psum(x, grad_axes) / n_tot, g_acc)
             else:
                 g_acc = jax.tree.map(lambda x: x / micro, g_acc)
+            # pre-clip gradient norm rides the metrics unconditionally
+            # (not telemetry-gated) so the compiled program is identical
+            # with obs on and off; equals the simulator's per-client
+            # grad_norm at micro_batches=1
+            gnorm = pt.global_norm(g_acc)
             g_acc = clip_by_global_norm(g_acc, settings.clip)
             upd, ost_ = stage_opt.update(g_acc, ost_, ad_, step)
             if cover is not None:
@@ -365,6 +457,7 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
                 upd = jax.tree.map(jnp.multiply, upd, cover)
             ad_ = apply_updates(ad_, upd)
             met = jax.tree.map(lambda x: jnp.sum(x, axis=0) / micro, mets)
+            met = dict(met, grad_norm=gnorm)
             return (ad_, ost_, step + 1), met
 
         (ad, ost, _), mets = jax.lax.scan(local_step, (ad, ost, step0),
@@ -396,6 +489,21 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
         # the post-round counter, = FedSim._step at FedSim.aggregate time.
         agg = collective(adapters, axes=daxes, weight=w, cover=cover,
                          step=step0 + settings.local_steps)
+        if settings.telemetry:
+            # per-client aggregate drift ‖client − aggregate‖ over the
+            # shared leaves, pre-rebroadcast (the simulator's
+            # _client_drift) — a per-shard scalar, all_gathered below
+            sq = jnp.zeros((), jnp.float32)
+            for (p, x), y, m in zip(
+                    jax.tree_util.tree_leaves_with_path(adapters),
+                    jax.tree.leaves(agg), jax.tree.leaves(cover)):
+                if keep_rx is not None and keep_rx.search(pt.path_str(p)):
+                    continue
+                d = x - y
+                if het:
+                    d = d * m
+                sq = sq + jnp.sum(jnp.square(d))
+            drift = jnp.sqrt(sq)
         if zero_rx is not None:
             agg = pt.tree_map_with_path(
                 lambda p, x: jnp.zeros_like(x) if zero_rx.search(p) else x,
@@ -403,6 +511,16 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
         out = fedagg.client_rebroadcast(agg, adapters, keep_rx,
                                         cover if het else None)
         met_last = jax.tree.map(lambda m: jax.lax.pmean(m, daxes), mets)
+        if settings.telemetry:
+            # per-client metric leaves, replicated by the all_gather so
+            # they satisfy the replicated out_spec — the host pulls them
+            # after the jit returns (no callbacks inside the program)
+            met_last = dict(
+                met_last,
+                client_ce=jax.lax.all_gather(mets["ce"], daxes),
+                client_grad_norm=jax.lax.all_gather(mets["grad_norm"],
+                                                    daxes),
+                client_drift=jax.lax.all_gather(drift, daxes))
         return (jax.tree.map(lambda x: x[None], out),
                 jax.tree.map(lambda x: x[None], opt_state), agg, met_last)
 
@@ -428,7 +546,7 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
                     weight_c, covers_c, rng)
 
     # ---- stage 2: the global optimizer (replicated server model) -------
-    def global_body(base, agg, adapters, sbatch, covers):
+    def global_body(base, agg, adapters, sbatch, covers, rng, *, use_rng):
         own = jax.tree.map(lambda x: x[0], adapters)
         cover = jax.tree.map(lambda x: x[0], covers)
         # the server model trains at the full allocated rank with no rank
@@ -438,14 +556,18 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
         # every micro-batch and the token-weighted psum inside train_scan
         # recovers the full-batch gradient (dp× fewer backbone FLOPs per
         # shard, updates stay replicated); otherwise every shard runs the
-        # identical replicated math
+        # identical replicated math.  Dropout rng forces the replicated
+        # path: sharded rows would redraw different Bernoulli masks than
+        # the full-batch oracle (mask shape follows the activations).
         B_s = sbatch["tokens"].shape[0]
-        shard2 = dp > 1 and B_s % (settings.global_steps * micro * dp) == 0
+        shard2 = (dp > 1 and not use_rng
+                  and B_s % (settings.global_steps * micro * dp) == 0)
         ost = opt_g.init(agg)
         agg, _, mets = train_scan(
             base, agg, ost, jnp.zeros((), jnp.int32), sbatch,
             T=settings.global_steps, stage_opt=opt_g, cover=None,
             stage_lam=0.0, stage_prox=0.0, anchor=None, stage="global",
+            rng=rng if use_rng else None, rng_split=False,
             grad_axes=daxes if shard2 else None)
         if shard2:
             # per-shard metrics differ (different rows) — mean them so
@@ -455,19 +577,22 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
                                         cover if het else None)
         return agg, jax.tree.map(lambda x: x[None], out), mets
 
-    def global_step(base, aggregated, adapters, server_batch):
+    def global_step(base, aggregated, adapters, server_batch, rng=None):
+        use_rng = rng is not None
+        if not use_rng:
+            rng = jnp.zeros((2,), jnp.uint32)   # placeholder, never consumed
         body = shard_map_compat(
-            global_body,
+            partial(global_body, use_rng=use_rng),
             mesh,
             in_specs=(base_manual_specs(base, cfg), agg_spec, ad_spec, P(),
-                      cov_spec),
+                      cov_spec, P()),
             out_specs=(agg_spec, ad_spec, P()),
             manual_axes=daxes,
         )
-        return body(base, aggregated, adapters, server_batch, covers_c)
+        return body(base, aggregated, adapters, server_batch, covers_c, rng)
 
     # ---- stage 3: per-client personalization (no collective) -----------
-    def personal_body(base, adapters, batch, covers):
+    def personal_body(base, adapters, batch, covers, rng, *, use_rng):
         ad = jax.tree.map(lambda x: x[0], adapters)
         batch = {k: v[0] for k, v in batch.items()}
         cover = jax.tree.map(lambda x: x[0], covers)
@@ -476,29 +601,52 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
             base, ad, ost, jnp.zeros((), jnp.int32), batch,
             T=settings.personal_steps, stage_opt=opt_l,
             cover=cover if het else None, stage_lam=lam, stage_prox=0.0,
-            anchor=None, stage="personal")
+            anchor=None, stage="personal",
+            rng=rng if use_rng else None, rng_fold=31)
         met_last = jax.tree.map(lambda m: jax.lax.pmean(m, daxes), mets)
         return jax.tree.map(lambda x: x[None], ad), met_last
 
-    def personal_step(base, adapters, batch):
+    def personal_step(base, adapters, batch, rng=None):
+        use_rng = rng is not None
+        if not use_rng:
+            rng = jnp.zeros((2,), jnp.uint32)   # placeholder, never consumed
         body = shard_map_compat(
-            personal_body,
+            partial(personal_body, use_rng=use_rng),
             mesh,
             in_specs=(base_manual_specs(base, cfg), ad_spec,
-                      batch_spec_of(batch), cov_spec),
+                      batch_spec_of(batch), cov_spec, P()),
             out_specs=(ad_spec, P()),
             manual_axes=daxes,
         )
-        return body(base, adapters, batch, covers_c)
+        return body(base, adapters, batch, covers_c, rng)
 
     def opt_init(adapters_c):
         return jax.vmap(opt.init)(adapters_c)
+
+    # analytic wire cost of one round's collective — FedSim.aggregate's
+    # exact billing, evaluated once at build time on the abstract adapter
+    # template (heterogeneous fleets bill each client at its own rank)
+    comm_cls = fedagg.comm_class(method)
+    topk_ratio = getattr(collective, "topk_ratio", 0.01)
+    if het:
+        comm_bytes = sum(
+            fedagg.comm_bytes_per_round(
+                abs_ad, exclude_rx=method.keep_local, rank=int(r),
+                comm=comm_cls, n_clients=dp, topk_ratio=topk_ratio)
+            for r in settings.client_ranks)
+    else:
+        comm_bytes = dp * fedagg.comm_bytes_per_round(
+            abs_ad, exclude_rx=method.keep_local, comm=comm_cls,
+            n_clients=dp, topk_ratio=topk_ratio)
 
     return FedPipeline(round_step=jax.jit(round_step),
                        global_step=jax.jit(global_step),
                        personal_step=jax.jit(personal_step),
                        opt_init=opt_init, method=method,
-                       round_step_raw=round_step)
+                       round_step_raw=round_step,
+                       telemetry=settings.telemetry,
+                       comm_bytes_round=int(comm_bytes),
+                       comm_class=comm_cls)
 
 
 def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):

@@ -1,0 +1,105 @@
+"""repro.obs — fleet telemetry: metrics, tracing, structured events.
+
+Global-sink design: exactly one ``Telemetry`` is active per process.
+By default it is the **null** telemetry — a ``NullRegistry`` plus a
+``NullEventLog`` whose every method is a no-op — so instrumented call
+sites cost one attribute lookup when observability is off and the
+jitted programs they wrap are byte-identical (locked by
+``tests/test_obs.py`` no-op-invariance tests).  ``enable()`` swaps in a
+live registry/event log; ``disable()`` swaps the null one back.
+
+    from repro import obs
+    tel = obs.enable(event_path="run/telemetry.jsonl")
+    ... run engines ...
+    obs.emit_snapshot()           # dump metrics into the JSONL epilogue
+    obs.disable()
+
+Engines read the sink through ``obs.active()`` (or the module-level
+helpers ``inc`` / ``set_gauge`` / ``observe`` / ``event``) at call time,
+never caching it across rounds, so enabling mid-process works.
+"""
+from __future__ import annotations
+
+from repro.obs.events import EventLog, NullEventLog, read_events
+from repro.obs.metrics import MetricsRegistry, NullRegistry
+from repro.obs.tracing import annotate, named_scope, span
+
+__all__ = [
+    "Telemetry", "enable", "disable", "enabled", "active",
+    "inc", "set_gauge", "observe", "event", "emit_snapshot",
+    "MetricsRegistry", "NullRegistry", "EventLog", "NullEventLog",
+    "read_events", "span", "annotate", "named_scope",
+]
+
+
+class Telemetry:
+    """A metrics registry paired with an event sink."""
+
+    def __init__(self, metrics, events, *, live: bool):
+        self.metrics = metrics
+        self.events = events
+        self.live = live
+
+    def close(self) -> None:
+        self.events.close()
+
+
+_NULL = Telemetry(NullRegistry(), NullEventLog(), live=False)
+_active = _NULL
+
+
+def enable(event_path: str | None = None, *,
+           max_bytes: int = 8 * 1024 * 1024, keep: int = 3) -> Telemetry:
+    """Install a live telemetry sink (idempotent: replaces the current
+    one, closing its event log).  ``event_path=None`` keeps metrics but
+    drops events (useful in tests that only assert on the registry)."""
+    global _active
+    if _active.live:
+        _active.close()
+    events = (EventLog(event_path, max_bytes=max_bytes, keep=keep)
+              if event_path is not None else NullEventLog())
+    _active = Telemetry(MetricsRegistry(), events, live=True)
+    return _active
+
+
+def disable() -> None:
+    """Swap the null sink back in (closing the live event log)."""
+    global _active
+    if _active.live:
+        _active.close()
+    _active = _NULL
+
+
+def enabled() -> bool:
+    return _active.live
+
+
+def active() -> Telemetry:
+    return _active
+
+
+# -- call-site helpers -------------------------------------------------------
+
+def inc(name: str, value: float = 1.0, **labels) -> None:
+    _active.metrics.counter(name).inc(value, **labels)
+
+
+def set_gauge(name: str, value: float, **labels) -> None:
+    _active.metrics.gauge(name).set(value, **labels)
+
+
+def observe(name: str, value: float, **labels) -> None:
+    _active.metrics.histogram(name).observe(value, **labels)
+
+
+def event(kind: str, **fields) -> None:
+    _active.events.emit(kind, **fields)
+
+
+def emit_snapshot() -> dict:
+    """Dump the full metrics snapshot as a ``metrics_snapshot`` event
+    (the run epilogue that ``telemetry_section`` renders) and return it."""
+    snap = _active.metrics.snapshot()
+    _active.events.emit("metrics_snapshot", snapshot=snap)
+    _active.events.flush()
+    return snap

@@ -1,0 +1,74 @@
+"""Span timers and jax-profiler naming wrappers.
+
+Three layers, all safe to leave in production call sites:
+
+* ``span(name, **labels)`` — host wall-clock context manager.  When
+  telemetry is enabled it records the elapsed seconds into the
+  ``span_seconds`` histogram (label ``span=<name>`` plus any extras)
+  and opens a ``jax.profiler.TraceAnnotation`` so the region shows up
+  named in a captured trace.  When disabled it degrades to a bare
+  ``yield`` — no clock reads, no annotation, no allocation beyond the
+  generator frame.
+
+  ``span`` does NOT block on device work: callers that want the span to
+  cover device execution must ``block_until_ready`` inside the span
+  (the instrumented engines only do so when telemetry is enabled, so
+  the disabled path keeps its async dispatch).
+
+* ``annotate(name)`` — decorator naming a traced/jitted function in
+  profiler output via ``jax.profiler.annotate_function``; identity
+  when the profiler API is unavailable.
+
+* ``named_scope(name)`` — re-export of ``jax.named_scope`` for naming
+  *operations inside* a jitted program (BGMV, quant matmul); metadata
+  only, never changes the compiled computation.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+try:  # pure-host fallback when no profiler is built in (CPU-only jax
+    # still has these, but keep the subsystem importable without jax)
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+    from jax.profiler import annotate_function as _annotate_function
+except Exception:  # pragma: no cover - exercised only on stripped jax
+    _TraceAnnotation = None
+    _annotate_function = None
+
+try:
+    from jax import named_scope
+except Exception:  # pragma: no cover
+    @contextlib.contextmanager
+    def named_scope(name: str):
+        yield
+
+
+def annotate(name: str):
+    """Decorator: name ``fn`` in profiler traces (identity w/o profiler)."""
+    def deco(fn):
+        if _annotate_function is None:
+            return fn
+        return _annotate_function(fn, name=name)
+    return deco
+
+
+@contextlib.contextmanager
+def span(name: str, **labels):
+    """Time a host-side region into the ``span_seconds`` histogram."""
+    import repro.obs as _obs  # late: repro.obs imports this module
+    if not _obs.enabled():
+        yield
+        return
+    tel = _obs.active()
+    ann = _TraceAnnotation(name) if _TraceAnnotation is not None else None
+    if ann is not None:
+        ann.__enter__()
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        dt = time.perf_counter() - t0
+        if ann is not None:
+            ann.__exit__(None, None, None)
+        tel.metrics.histogram("span_seconds").observe(dt, span=name, **labels)

@@ -44,13 +44,16 @@ numeric array).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
+from repro import obs
+from repro.checkpoint.ckpt import (checkpoint_leaf_paths, restore_checkpoint,
+                                   save_checkpoint)
 from repro.core.peft import _target_kernels
 from repro.models.config import ArchConfig
 from repro.utils import pytree as pt
@@ -168,6 +171,7 @@ class AdapterStore:
         """Slot for a registered tenant; bumps LRU recency."""
         slot = self._slot_of[tenant]
         self._touch(slot)
+        obs.inc("pool/lookups", kind=self.kind)
         return slot
 
     def rank_of(self, tenant: str) -> int:
@@ -203,6 +207,11 @@ class AdapterStore:
             for key in _SLOT_KEYS:
                 if key in pool:
                     self._set_slot(prefix, key, slot, 0.0)
+        if obs.enabled():
+            obs.inc("pool/evictions", kind=self.kind)
+            obs.set_gauge("pool/occupancy",
+                          len(self._tenant_of) / self.n_slots, kind=self.kind)
+            obs.event("pool_evict", tenant=tenant, slot=slot, pool=self.kind)
 
     # ------------------------------------------------------------------
     # register
@@ -247,6 +256,12 @@ class AdapterStore:
         self._tenant_of[slot] = tenant
         self._slot_ranks[slot] = t_ranks.pop()
         self._touch(slot)
+        if obs.enabled():
+            obs.inc("pool/registers", kind=self.kind)
+            obs.set_gauge("pool/occupancy",
+                          len(self._tenant_of) / self.n_slots, kind=self.kind)
+            obs.event("pool_register", tenant=tenant, slot=slot,
+                      rank=int(self._slot_ranks[slot]), pool=self.kind)
         return slot
 
     def _pad_rank(self, x, axis: int):
@@ -374,9 +389,20 @@ class AdapterStore:
         same pool rank).  Checkpoints written before the slot-rank table
         existed restore every occupied slot at the pool's full rank
         (their pools were never padded).  kind='dora_mag' checkpoints
-        from the pre-raw-delta layout (a ``pool_B_mag`` pool of merged
-        magnitudes) do not restore — the merge is not invertible per
-        slot; re-register the tenants."""
+        from the pre-raw-delta layout (a ``pool_B_mag`` pool of MERGED
+        magnitudes ``B_mag + ΔB_M`` per slot) are migrated best-effort:
+        the shared magnitude is subtracted back out per occupied slot
+        (see ``_load_legacy_b_mag``); the conversion is rejected with a
+        ValueError when it is genuinely non-invertible — the checkpoint's
+        shared ``B_mag`` differs from this store's, or the pool shapes
+        don't match this allocation."""
+        if self.kind == "dora_mag":
+            try:
+                old_paths = checkpoint_leaf_paths(path)
+            except Exception:
+                old_paths = []
+            if any(p.endswith("/pool_B_mag") for p in old_paths):
+                return self._load_legacy_b_mag(path)
         like = self.state_tree()
         like["meta"]["slot_ranks"] = np.full((self.n_slots + 1,), self.rank,
                                              np.int32)
@@ -385,7 +411,10 @@ class AdapterStore:
         for p in self._pools:
             self._pools[p] = {k: jnp.asarray(v) for k, v in
                               tree["pools"][p.replace("/", ".")].items()}
-        meta = tree["meta"]
+        self._restore_meta(tree["meta"])
+        return step
+
+    def _restore_meta(self, meta: dict) -> None:
         ids = np.asarray(meta["tenant_ids"], np.uint8)
         self._last_used = np.asarray(meta["last_used"], np.int64).copy()
         self._counter = int(meta["counter"])
@@ -399,4 +428,71 @@ class AdapterStore:
         for slot in range(self.n_slots + 1):          # empty/null slots: rank 0
             if slot not in self._tenant_of:
                 self._slot_ranks[slot] = 0
+
+    def _load_legacy_b_mag(self, path: str) -> int:
+        """Migration shim: restore a pre-raw-delta kind='dora_mag'
+        checkpoint whose per-slot pool held MERGED magnitudes
+        (``pool_B_mag[slot] = B_mag + ΔB_M``, zero-padded above the
+        tenant's rank) instead of today's raw ``pool_dB_mag``.
+
+        Best-effort inversion: ``ΔB_M = pool_B_mag[slot] − B_mag`` for
+        every occupied slot (empty and null slots reset to zero).  That
+        subtraction is only valid against the shared magnitude the
+        checkpoint was WRITTEN with — when the checkpoint carries its
+        ``bgmv_B_mag`` leaf and it disagrees with this store's shared
+        tree, or the pool shapes don't match this allocation, the merge
+        is genuinely non-invertible here and a ValueError is raised
+        (re-register the tenants instead)."""
+        warnings.warn(
+            f"{path}: legacy pre-raw-delta AdapterStore checkpoint "
+            "(merged pool_B_mag layout) — converting to raw pool_dB_mag "
+            "by subtracting the shared B_mag per occupied slot",
+            stacklevel=3)
+        like = self.state_tree()
+        like["meta"]["slot_ranks"] = np.full((self.n_slots + 1,), self.rank,
+                                             np.int32)
+        for p, pool in self._pools.items():
+            legacy = {k: v for k, v in pool.items() if k != "pool_dB_mag"}
+            legacy["pool_B_mag"] = jnp.zeros_like(pool["pool_dB_mag"])
+            like["pools"][p.replace("/", ".")] = legacy
+        try:
+            # old checkpoints may predate the shared bgmv_* leaves — the
+            # caller's own shared tree is then the only candidate
+            tree, step = restore_checkpoint(
+                path, like,
+                allow_missing=r"^meta/slot_ranks$|/bgmv_")
+        except AssertionError as e:
+            raise ValueError(
+                f"legacy pool_B_mag checkpoint {path} is not convertible "
+                f"into this store: pool shape mismatch {e.args[0]!r} — the "
+                "merge is non-invertible here; re-register the tenants"
+            ) from e
+        self._restore_meta(tree["meta"])
+        occupied = np.zeros((self.n_slots + 1,), bool)
+        for slot in self._tenant_of:
+            occupied[slot] = True
+        for p, pool in self._pools.items():
+            ck = tree["pools"][p.replace("/", ".")]
+            b_mag = np.asarray(pool["bgmv_B_mag"])     # (lead, r) shared
+            ck_b_mag = np.asarray(ck["bgmv_B_mag"])
+            if not np.allclose(ck_b_mag, b_mag, rtol=1e-6, atol=1e-7):
+                raise ValueError(
+                    f"legacy pool_B_mag checkpoint {path} was written "
+                    f"against a different shared B_mag at {p!r} — the merge "
+                    "is non-invertible with this store's shared tree; "
+                    "re-register the tenants")
+            merged = np.asarray(ck["pool_B_mag"])       # (lead, L, r)
+            db = merged - ck_b_mag[..., None, :]
+            # empty/null slots and rank rows above each slot's own rank
+            # carry no delta (the old layout zero-padded them)
+            occ = occupied.reshape((-1, 1))
+            rows = np.arange(self.rank) < self._slot_ranks[:, None]
+            db = db * (occ & rows)
+            self._pools[p] = {k: jnp.asarray(v) for k, v in ck.items()
+                              if k != "pool_B_mag"}
+            self._pools[p]["pool_dB_mag"] = jnp.asarray(db, jnp.float32)
+        if obs.enabled():
+            obs.event("ckpt_migrate", path=str(path),
+                      layout="pool_B_mag->pool_dB_mag",
+                      tenants=len(self._tenant_of))
         return step

@@ -24,12 +24,14 @@ reference generator bit-for-bit in float32.
 """
 from __future__ import annotations
 
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import model as M
 from repro.models.config import ArchConfig
 from repro.serve.adapter_store import AdapterStore
@@ -104,8 +106,13 @@ class ServeEngine:
                 body, (tok, cache, pos), length=decode_chunk)
             return tok, cache, pos, toks                # toks (chunk, R)
 
-        self._prefill = jax.jit(prefill_fn, donate_argnums=(1,))
-        self._chunk = jax.jit(chunk_fn, donate_argnums=(1,))
+        # obs.annotate names the two jitted programs in profiler traces
+        # (host wrapper only — the compiled computations are untouched)
+        self._prefill = obs.annotate("serve/prefill")(
+            jax.jit(prefill_fn, donate_argnums=(1,)))
+        self._chunk = obs.annotate("serve/decode_chunk")(
+            jax.jit(chunk_fn, donate_argnums=(1,)))
+        self._compiled: set[str] = set()   # compile-event bookkeeping
 
     # ------------------------------------------------------------------
 
@@ -116,6 +123,9 @@ class ServeEngine:
             raise KeyError(f"tenant {tenant!r} not registered in the store")
         rid = self.batcher.submit(tenant or "", tokens, n_new)
         self._tenant_of_rid[rid] = tenant
+        if obs.enabled():
+            obs.inc("serve/requests", tenant=tenant or "<none>")
+            obs.set_gauge("serve/queue_depth", self.batcher.pending)
         return rid
 
     def run(self) -> dict[int, np.ndarray]:
@@ -128,6 +138,13 @@ class ServeEngine:
         params = pt.merge_trees(self.base, self.store.overlay())
         cache = M.init_cache(cfg, R, self.max_len)
 
+        # telemetry is sampled once per run; everything below is behind
+        # ``if enabled`` so the disabled path adds no clock reads and no
+        # device syncs beyond the np.asarray pulls it always did
+        enabled = obs.enabled()
+        t_run0 = time.perf_counter() if enabled else 0.0
+        n_chunks = n_prefills = 0
+
         active = np.zeros((R,), bool)
         pos = jnp.zeros((R,), jnp.int32)
         tok = jnp.zeros((R,), jnp.int32)
@@ -137,17 +154,42 @@ class ServeEngine:
         outputs: dict[int, list[int]] = {}
         results: dict[int, np.ndarray] = {}
 
+        def gauges():
+            # batch composition only changes at admit/retire — sampling
+            # the occupancy gauges there (not per chunk) keeps the
+            # per-chunk telemetry down to the two timing observes
+            obs.set_gauge("serve/queue_depth", self.batcher.pending)
+            obs.set_gauge("serve/slot_occupancy", float(active.mean()))
+            obs.set_gauge(
+                "serve/null_slot_fraction",
+                float((row_slots == self.store.null_slot).mean()))
+
         def retire(row):
             rid = int(rid_of_row[row])
             results[rid] = np.asarray(outputs.pop(rid), np.int32)
+            if enabled:
+                tenant = self._tenant_of_rid.get(rid)
+                obs.inc("serve/completed", tenant=tenant or "<none>")
             self._tenant_of_rid.pop(rid, None)      # don't leak rid→tenant
             active[row] = False
             row_slots[row] = self.store.null_slot
+            if enabled:
+                gauges()
 
         while self.batcher.pending or active.any():
             free = [r for r in range(R) if not active[r]]
             admitted = self.batcher.admit(free)
             if admitted:
+                if enabled:
+                    now = time.perf_counter()
+                    for row, req in admitted:
+                        wait = now - req.submit_ts
+                        obs.observe("serve/admission_wait_seconds", wait,
+                                    tenant=req.tenant or "<none>")
+                        obs.event("serve_admit", rid=req.rid,
+                                  tenant=req.tenant or None, row=row,
+                                  wait=round(wait, 6),
+                                  queue_depth=self.batcher.pending)
                 slot_of_rid = {
                     req.rid: (self.store.null_slot
                               if self._tenant_of_rid[req.rid] is None else
@@ -158,11 +200,21 @@ class ServeEngine:
                 admit_mask = np.zeros((R,), bool)
                 for row, _ in admitted:
                     admit_mask[row] = True
+                t0 = time.perf_counter() if enabled else 0.0
                 tok0, cache = self._prefill(
                     params, cache, jnp.asarray(tokens),
                     jnp.asarray(lens), jnp.asarray(row_slots),
                     jnp.asarray(admit_mask))
                 tok0_h = np.asarray(tok0)
+                if enabled:
+                    dt = time.perf_counter() - t0
+                    if "prefill" not in self._compiled:
+                        self._compiled.add("prefill")
+                        obs.event("compile", program="serve/prefill",
+                                  wall=round(dt, 6))
+                    obs.observe("span_seconds", dt, span="serve/prefill")
+                    n_prefills += 1
+                    gauges()
                 tok = jnp.where(jnp.asarray(admit_mask), tok0, tok)
                 new_pos = np.asarray(pos).copy()
                 for row, req in admitted:
@@ -176,10 +228,23 @@ class ServeEngine:
                 pos = jnp.asarray(new_pos)
 
             if active.any():
+                n_active = int(active.sum())
+                t0 = time.perf_counter() if enabled else 0.0
                 tok, cache, pos, toks = self._chunk(
                     params, cache, tok, pos, jnp.asarray(row_slots),
                     jnp.asarray(active))
                 toks_h = np.asarray(toks)               # (chunk, R)
+                if enabled:
+                    dt = time.perf_counter() - t0
+                    if "decode_chunk" not in self._compiled:
+                        self._compiled.add("decode_chunk")
+                        obs.event("compile", program="serve/decode_chunk",
+                                  wall=round(dt, 6))
+                    produced = n_active * self.decode_chunk
+                    obs.observe("span_seconds", dt, span="serve/decode_chunk")
+                    obs.observe("serve/chunk_tokens_per_s",
+                                produced / max(dt, 1e-9))
+                    n_chunks += 1
                 for row in range(R):
                     if not active[row]:
                         continue
@@ -189,6 +254,15 @@ class ServeEngine:
                     remaining[row] -= take
                     if remaining[row] == 0:
                         retire(row)
+        if enabled:
+            wall = time.perf_counter() - t_run0
+            total_toks = int(sum(len(v) for v in results.values()))
+            gauges()
+            obs.event("serve_run", requests=len(results), tokens=total_toks,
+                      wall=round(wall, 6),
+                      tokens_per_s=round(total_toks / max(wall, 1e-9), 2),
+                      chunks=n_chunks, prefills=n_prefills,
+                      rows=R, decode_chunk=self.decode_chunk)
         return results
 
     def generate(self, requests, n_new: int = 16) -> list[np.ndarray]:

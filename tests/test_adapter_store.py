@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.checkpoint import save_checkpoint
 from repro.core import peft
 from repro.models import model as M
 from repro.models.config import ArchConfig
@@ -225,3 +226,82 @@ def test_checkpoint_roundtrip(base, shared, tmp_path):
     fresh.register("carol", _mag_overlay(shared, 3))
     fresh.register("dave", _mag_overlay(shared, 4))     # evicts bob (LRU)
     assert "bob" not in fresh and "alice" in fresh
+
+
+def _legacy_b_mag_checkpoint(store, path, step=3, *, b_mag_shift=0.0):
+    """Synthesize a pre-raw-delta dora_mag checkpoint from ``store``:
+    each pool's raw ``pool_dB_mag`` is replaced by the old MERGED layout
+    ``pool_B_mag[slot] = B_mag + ΔB_M`` on occupied slots' rank rows and
+    zero elsewhere.  ``b_mag_shift`` perturbs the checkpoint's shared
+    magnitude (consistently in both leaves) to fake a checkpoint written
+    against a different shared tree."""
+    st = store.state_tree()
+    occupied = np.zeros((store.n_slots + 1,), bool)
+    for slot in store._tenant_of:
+        occupied[slot] = True
+    mask = (occupied.reshape(-1, 1)
+            & (np.arange(store.rank) < store._slot_ranks[:, None]))
+    for p, pool in st["pools"].items():
+        pool = dict(pool)
+        db = np.asarray(pool.pop("pool_dB_mag"))
+        b_mag = np.asarray(pool["bgmv_B_mag"]) + b_mag_shift
+        pool["bgmv_B_mag"] = jnp.asarray(b_mag)
+        pool["pool_B_mag"] = jnp.asarray((db + b_mag[..., None, :]) * mask,
+                                         jnp.float32)
+        st["pools"][p] = pool
+    save_checkpoint(path, st, step=step)
+
+
+def test_legacy_pool_b_mag_checkpoint_migrates(base, shared, tmp_path):
+    """A pre-raw-delta checkpoint (merged pool_B_mag layout) loads with a
+    warning and converts back to raw deltas matching the original store
+    leaf-for-leaf."""
+    path = str(tmp_path / "legacy.msgpack")
+    store = AdapterStore(base, CFG, n_slots=3, kind="dora_mag", shared=shared)
+    store.register("alice", _mag_overlay(shared, 1))
+    store.register("bob", _mag_overlay(shared, 2))
+    _legacy_b_mag_checkpoint(store, path, step=5)
+
+    fresh = AdapterStore(base, CFG, n_slots=3, kind="dora_mag", shared=shared)
+    with pytest.warns(UserWarning, match="pool_B_mag"):
+        assert fresh.load(path) == 5
+    assert fresh.tenants == ["alice", "bob"]
+    assert fresh.rank_of("alice") == CFG.lora_rank
+    for (pa, la), (pb, lb) in zip(
+            zip(pt.tree_paths(store.overlay()),
+                jax.tree.leaves(store.overlay())),
+            zip(pt.tree_paths(fresh.overlay()),
+                jax.tree.leaves(fresh.overlay()))):
+        assert pa == pb
+        # (db + b_mag) - b_mag re-derivation costs one f32 rounding
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_legacy_migration_rejects_foreign_b_mag(base, shared, tmp_path):
+    """When the legacy checkpoint's shared B_mag disagrees with the
+    store's, the merge is non-invertible and load must refuse rather
+    than silently corrupt the deltas."""
+    path = str(tmp_path / "legacy-foreign.msgpack")
+    store = AdapterStore(base, CFG, n_slots=2, kind="dora_mag", shared=shared)
+    store.register("alice", _mag_overlay(shared, 1))
+    _legacy_b_mag_checkpoint(store, path, b_mag_shift=0.5)
+
+    fresh = AdapterStore(base, CFG, n_slots=2, kind="dora_mag", shared=shared)
+    with pytest.warns(UserWarning, match="pool_B_mag"), \
+            pytest.raises(ValueError, match="different shared B_mag"):
+        fresh.load(path)
+
+
+def test_legacy_migration_rejects_shape_mismatch(base, shared, tmp_path):
+    """A legacy checkpoint for a different slot allocation cannot be
+    converted into this store."""
+    path = str(tmp_path / "legacy-shape.msgpack")
+    store = AdapterStore(base, CFG, n_slots=3, kind="dora_mag", shared=shared)
+    store.register("alice", _mag_overlay(shared, 1))
+    _legacy_b_mag_checkpoint(store, path)
+
+    fresh = AdapterStore(base, CFG, n_slots=5, kind="dora_mag", shared=shared)
+    with pytest.warns(UserWarning, match="pool_B_mag"), \
+            pytest.raises(ValueError, match="not convertible"):
+        fresh.load(path)

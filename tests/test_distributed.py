@@ -282,6 +282,63 @@ run_dropout_case("lora_fedavg_q8")
 
 
 @pytest.mark.slow
+def test_pipeline_parity_with_dropout():
+    """cfg.lora_dropout > 0 through ALL THREE pipeline stages: stage 1
+    takes ``rng`` in round_step, stages 2/3 take their own rng (the
+    simulator's ``global_stage`` / ``personalize`` key chains —
+    ``fold_in(rng, step)`` unsplit and ``split(fold_in(rng, 31+step),
+    C)[client]`` respectively), so the full-pipeline parity gate extends
+    to dropout-on training.  A stage-2 rng also forces the replicated
+    stage-2 path (sharded rows would redraw different masks)."""
+    out = _run(PARITY_HARNESS + r"""
+import dataclasses as _dc
+cfg = _dc.replace(cfg, lora_dropout=0.3)
+
+
+def run_pipeline_dropout_case(name):
+    from repro.launch.train import make_fed_pipeline_step
+    method = get_method(name)
+    hp = FedHyper(method=name, n_clients=C, local_steps=T, batch=B,
+                  seq_len=S, lr=1e-2, server_lr=5e-3, global_steps=TG,
+                  personal_steps=TP, lam=1e-2)
+    sim = FedSim(cfg, hp)
+    st = TrainSettings(lr=hp.lr, micro_batches=1, clip=hp.clip, remat=False,
+                       method=name, local_steps=T, server_lr=hp.server_lr,
+                       global_steps=TG, personal_steps=TP, lam=hp.lam)
+    pipe = make_fed_pipeline_step(cfg, mesh, st)
+    na, no = sim.client_adapters, sim.opt_state
+    step0 = jnp.zeros((), jnp.int32)
+    anchor = None
+    for r in range(ROUNDS):
+        cb, sb = make_batches(), make_server_batches(TG)
+        pb = (make_batches() + make_batches())[:TP]
+        na, no, agg_p, met = pipe.round_step(
+            sim.base, na, no, step0, flat(cb, 1), anchor,
+            jax.random.PRNGKey(r))
+        anchor = na if method.prox else None
+        agg_p, na, _ = pipe.global_step(sim.base, agg_p, na, flat(sb, 0),
+                                        jax.random.PRNGKey(100 + r))
+        na, _ = pipe.personal_step(sim.base, na, flat(pb, 1),
+                                   jax.random.PRNGKey(200 + r))
+
+        sim.local_round(cb, jax.random.PRNGKey(r))
+        agg_s = sim.aggregate()
+        agg_s = sim.global_stage(agg_s, sb, jax.random.PRNGKey(100 + r))
+        sim.personalize(pb, jax.random.PRNGKey(200 + r))
+        step0 = step0 + T
+        assert np.isfinite(float(met["ce"])), (name, r)
+    compare(name, na, sim.client_adapters)
+    compare(name, agg_p, agg_s)
+    print("PIPE-DROPOUT-OK", name)
+
+
+run_pipeline_dropout_case("lora")
+run_pipeline_dropout_case("fedlora_opt")
+""", timeout=1800)
+    assert out.count("PIPE-DROPOUT-OK") == 2, out
+
+
+@pytest.mark.slow
 def test_pipeline_stage2_sharded_server_batch():
     """When the replicated server batch divides evenly over the client
     axis, stage 2 shards rows across clients and recovers the full-batch

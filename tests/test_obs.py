@@ -1,0 +1,312 @@
+"""Telemetry layer (repro.obs): registry/event-log unit behaviour, the
+zero-cost-when-disabled contract — every engine's numerics are
+bit-identical with the sink on and off, and the ``TrainSettings.telemetry``
+flag changes only the metric leaves, never the adapters — plus the
+JSONL → ``telemetry_section`` report round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import peft
+from repro.fed.simulate import FedHyper, FedSim
+from repro.launch.report import telemetry_section
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.obs import EventLog, MetricsRegistry, NullRegistry, read_events
+from repro.serve import AdapterStore, ServeEngine
+from repro.utils import pytree as pt
+
+CFG = ArchConfig(name="obs-t", family="dense", n_layers=2, d_model=32,
+                 n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                 dtype="float32", lora_rank=4, lora_dropout=0.0)
+
+
+@pytest.fixture(autouse=True)
+def _null_sink():
+    """Every test starts and ends with the process-global null sink —
+    the engines read it at call time, so leakage across tests would make
+    the invariance assertions meaningless."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_labels_key_order_irrelevant():
+    reg = MetricsRegistry()
+    reg.counter("fed/comm_bytes").inc(100, method="lora", comm="psum")
+    reg.counter("fed/comm_bytes").inc(20, comm="psum", method="lora")
+    reg.counter("fed/comm_bytes").inc(7, method="lora_gather", comm="gather")
+    c = reg.counter("fed/comm_bytes")
+    assert c.value(method="lora", comm="psum") == 120
+    assert c.value(comm="gather", method="lora_gather") == 7
+    snap = c.snapshot()
+    assert len(snap) == 2 and all(set(s) == {"labels", "value"} for s in snap)
+
+
+def test_gauge_last_write_wins():
+    reg = MetricsRegistry()
+    g = reg.gauge("serve/queue_depth")
+    g.set(3)
+    g.set(1)
+    assert g.value() == 1.0
+    assert g.value(tenant="x") == 0.0     # unset series reads 0
+
+
+def test_histogram_stats_and_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("span_seconds")
+    for v in (0.002, 0.02, 0.02, 3.0):
+        h.observe(v, span="fed/round")
+    (s,) = h.snapshot()
+    assert s["labels"] == {"span": "fed/round"}
+    assert s["count"] == 4 and s["min"] == 0.002 and s["max"] == 3.0
+    np.testing.assert_allclose(s["sum"], 3.042)
+    np.testing.assert_allclose(s["mean"], 3.042 / 4)
+    # log-spaced default bounds: 0.002→le_0.0025, 0.02→le_0.025 (×2), 3→le_5
+    assert s["buckets"] == {"le_0.0025": 1, "le_0.025": 2, "le_5": 1}
+
+
+def test_registry_snapshot_schema_and_reset():
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.gauge("b").set(2.0)
+    reg.histogram("c").observe(0.5)
+    snap = reg.snapshot()
+    assert set(snap) == {"counters", "gauges", "histograms"}
+    assert [s["value"] for s in snap["counters"]["a"]] == [1.0]
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+def test_null_registry_absorbs_everything():
+    reg = NullRegistry()
+    reg.counter("x").inc(5, k="v")
+    reg.gauge("x").set(1.0)
+    reg.histogram("x").observe(2.0)
+    assert reg.counter("x").value() == 0.0
+    assert reg.histogram("x").series() is None
+    assert reg.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+def test_enable_disable_lifecycle(tmp_path):
+    assert not obs.enabled()
+    obs.inc("dropped")                    # null sink: silently absorbed
+    tel = obs.enable(str(tmp_path / "t.jsonl"))
+    assert obs.enabled() and obs.active() is tel
+    obs.inc("kept", method="m")
+    obs.event("ping", n=1)
+    snap = obs.emit_snapshot()
+    assert snap["counters"]["kept"][0]["value"] == 1.0
+    assert "dropped" not in snap["counters"]
+    obs.disable()
+    assert not obs.enabled()
+    kinds = [e["kind"] for e in read_events(str(tmp_path / "t.jsonl"))]
+    assert kinds == ["ping", "metrics_snapshot"]
+
+
+# ---------------------------------------------------------------------------
+# event log
+# ---------------------------------------------------------------------------
+
+def test_event_log_roundtrip_and_kind_filter(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    log = EventLog(path)
+    log.emit("fed_round", step=0, ce=[1.5, 2.0])
+    log.emit("serve_run", tokens=np.int64(64))   # numpy coerced to JSON
+    log.close()
+    evs = read_events(path)
+    assert [e["kind"] for e in evs] == ["fed_round", "serve_run"]
+    assert evs[0]["ce"] == [1.5, 2.0] and "ts" in evs[0]
+    assert evs[1]["tokens"] == 64
+    assert [e["kind"] for e in read_events(path, kind="serve_run")] \
+        == ["serve_run"]
+
+
+def test_event_log_rotation_keeps_oldest_first(tmp_path):
+    path = str(tmp_path / "rot.jsonl")
+    log = EventLog(path, max_bytes=200, keep=2)
+    for i in range(30):
+        log.emit("tick", i=i)
+    log.close()
+    import os
+    assert os.path.exists(path + ".1")           # rotation happened
+    assert not os.path.exists(path + ".3")       # keep=2 bound respected
+    seen = [e["i"] for e in read_events(path)]
+    assert seen == sorted(seen)                  # segments rejoined in order
+    assert seen[-1] == 29                        # newest survives
+    assert len(seen) < 30                        # oldest aged out past keep
+
+
+def test_event_log_appends_across_enables(tmp_path):
+    path = str(tmp_path / "app.jsonl")
+    obs.enable(path)
+    obs.event("first")
+    obs.disable()
+    obs.enable(path)
+    obs.event("second")
+    obs.disable()
+    assert [e["kind"] for e in read_events(path)] == ["first", "second"]
+
+
+# ---------------------------------------------------------------------------
+# zero-cost-when-disabled: engine numerics identical with the sink on/off
+# ---------------------------------------------------------------------------
+
+def _fed_batches(C, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"tokens": jnp.asarray(rng.integers(5, 64, size=(C, 2, 16)),
+                                   jnp.int32),
+             "loss_mask": jnp.ones((C, 2, 16), jnp.float32)}
+            for _ in range(n)]
+
+
+def _run_sim_rounds():
+    hp = FedHyper(method="fedlora_opt", n_clients=2, local_steps=2, lr=1e-2)
+    sim = FedSim(CFG, hp)
+    for r in range(2):
+        sim.run_round(_fed_batches(2, 2, seed=r), jax.random.PRNGKey(r))
+    return {p: np.asarray(v) for p, v in
+            zip(pt.tree_paths(sim.client_adapters),
+                jax.tree.leaves(sim.client_adapters))}
+
+
+def test_fed_sim_invariant_under_telemetry(tmp_path):
+    ref = _run_sim_rounds()
+    obs.enable(str(tmp_path / "fed.jsonl"))
+    instrumented = _run_sim_rounds()
+    obs.disable()
+    assert set(ref) == set(instrumented)
+    for p in ref:
+        np.testing.assert_array_equal(ref[p], instrumented[p], err_msg=p)
+    evs = read_events(str(tmp_path / "fed.jsonl"), kind="fed_round")
+    assert len(evs) == 2 and evs[0]["clients"] == 2
+    assert set(evs[0]["wall"]) == {"scan", "aggregate", "rebroadcast",
+                                   "total"}
+
+
+def _run_serve(base, shared):
+    store = AdapterStore(base, CFG, n_slots=2, kind="dora_mag", shared=shared)
+    for t in range(2):
+        ov = pt.tree_map_with_path(
+            lambda p, x: x + 0.1 * (t + 1) if p.endswith("dB_mag") else x,
+            shared)
+        store.register(f"t{t}", pt.filter_tree(
+            ov, lambda p: p.endswith("dB_mag")))
+    eng = ServeEngine(base, CFG, store, max_rows=2, max_prompt_len=8,
+                      max_len=24, decode_chunk=4)
+    rng = np.random.default_rng(7)
+    prompts = np.asarray(rng.integers(5, 64, size=(3, 8)), np.int32)
+    outs = eng.generate([("t0", prompts[0]), ("t1", prompts[1]),
+                         ("t0", prompts[2])], n_new=6)
+    return [np.asarray(o) for o in outs]
+
+
+def test_serve_engine_invariant_under_telemetry(tmp_path):
+    base = M.init_params(jax.random.PRNGKey(0), CFG)
+    shared = pt.tree_map_with_path(
+        lambda p, x: x + 0.25 if p.endswith("B_mag") else x,
+        peft.add_lora(base, CFG, jax.random.PRNGKey(1), decomposed=True))
+    ref = _run_serve(base, shared)
+    obs.enable(str(tmp_path / "serve.jsonl"))
+    instrumented = _run_serve(base, shared)
+    snap = obs.emit_snapshot()
+    obs.disable()
+    for a, b in zip(ref, instrumented):
+        np.testing.assert_array_equal(a, b)
+    evs = read_events(str(tmp_path / "serve.jsonl"))
+    kinds = {e["kind"] for e in evs}
+    assert {"pool_register", "serve_admit", "compile", "serve_run"} <= kinds
+    (run,) = [e for e in evs if e["kind"] == "serve_run"]
+    assert run["requests"] == 3 and run["tokens"] == 3 * 6
+    hist = {s["labels"]["span"]: s
+            for s in snap["histograms"]["span_seconds"]}
+    assert hist["serve/prefill"]["count"] >= 1
+    assert hist["serve/decode_chunk"]["count"] >= 1
+
+
+def test_train_step_telemetry_flag_changes_only_metrics():
+    """``TrainSettings.telemetry=True`` must add the replicated
+    per-client metric leaves and nothing else — same adapters, and the
+    extra leaves agree with the always-on scalar metrics."""
+    from repro.launch.mesh import make_client_mesh
+    from repro.launch.train import TrainSettings, make_fed_train_step
+
+    mesh = make_client_mesh(1)
+    hp = FedHyper(method="fedlora_opt", n_clients=1, local_steps=2, lr=1e-2)
+    sim = FedSim(CFG, hp)
+    batches = _fed_batches(1, 2, seed=3)
+    big = {k: jnp.concatenate([b[k] for b in batches], axis=1)
+           for k in batches[0]}
+    step0 = jnp.zeros((), jnp.int32)
+
+    outs = {}
+    for tele in (False, True):
+        st = TrainSettings(lr=hp.lr, micro_batches=1, clip=hp.clip,
+                           remat=False, method="fedlora_opt", local_steps=2,
+                           telemetry=tele)
+        step_fn, opt_init = make_fed_train_step(CFG, mesh, st)
+        na, no, met = step_fn(sim.base, sim.client_adapters,
+                              opt_init(sim.client_adapters), step0, big)
+        outs[tele] = (na, met)
+
+    (na0, met0), (na1, met1) = outs[False], outs[True]
+    for p, a, b in zip(pt.tree_paths(na0), jax.tree.leaves(na0),
+                       jax.tree.leaves(na1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=p)
+    extra = set(met1) - set(met0)
+    assert extra == {"client_ce", "client_grad_norm", "client_drift"}
+    np.testing.assert_allclose(float(np.asarray(met1["client_ce"]).mean()),
+                               float(met1["ce"]), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(np.asarray(met1["client_grad_norm"]).mean()),
+        float(met1["grad_norm"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# JSONL → report round-trip
+# ---------------------------------------------------------------------------
+
+def test_telemetry_section_renders_jsonl(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    obs.enable(path)
+    obs.event("fed_round", engine="pipeline", method="fedlora_opt", step=2,
+              clients=4, ce=[1.0, 2.0, 3.0, 4.0], grad_norm=[0.5] * 4,
+              drift=[0.25] * 4, loss_spread=3.0, comm_bytes=4096,
+              comm_class="psum",
+              wall={"round": 0.5, "global": 0.25, "personal": 0.125,
+                    "total": 0.875})
+    obs.event("fed_stage", engine="pipeline", stage="global",
+              method="fedlora_opt", ce=1.25, wall=0.25)
+    obs.event("serve_admit", rid=0, tenant="t0", row=1, wait=0.004,
+              queue_depth=2)
+    obs.event("serve_run", requests=3, tokens=18, wall=0.2, tokens_per_s=90.0,
+              chunks=2, prefills=1, rows=2, decode_chunk=4)
+    obs.inc("pool/lookups", 3, kind="dora_mag")
+    obs.inc("pool/registers", 1, kind="dora_mag")
+    obs.emit_snapshot()
+    obs.disable()
+
+    text = telemetry_section(path)
+    assert "## §Telemetry" in text
+    assert "### Federated rounds" in text
+    # ce mean 2.5, spread 3.0, comm bytes formatted with separators
+    assert "| pipeline | fedlora_opt | 2 | 4 | 2.5000 | 3.0000 |" in text
+    assert "4,096 (psum)" in text
+    assert "### Pipeline stages" in text and "| global |" in text
+    assert "### Serving" in text
+    assert "| 3 | 18 | 0.200 | 90.0 | 2 | 1 | 2 |" in text
+    assert "admission wait mean 4.00 ms" in text
+    assert "pool hit-rate 75.00% (3 lookups / 1 registers)" in text
+    # list-of-dicts input renders identically to the path input
+    assert telemetry_section(read_events(path)) == text
+
+
+def test_telemetry_section_empty():
+    assert "_no telemetry events_" in telemetry_section([])
