@@ -1,4 +1,4 @@
-.PHONY: test test-serve test-het test-dist test-quant test-obs test-fast perf serve-bench bench-smoke
+.PHONY: test test-serve test-het test-dist test-quant test-obs test-scale test-fast perf serve-bench bench-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -28,6 +28,11 @@ test-quant:
 test-obs:
 	bash scripts/ci.sh --obs
 
+# cross-device-scale federation (client bank, cohort sampling, fault
+# injection + straggler billing, faulted/async engine-vs-oracle parity)
+test-scale:
+	bash scripts/ci.sh --scale
+
 # tier-1 minus the slow sweeps and the multi-device dist tests
 test-fast:
 	bash scripts/ci.sh --fast
@@ -45,5 +50,5 @@ serve-bench:
 # entry also leaves its telemetry JSONL artifact at
 # experiments/bench/obs_telemetry.jsonl
 bench-smoke:
-	PYTHONPATH=src python -m benchmarks.run --only perf,het,dist,pipeline,quant,obs --fresh
+	PYTHONPATH=src python -m benchmarks.run --only perf,het,cohort,dist,pipeline,quant,obs --fresh
 	PYTHONPATH=src python scripts/check_bench.py

@@ -164,6 +164,65 @@ def run_het_round(log=print, n_clients: int = 6, local_steps: int = 5,
              "ratio": ratio}], ratio
 
 
+def run_cohort(log=print, n_clients: int = 4, local_steps: int = 5,
+               n_total: int = 16, reps: int = 6):
+    """Sampled-cohort round (ClientBank gather → faulted round →
+    masked scatter, stragglers buffered host-side) vs the bare
+    full-participation round at the same cohort size.  Everything the
+    cross-device layer adds is host work plus adapter-sized elementwise
+    fault transforms, so the sampled round must stay within ~1.2× of
+    the full-fleet round — the acceptance bar for fleet scale-out not
+    taxing the jitted round."""
+    from repro.fed import CohortSim, FaultPlan
+    from repro.fed.simulate import FedHyper, FedSim
+
+    hp = FedHyper(method="fedlora_opt", n_clients=n_clients,
+                  local_steps=local_steps, batch=32, seq_len=64)
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(
+                    rng.integers(5, FED_CFG.vocab_size,
+                                 size=(n_clients, hp.batch, hp.seq_len)),
+                    jnp.int32),
+                "loss_mask": jnp.ones((n_clients, hp.batch, hp.seq_len),
+                                      jnp.float32)}
+               for _ in range(local_steps)]
+    key = jax.random.PRNGKey(0)
+
+    sim_full = FedSim(FED_CFG, hp)
+    cs = CohortSim(FedSim(FED_CFG, hp), n_total=n_total,
+                   faults=FaultPlan(dropout_rate=0.125,
+                                    straggler_rate=0.125, seed=0), seed=0)
+
+    def one_full():
+        t0 = time.perf_counter()
+        sim_full.run_round(batches, key)
+        jax.block_until_ready(sim_full.client_adapters)
+        return time.perf_counter() - t0
+
+    def one_cohort():
+        t0 = time.perf_counter()
+        cs.run_round(batches, key)
+        jax.block_until_ready(cs.sim.client_adapters)
+        return time.perf_counter() - t0
+
+    one_full(), one_cohort()                    # compile + warm (both
+    # programs: the faulted round is a distinct jitted specialization)
+    ts_full, ts_coh = [], []
+    for _ in range(reps):                        # interleave (box noise)
+        ts_full.append(one_full())
+        ts_coh.append(one_cohort())
+    us_full, us_coh = min(ts_full) * 1e6, min(ts_coh) * 1e6
+    ratio = us_coh / us_full
+    log(f"[perf] fed_round/full_fleet     {us_full:9.0f}us  "
+        f"({n_clients} clients x {local_steps} steps)")
+    log(f"[perf] fed_round/sampled_cohort {us_coh:9.0f}us  "
+        f"(cohort {n_clients} of {n_total}, faults on) "
+        f"ratio={ratio:.2f}x (bar: 1.2x)")
+    return [{"arch": "fed_round/full_fleet", "us": us_full, "ratio": 1.0},
+            {"arch": "fed_round/sampled_cohort", "us": us_coh,
+             "ratio": ratio}], ratio
+
+
 def run_dist_round(log=print, local_steps: int = 5, reps: int = 6):
     """Production shard_map collective round (launch/train) vs the
     single-process FedSim engine round at matched settings, on a
@@ -495,6 +554,7 @@ def main():
     rows = run()
     fed_rows, speedup = run_fed_round()
     het_rows, het_ratio = run_het_round()
+    cohort_rows, cohort_ratio = run_cohort()
     dist_rows, dist_ratio = run_dist_round()
     pipe_rows, pipe_ratio = run_pipeline()
     quant_rows, quant_ratio = run_quant()
@@ -504,16 +564,19 @@ def main():
         print(f"perf/{r['arch']}/decode,{r['dec_us']:.0f},smoke_cpu")
     for r in fed_rows:
         print(f"perf/{r['arch']},{r['us']:.0f},smoke_cpu")
-    for r in het_rows + dist_rows + pipe_rows + quant_rows:
+    for r in het_rows + cohort_rows + dist_rows + pipe_rows + quant_rows:
         print(f"perf/{r['arch']},{r['us']:.0f},smoke_cpu")
     # ratios, not timings — kept out of the us_per_call column
     print(f"# fed_round speedup (per_step / scan): {speedup:.2f}x")
     print(f"# het_round overhead (het_masked / uniform): {het_ratio:.2f}x")
+    print(f"# cohort_round overhead (sampled_cohort / full_fleet): "
+          f"{cohort_ratio:.2f}x")
     print(f"# dist_round overhead (shardmap / engine): {dist_ratio:.2f}x")
     print(f"# pipeline overhead (shardmap / engine): {pipe_ratio:.2f}x")
     print(f"# quant decode byte ratio (f32 / int8, analytic): "
           f"{quant_ratio:.2f}x")
-    return rows + fed_rows + het_rows + dist_rows + pipe_rows + quant_rows
+    return (rows + fed_rows + het_rows + cohort_rows + dist_rows
+            + pipe_rows + quant_rows)
 
 
 if __name__ == "__main__":

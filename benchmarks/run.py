@@ -17,8 +17,8 @@ import time
 
 from repro.obs import MetricsRegistry
 
-ALL = ("table1", "table2", "fig1", "fig3", "perf", "het", "dist",
-       "pipeline", "quant", "serve", "obs", "roofline")
+ALL = ("table1", "table2", "fig1", "fig3", "perf", "het", "cohort",
+       "dist", "pipeline", "quant", "serve", "obs", "roofline")
 
 
 def main():
@@ -96,6 +96,13 @@ def main():
         for r in rows:
             record(f"perf/{r['arch']}", r['us'],
                    f"ratio_vs_uniform={r['ratio']:.2f}")
+    if "cohort" in which:
+        from benchmarks import perf_micro
+        rows = cached("cohort", lambda: perf_micro.run_cohort()[0])
+        results["cohort"] = rows
+        for r in rows:
+            record(f"perf/{r['arch']}", r['us'],
+                   f"ratio_vs_full={r['ratio']:.2f}")
     if "dist" in which:
         from benchmarks import perf_micro
         rows = cached("dist", lambda: perf_micro.run_dist_round()[0])

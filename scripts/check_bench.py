@@ -2,8 +2,9 @@
 """CI benchmark smoke gate.
 
 Reads the JSON the benchmark harness wrote (``python -m benchmarks.run
---only perf,het,dist,pipeline,quant --fresh`` → experiments/bench/) and
-fails if a gated ratio regressed past its checked-in bar:
+--only perf,het,cohort,dist,pipeline,quant,obs --fresh`` →
+experiments/bench/) and fails if a gated ratio regressed past its
+checked-in bar:
 
   * ``baselines/het_round.json`` — the masked mixed-rank round must stay
     within ``max_ratio`` of the uniform round (PR-3 trajectory);
@@ -14,7 +15,13 @@ fails if a gated ratio regressed past its checked-in bar:
     sink) het round and serve loop must stay within ``max_ratio`` of
     the disabled-sink run (PR-7 trajectory; see docs/observability.md —
     the jitted programs are byte-identical, so anything past the bar is
-    host-side leakage into the hot loop).
+    host-side leakage into the hot loop);
+  * ``baselines/cohort_round.json`` — the sampled-cohort round
+    (ClientBank gather/scatter + fault transforms + straggler
+    buffering) must stay within ``max_ratio`` of the bare
+    full-participation round at equal cohort size (PR-8 trajectory;
+    see docs/distributed_training.md — fleet scale-out is host work,
+    not a second jitted program).
 
 Exit status is the contract: 0 = within the bar, 1 = regression or
 missing results.  The CI lane uploads experiments/bench/ as an artifact
@@ -38,7 +45,8 @@ def _load(name: str, results: str):
     if not os.path.exists(path):
         print(f"[check_bench] FAIL: no benchmark results at {path} — "
               "run `make bench-smoke` (= `python -m benchmarks.run --only "
-              "perf,het,dist,pipeline,quant --fresh` + this check) first")
+              "perf,het,cohort,dist,pipeline,quant,obs --fresh` + this "
+              "check) first")
         return base, None
     with open(path) as f:
         return base, json.load(f)
@@ -115,10 +123,35 @@ def check_obs() -> bool:
     return ok
 
 
+def check_cohort() -> bool:
+    base, rows = _load("cohort_round.json", "cohort.json")
+    if rows is None:
+        return False
+    coh = [r for r in rows if r.get("arch") == "fed_round/sampled_cohort"]
+    if not coh:
+        print("[check_bench] FAIL: no fed_round/sampled_cohort row in "
+              "cohort.json")
+        return False
+    ratio = float(coh[0]["ratio"])
+    bar = float(base["max_ratio"])
+    recorded = base["recorded"]
+    print(f"[check_bench] cohort-round ratio {ratio:.2f}x "
+          f"(bar {bar:.2f}x; recorded {recorded['ratio']:.2f}x in "
+          f"PR {recorded['pr']})")
+    if ratio > bar:
+        print("[check_bench] FAIL: the sampled-cohort round regressed past "
+              "the bar — bank gather/scatter, fault transforms, or "
+              "straggler buffering is taxing the jitted round beyond "
+              "host-epilogue work")
+        return False
+    return True
+
+
 def main() -> int:
     ok = check_het()
     ok = check_quant() and ok
     ok = check_obs() and ok
+    ok = check_cohort() and ok
     if not ok:
         return 1
     print("[check_bench] OK")

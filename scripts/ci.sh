@@ -20,6 +20,11 @@
 #                              # disabled-sink engine invariance, report
 #                              # round-trip (test_obs.py) + the checkpoint
 #                              # migration shim tests
+#   scripts/ci.sh --scale      # cross-device-scale federation: client
+#                              # bank + cohort sampling + fault injection
+#                              # + straggler billing (test_cohort.py),
+#                              # plus the faulted/async production-vs-
+#                              # oracle parity case from the dist suite
 #   scripts/ci.sh --fast       # tier-1 minus the slow sweeps and the
 #                              # multi-device dist tests
 #                              # (-m 'not slow and not dist')
@@ -64,6 +69,17 @@ case "${1:-}" in
     # shim (its warning path emits ckpt_migrate events)
     exec python -m pytest -x -q tests/test_obs.py \
       tests/test_adapter_store.py "$@"
+    ;;
+  --scale)
+    shift
+    # host-side orchestration suite + the one dist-suite case that pins
+    # the faulted/async cohort numerics to the shard_map engine (selected
+    # by node id, so the module's dist marker doesn't gate it here; it
+    # re-execs itself under the 8-device XLA flag like the rest of the
+    # dist lane)
+    exec python -m pytest -x -q tests/test_cohort.py \
+      "tests/test_distributed.py::test_collective_parity_faulted_and_async_rounds" \
+      "$@"
     ;;
   --fast)
     shift

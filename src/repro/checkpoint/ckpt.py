@@ -63,7 +63,8 @@ def checkpoint_leaf_paths(path: str) -> list[str]:
 
 
 def restore_checkpoint(path: str, like: Any, shardings: Any = None,
-                       strict: bool = True, allow_missing: str | None = None):
+                       strict: bool = True, allow_missing: str | None = None,
+                       to_host: bool = False):
     """Restore into the structure of ``like``; device_put with shardings if
     given (sharding-aware restore for multi-host meshes).
 
@@ -75,7 +76,12 @@ def restore_checkpoint(path: str, like: Any, shardings: Any = None,
 
     Integer leaves whose dtype jnp would silently narrow (int64 under the
     default x64-disabled config) are returned as host numpy arrays so
-    counters never wrap through a save/load cycle."""
+    counters never wrap through a save/load cycle.
+
+    ``to_host=True`` skips device placement entirely and returns plain
+    numpy arrays — host-resident state (e.g. fed/cohort.ClientBank, whose
+    N ≫ C client bank never lives on device) restores without ever
+    materializing N× adapter bytes in HBM."""
     import re
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
@@ -101,6 +107,13 @@ def restore_checkpoint(path: str, like: Any, shardings: Any = None,
         return arr
 
     host_tree = tree_map_with_path(fn, like)
+    if to_host:
+        host_tree = jax.tree.map(np.asarray, host_tree)
+        if obs.enabled():
+            obs.event("ckpt_restore", path=str(path),
+                      step=int(payload["step"]), leaves=len(recs))
+            obs.inc("ckpt/restores")
+        return host_tree, payload["step"]
     if shardings is not None:
         host_tree = jax.tree.map(jax.device_put, host_tree, shardings)
     else:

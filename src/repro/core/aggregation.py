@@ -309,6 +309,47 @@ class CompressedFedAvg:
         return fedavg(enc, weights)
 
 
+# ---------------------------------------------------------------------------
+# staleness-weighted (FedBuff-style) buffered aggregation
+# ---------------------------------------------------------------------------
+#
+# Async/buffered rounds incorporate updates computed against server models
+# that are τ rounds old.  FedBuff (Nguyen et al.) discounts each buffered
+# update by a staleness function s(τ); we use the polynomial discount
+# s(τ) = (1 + τ)^(−α), which is 1 at τ=0 (a fresh update is a plain
+# FedAvg contribution) and decays smoothly — so a synchronous fleet
+# (all-zero staleness) reproduces weighted FedAvg *exactly*, which is
+# what the parity sweeps exploit.
+
+
+def staleness_scale(staleness, alpha: float = 0.5):
+    """FedBuff polynomial staleness discount s(τ) = (1 + τ)^(−α).
+    ``staleness`` is a per-client round count (scalar inside the shard_map
+    manual region, a (C,) array on the client-stacked host path)."""
+    return jnp.power(1.0 + jnp.asarray(staleness, jnp.float32), -alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessFedAvg:
+    """Host aggregate: weighted mean with each client's weight discounted
+    by its staleness, wᵢ·(1+τᵢ)^(−α) — the client-stacked twin of the
+    STALENESS collective.  ``needs_staleness`` (class attribute) tells
+    ``FedSim.aggregate`` to thread the per-client staleness vector; with
+    no staleness (or all zeros) this IS weighted FedAvg."""
+    alpha: float = 0.5
+
+    needs_staleness = True        # no annotation → class attr, not a field
+
+    def __call__(self, client_adapters: Params, weights=None, *,
+                 staleness=None) -> Params:
+        C = jax.tree.leaves(client_adapters)[0].shape[0]
+        w = (jnp.ones((C,), jnp.float32) if weights is None
+             else jnp.asarray(weights, jnp.float32))
+        if staleness is not None:
+            w = w * staleness_scale(staleness, self.alpha)
+        return fedavg(client_adapters, w)
+
+
 def broadcast_to_clients(agg: Params, n_clients: int) -> Params:
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), agg)
@@ -510,16 +551,17 @@ class CollectiveAgg:
     masks (1.0 everywhere on uniform fleets).  Returns the aggregated
     tree, replicated across shards.
     """
-    kind: str            # "wmean" | "coverage" | "gather_exact" |
-                         # "gather_trimmed" | "q8" | "topk"
+    kind: str            # "wmean" | "coverage" | "staleness" |
+                         # "gather_exact" | "gather_trimmed" | "q8" | "topk"
     comm: str            # "psum" | "all_gather" | "q8" | "topk" — comm
                          # class (docs/accounting)
     trim_ratio: float = 0.0
     topk_ratio: float = 0.01
     seed: int = 0
+    alpha: float = 0.5   # staleness discount exponent ("staleness" kind)
 
     def __call__(self, adapters: Params, *, axes, weight, cover=None,
-                 step=0):
+                 step=0, staleness=0.0):
         if self.kind in ("q8", "topk"):
             # encode this client's update before it hits the wire; the
             # weighted psum of decoded updates is then the same algebra
@@ -535,6 +577,14 @@ class CollectiveAgg:
             den = jax.lax.psum(weight, axes)
             return jax.tree.map(
                 lambda x: jax.lax.psum(x * weight, axes) / den, adapters)
+        if self.kind == "staleness":
+            # FedBuff-style buffered aggregation: this shard's update is
+            # discounted by its staleness before the weighted psum — the
+            # algebra of WMEAN over the discounted weights
+            sw = weight * staleness_scale(staleness, self.alpha)
+            den = jax.lax.psum(sw, axes)
+            return jax.tree.map(
+                lambda x: jax.lax.psum(x * sw, axes) / den, adapters)
         if self.kind == "coverage":
             def one(x, c):
                 num = jax.lax.psum(x * c * weight, axes)
@@ -556,6 +606,7 @@ WMEAN = CollectiveAgg(kind="wmean", comm="psum")
 COVERAGE = CollectiveAgg(kind="coverage", comm="psum")
 GATHER_EXACT = CollectiveAgg(kind="gather_exact", comm="all_gather")
 COMPRESSED_Q8 = CollectiveAgg(kind="q8", comm="q8")
+STALENESS = CollectiveAgg(kind="staleness", comm="psum")
 
 
 def gather_trimmed(trim_ratio: float) -> CollectiveAgg:
@@ -584,6 +635,9 @@ def collective_form(method) -> CollectiveAgg:
         # two engines can never disagree on mode/ratio/seed
         return CollectiveAgg(kind=a.mode, comm=a.mode,
                              topk_ratio=a.topk_ratio, seed=a.seed)
+    if isinstance(a, StalenessFedAvg):
+        # same inheritance for the staleness discount exponent
+        return CollectiveAgg(kind="staleness", comm="psum", alpha=a.alpha)
     if a in (fedavg, decomposed_fedavg, zeropad_fedavg):
         return WMEAN
     if a is replication_fedavg:

@@ -23,6 +23,9 @@ Built-ins:
                 never aggregated (FedALT-style)
   lora_trimmed  raw LoRA + coordinate-wise trimmed-mean aggregation
                 (robust to client outliers, cf. Koo et al.)
+  lora_fedbuff  raw LoRA + FedBuff-style staleness-weighted aggregation
+                (async/buffered rounds; synchronous fleets reduce to
+                weighted FedAvg exactly)
 
 Compressed-uplink family (COMPRESSED comm class — the client update is
 encoded before the collective, see docs/quantization.md):
@@ -223,6 +226,18 @@ register(FedMethod(
     collective=agg.gather_trimmed(0.25),
     description=("LoRA + coordinate-wise trimmed-mean aggregation — "
                  "robust to adversarial/outlier clients (cf. Koo et al.)"),
+))
+
+register(FedMethod(
+    name="lora_fedbuff",
+    het_ranks=True,
+    make_adapter=partial(peft.add_lora, decomposed=False),
+    train_mask=peft.mask_all,
+    aggregate=agg.StalenessFedAvg(alpha=0.5),
+    description=("raw LoRA + FedBuff-style staleness-weighted buffered "
+                 "aggregation — each client's update is discounted by "
+                 "(1+τ)^(−α) for τ rounds of staleness before the "
+                 "weighted mean (async/buffered rounds; Nguyen et al.)"),
 ))
 
 register(FedMethod(

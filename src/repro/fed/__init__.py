@@ -1,1 +1,3 @@
 from repro.fed.simulate import FedSim, FedHyper  # noqa: F401
+from repro.fed.cohort import (ClientBank, CohortSampler,  # noqa: F401
+                              CohortSim, FaultPlan)

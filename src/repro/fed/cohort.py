@@ -1,0 +1,392 @@
+"""Cross-device-scale federation: bank → cohort → round → bank.
+
+The jitted round engines (``fed/simulate.FedSim`` and the production
+shard_map step in ``launch/train.py``) are fixed-shape: one compiled
+program over exactly C client slots.  Cross-device federation has
+N ≫ C *registered* clients, of which each round samples a cohort.  This
+module keeps the compiled round untouched and adds the three host-side
+pieces around it:
+
+  ClientBank      host-resident (numpy) state for all N registered
+                  clients — adapter overlays, optimizer state, and the
+                  round each client last synced.  ``gather`` stacks a
+                  cohort into the engine's (C, ...) device layout;
+                  ``scatter`` writes survivors back.  Nothing N-sized
+                  ever touches the accelerator.
+  CohortSampler   deterministic per-round cohort draw (distinct
+                  indices, seeded by (seed, round) so any round is
+                  reproducible in isolation).
+  FaultPlan       per-round fault draw: dropouts (mid-round client
+                  loss), stragglers (miss the round, deliver their
+                  update d rounds late), corrupted-update adversaries
+                  (inflate their round update) — all expressed through
+                  the (C,) participation / update_scale / staleness
+                  vectors both engines accept, so the fault layer needs
+                  no engine changes and stays oracle-parity-exact.
+  CohortSim       the driver: deliver matured straggler buffers, sample
+                  a cohort, gather, run the faulted round, buffer new
+                  stragglers, scatter participants, emit participation/
+                  staleness telemetry through ``repro.obs``.
+
+Staleness is bank state, not simulation fiction: a client's ``τ`` at
+round r is ``r − last_sync``, and FedBuff-family aggregates
+(``needs_staleness``) discount its contribution by ``(1+τ)^(−α)`` — a
+cohort of never-before-sampled clients at round 40 aggregates very
+differently from a fresh one, exactly as in buffered/async federation
+(Nguyen et al.).
+
+Comm billing follows participation: a dropped client uploads nothing; a
+straggler is billed when its buffered update *arrives* (see
+``CohortSim._deliver_due``), not in the round it missed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+
+# Bucket bounds for the fed/staleness_rounds histogram: staleness is a
+# small integer (rounds since last sync), so the default latency-shaped
+# bounds would pile everything below 1.0 — these are threaded through
+# obs.observe(..., bounds=...) per the registry's first-creation-wins
+# contract.
+STALENESS_BOUNDS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+
+
+class ClientBank:
+    """Host-resident state for ``n_total`` registered clients.
+
+    Leaves are numpy arrays with a leading (N,) axis; the bank is pure
+    host memory, sized by the fleet, never by the accelerator.  Cohort
+    indices must be distinct (``CohortSampler`` draws without
+    replacement) — scatter with duplicate indices would be
+    last-write-wins.
+    """
+
+    def __init__(self, adapters, opt_state, n_total: int):
+        self.n_total = int(n_total)
+        if self.n_total < 1:
+            raise ValueError(f"n_total must be >= 1, got {n_total}")
+
+        def bank(leaf):
+            arr = np.asarray(jax.device_get(leaf))
+            return np.broadcast_to(arr, (self.n_total,) + arr.shape).copy()
+
+        self.adapters = jax.tree.map(bank, adapters)
+        self.opt_state = jax.tree.map(bank, opt_state)
+        # round index of each client's last server sync; staleness at
+        # round r is r - last_sync (0 for a fresh fleet at round 0)
+        self.last_sync = np.zeros((self.n_total,), np.int64)
+
+    @classmethod
+    def from_sim(cls, sim, n_total: int) -> "ClientBank":
+        """Bank whose every client starts at ``sim``'s initial state
+        (same adapter template, same optimizer init — exactly what the
+        sim's own C slots start as, so round 0 of a cohort run matches a
+        full-participation run when the cohort covers the fleet)."""
+        if sim._client_ranks is not None:
+            raise ValueError(
+                "ClientBank requires a uniform-rank fleet: per-client "
+                "rank masks are bound to the sim's C slots, not to bank "
+                "clients, so a mixed-rank bank would silently re-mask "
+                "clients to whichever slot they land in")
+        return cls(sim.adapter_template, sim.opt.init(sim.adapter_template),
+                   n_total)
+
+    # -- cohort movement ---------------------------------------------------
+
+    def gather(self, idx):
+        """Stack cohort ``idx`` into the engine's (C, ...) device trees."""
+        idx = np.asarray(idx)
+
+        def g(leaf):
+            return jnp.asarray(leaf[idx])
+
+        return jax.tree.map(g, self.adapters), jax.tree.map(g, self.opt_state)
+
+    def scatter(self, idx, adapters, opt_state, round_idx: int,
+                mask=None) -> None:
+        """Write cohort slots back into the bank.  ``mask`` (C,) bool
+        selects which slots actually synced this round (participants);
+        unmasked slots keep their old bank state — a dropped client
+        never heard from the server."""
+        idx = np.asarray(idx)
+        mask = (np.ones(idx.shape, bool) if mask is None
+                else np.asarray(mask, bool))
+        sel = idx[mask]
+        if sel.size == 0:
+            return
+        host_ad = jax.device_get(adapters)
+        host_ost = jax.device_get(opt_state)
+
+        def put(bank_leaf, new_leaf):
+            bank_leaf[sel] = np.asarray(new_leaf)[mask]
+
+        jax.tree.map(put, self.adapters, host_ad)
+        jax.tree.map(put, self.opt_state, host_ost)
+        self.last_sync[sel] = int(round_idx)
+
+    def deposit(self, client: int, adapters, opt_state,
+                sync_round: int) -> None:
+        """Write ONE client's (unbatched, host) state — the delayed
+        straggler-delivery path."""
+        def put(bank_leaf, new_leaf):
+            bank_leaf[client] = np.asarray(new_leaf)
+
+        jax.tree.map(put, self.adapters, adapters)
+        jax.tree.map(put, self.opt_state, opt_state)
+        self.last_sync[client] = int(sync_round)
+
+    def staleness(self, idx, round_idx: int) -> np.ndarray:
+        """Rounds since each cohort member last synced, as (C,) f32 —
+        the τ vector FedBuff-family aggregates discount by."""
+        return (int(round_idx)
+                - self.last_sync[np.asarray(idx)]).astype(np.float32)
+
+    # -- checkpointing -----------------------------------------------------
+
+    def state_tree(self) -> dict:
+        return {"adapters": self.adapters, "opt_state": self.opt_state,
+                "last_sync": self.last_sync}
+
+    def save(self, path: str, round_idx: int = 0) -> None:
+        from repro.checkpoint.ckpt import save_checkpoint
+        save_checkpoint(path, self.state_tree(), step=round_idx)
+
+    def load(self, path: str) -> int:
+        """Restore a bank saved by ``save`` (host-side: N× adapter bytes
+        never touch the accelerator)."""
+        from repro.checkpoint.ckpt import restore_checkpoint
+        tree, round_idx = restore_checkpoint(path, self.state_tree(),
+                                             to_host=True)
+        self.adapters = tree["adapters"]
+        self.opt_state = tree["opt_state"]
+        self.last_sync = np.asarray(tree["last_sync"], np.int64)
+        return round_idx
+
+
+class CohortSampler:
+    """Deterministic per-round cohort draw: C distinct client indices
+    from N, seeded by (seed, round) so round r's cohort is reproducible
+    without replaying rounds 0..r-1."""
+
+    def __init__(self, n_total: int, cohort: int, seed: int = 0):
+        if not 1 <= cohort <= n_total:
+            raise ValueError(
+                f"cohort size {cohort} must be in [1, n_total={n_total}]")
+        self.n_total, self.cohort, self.seed = int(n_total), int(cohort), seed
+
+    def sample(self, round_idx: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, int(round_idx)))
+        return np.sort(rng.choice(self.n_total, size=self.cohort,
+                                  replace=False))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Per-round fault distribution over the cohort.
+
+    Each cohort slot independently draws one fate: dropout (probability
+    ``dropout_rate`` — the client vanishes mid-round: its work is lost,
+    it uploads nothing, it is not billed), straggler (``straggler_rate``
+    — it misses the round but its trained update arrives
+    ``straggler_delay``∈[lo,hi] rounds later), else it participates;
+    participants are additionally corrupted with ``corrupt_rate``
+    (their round update is inflated ×``corrupt_scale`` — the adversary
+    the trimmed-mean aggregators are built for).  Draws are seeded by
+    (seed, round): deterministic, replayable, engine-independent.
+    """
+    dropout_rate: float = 0.0
+    straggler_rate: float = 0.0
+    straggler_delay: tuple = (1, 3)
+    corrupt_rate: float = 0.0
+    corrupt_scale: float = 10.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.dropout_rate + self.straggler_rate <= 1.0:
+            raise ValueError(
+                "dropout_rate + straggler_rate must lie in [0, 1], got "
+                f"{self.dropout_rate} + {self.straggler_rate}")
+        lo, hi = self.straggler_delay
+        if not 1 <= int(lo) <= int(hi):
+            raise ValueError(
+                f"straggler_delay range {self.straggler_delay} must "
+                "satisfy 1 <= lo <= hi (a 0-round delay is just "
+                "participation)")
+
+    @property
+    def any(self) -> bool:
+        return (self.dropout_rate > 0 or self.straggler_rate > 0
+                or self.corrupt_rate > 0)
+
+    def draw(self, round_idx: int, n: int) -> dict:
+        rng = np.random.default_rng((self.seed, int(round_idx), 727))
+        u = rng.random(n)
+        dropout = u < self.dropout_rate
+        straggler = (~dropout) & (u < self.dropout_rate
+                                  + self.straggler_rate)
+        corrupt = ((~dropout) & (~straggler)
+                   & (rng.random(n) < self.corrupt_rate))
+        lo, hi = self.straggler_delay
+        delays = rng.integers(int(lo), int(hi) + 1, size=n)
+        participation = (~(dropout | straggler)).astype(np.float32)
+        update_scale = np.where(corrupt, self.corrupt_scale,
+                                1.0).astype(np.float32)
+        return {"participation": participation,
+                "update_scale": update_scale, "dropout": dropout,
+                "straggler": straggler, "corrupt": corrupt,
+                "delays": delays}
+
+
+class CohortSim:
+    """Drives a fixed-shape ``FedSim`` over a ``ClientBank`` fleet.
+
+    Per round: matured straggler buffers deliver to the bank (billed at
+    arrival), a cohort is sampled and gathered into the sim's C slots,
+    the faulted round runs (``FedSim.run_cohort_round`` — the parity
+    oracle of the production fault path), new stragglers' trained state
+    is buffered host-side for delayed delivery, and participants scatter
+    back with ``last_sync = round``.
+
+    Checkpoint scope: the bank + round counter + comm bill.  In-flight
+    straggler buffers are deliberately NOT saved — a delivery lost to a
+    restart is indistinguishable from a dropout, which the aggregation
+    already tolerates; persisting per-delivery client trees would double
+    the checkpoint for a fault class the system absorbs anyway.
+    """
+
+    def __init__(self, sim, n_total: int, faults: FaultPlan | None = None,
+                 seed: int = 0):
+        self.sim = sim
+        self.bank = ClientBank.from_sim(sim, n_total)
+        self.sampler = CohortSampler(n_total, sim.hp.n_clients, seed)
+        self.faults = faults if faults is not None else FaultPlan()
+        self.round = 0
+        self._pending: list[dict] = []   # in-flight straggler deliveries
+
+    # -- straggler buffer --------------------------------------------------
+
+    def _deliver_due(self) -> tuple[int, int]:
+        """Deliver matured straggler buffers; returns (deposited, billed)
+        — every matured upload is billed, but one that lost the race to a
+        fresher sync is discarded rather than deposited."""
+        due = [d for d in self._pending if d["deliver_at"] <= self.round]
+        self._pending = [d for d in self._pending
+                         if d["deliver_at"] > self.round]
+        n, billed = 0, len(due)
+        for d in due:
+            # the upload happened regardless — bill the wire either way
+            self.sim.comm_bytes += self.sim.client_comm_bytes()
+            if self.bank.last_sync[d["client"]] > d["trained_round"]:
+                # a fresher sync landed while this update was in flight;
+                # the server keeps the newer state
+                if obs.enabled():
+                    obs.inc("fed/stale_deliveries_discarded",
+                            method=self.sim.hp.method)
+                continue
+            self.bank.deposit(d["client"], d["adapters"], d["opt_state"],
+                              d["trained_round"])
+            n += 1
+        if n and obs.enabled():
+            obs.inc("fed/straggler_deliveries", n,
+                    method=self.sim.hp.method)
+        return n, billed
+
+    def _buffer_stragglers(self, idx, fault) -> None:
+        strag = np.nonzero(fault["straggler"])[0]
+        if strag.size == 0 or self.sim.last_trained is None:
+            return
+        host_ad = jax.device_get(self.sim.last_trained["adapters"])
+        host_ost = jax.device_get(self.sim.last_trained["opt_state"])
+        for slot in strag:
+            def take(leaf, s=int(slot)):
+                return np.asarray(leaf[s])
+            self._pending.append({
+                "client": int(idx[slot]),
+                "deliver_at": self.round + int(fault["delays"][slot]),
+                "trained_round": self.round,
+                "adapters": jax.tree.map(take, host_ad),
+                "opt_state": jax.tree.map(take, host_ost)})
+
+    # -- the round ---------------------------------------------------------
+
+    def run_round(self, batches: list[dict], rng) -> dict:
+        """One cohort round.  ``batches``: list (per local step) of
+        stacked (C, B, S) dicts, exactly as ``FedSim.local_round``
+        takes — the data pipeline feeds cohort slots, not bank ids."""
+        sim, r = self.sim, self.round
+        delivered, billed = self._deliver_due()
+        idx = self.sampler.sample(r)
+        C = sim.hp.n_clients
+        ad, ost = self.bank.gather(idx)
+        sim.client_adapters, sim.opt_state = ad, ost
+        if sim.method.prox:
+            sim._round_ref = sim.client_adapters
+        stale = self.bank.staleness(idx, r)
+        fault = self.faults.draw(r, C)
+        use_faults = self.faults.any
+        mets = sim.run_cohort_round(
+            batches, rng,
+            participation=fault["participation"] if use_faults else None,
+            staleness=stale,
+            update_scale=fault["update_scale"] if use_faults else None)
+        live = (fault["participation"] > 0 if use_faults
+                else np.ones((C,), bool))
+        if use_faults:
+            self._buffer_stragglers(idx, fault)
+        self.bank.scatter(idx, sim.client_adapters, sim.opt_state, r,
+                          mask=live)
+        if obs.enabled():
+            method = sim.hp.method
+            obs.set_gauge("fed/participation_rate", float(live.mean()),
+                          method=method)
+            for v in stale[live]:
+                obs.observe("fed/staleness_rounds", float(v),
+                            bounds=STALENESS_BOUNDS, method=method)
+            obs.inc("fed/dropouts", float(fault["dropout"].sum()),
+                    method=method)
+            obs.inc("fed/stragglers", float(fault["straggler"].sum()),
+                    method=method)
+            obs.inc("fed/corrupt_updates", float(fault["corrupt"].sum()),
+                    method=method)
+            obs.event(
+                "fed_cohort", method=method, round=r,
+                cohort=[int(i) for i in idx],
+                participation=[int(v) for v in live],
+                staleness=[float(v) for v in stale],
+                dropouts=int(fault["dropout"].sum()),
+                stragglers=int(fault["straggler"].sum()),
+                corrupt=int(fault["corrupt"].sum()),
+                delivered=delivered, pending=len(self._pending),
+                comm_bytes=int(sim.comm_bytes))
+        self.round = r + 1
+        return {"metrics": mets, "cohort": idx, "participation": live,
+                "staleness": stale, "delivered": delivered,
+                "delivered_billed": billed, "pending": len(self._pending)}
+
+    # -- checkpointing -----------------------------------------------------
+
+    def state_tree(self) -> dict:
+        return {"bank": self.bank.state_tree(),
+                "round": np.asarray(self.round, np.int64),
+                "comm_bytes": np.asarray(self.sim.comm_bytes, np.int64)}
+
+    def save(self, path: str) -> None:
+        from repro.checkpoint.ckpt import save_checkpoint
+        save_checkpoint(path, self.state_tree(), step=self.round)
+
+    def load(self, path: str) -> int:
+        from repro.checkpoint.ckpt import restore_checkpoint
+        tree, _ = restore_checkpoint(path, self.state_tree(), to_host=True)
+        self.bank.adapters = tree["bank"]["adapters"]
+        self.bank.opt_state = tree["bank"]["opt_state"]
+        self.bank.last_sync = np.asarray(tree["bank"]["last_sync"], np.int64)
+        self.round = int(tree["round"])
+        self.sim.comm_bytes = int(tree["comm_bytes"])
+        self._pending = []
+        return self.round

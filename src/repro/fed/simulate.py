@@ -78,6 +78,19 @@ class FedHyper:
     # accepts ``weights``; trimmed-mean ignores them by contract).
     client_weights: tuple = None
 
+    def __post_init__(self):
+        """Validate + normalize the fleet vectors at the dataclass
+        boundary: lists/ndarrays become plain tuples, and length/value
+        errors surface here — not as a shape mismatch deep inside jit."""
+        if self.client_ranks is not None:
+            ranks = tuple(int(r) for r in self.client_ranks)
+            object.__setattr__(self, "client_ranks", ranks)
+            peft.fleet_alloc_rank(ranks, self.n_clients, self.server_rank)
+        if self.client_weights is not None:
+            weights = tuple(float(w) for w in self.client_weights)
+            object.__setattr__(self, "client_weights", weights)
+            peft.validate_client_weights(weights, self.n_clients)
+
 
 class FedSim:
     """Federated simulation over one ArchConfig + per-client datasets."""
@@ -141,6 +154,9 @@ class FedSim:
         self.opt_state = jax.vmap(self.opt.init)(self.client_adapters)
         self._step = jnp.zeros((), jnp.int32)
         self.comm_bytes = 0
+        # post-scale / pre-revert client state of the last faulted round
+        # (what a straggler actually computed) — see run_cohort_round
+        self.last_trained: dict | None = None
         # round reference for the FedProx proximal term (aliases the
         # current client adapters; prox methods never donate them)
         self._round_ref = self.client_adapters if self.method.prox else None
@@ -267,10 +283,12 @@ class FedSim:
             ranks = (self._client_ranks if self._client_ranks is not None
                      else jnp.full((C,), self.alloc_rank, jnp.int32))
             agg_fn = partial(agg_fn, ranks=ranks)
-        if hp.client_weights is not None:
-            peft.validate_client_weights(hp.client_weights, C)
-            agg_fn = partial(agg_fn, weights=jnp.asarray(
-                hp.client_weights, jnp.float32))
+        # fleet weights stay a *call-time* argument of the jitted
+        # aggregate (not baked): cohort rounds mask them per round with
+        # participation flags, with no recompile beyond the one
+        # structural weights-None ↔ weights-array retrace
+        self._base_weights = (jnp.asarray(hp.client_weights, jnp.float32)
+                              if hp.client_weights is not None else None)
         self._agg = jax.jit(agg_fn)
         self._drift_fn = None           # built on first telemetry-enabled
         self._obs_wall: dict = {}       # last round's wall-clock split
@@ -347,20 +365,45 @@ class FedSim:
             self._step = self._step + 1
         return {k: np.asarray(v) for k, v in (mets or {}).items()}
 
-    def aggregate(self) -> Params:
+    def aggregate(self, *, weights=None, staleness=None,
+                  participation=None) -> Params:
         """Method aggregation (Eqs. 5–8 for ours, FedAvg/trimmed-mean for
         baselines) + comm accounting; broadcasts the aggregate back with
-        keep-local leaves (e.g. dB_mag) preserved per client."""
+        keep-local leaves (e.g. dB_mag) preserved per client.
+
+        Cohort/fault arguments (all optional, None → the synchronous
+        full-participation round, byte-identical to the pre-cohort path):
+
+          weights        per-round (C,) override of ``hp.client_weights``
+          staleness      per-client rounds-since-sync (C,) — threaded to
+                         ``needs_staleness`` aggregates (FedBuff family)
+          participation  per-client 0/1 flags (C,): non-participants get
+                         aggregation weight 0 and are not billed (a
+                         dropped client uploads nothing)
+        """
         enabled = obs.enabled()
         t0 = time.perf_counter() if enabled else 0.0
+        C = self.hp.n_clients
+        w = weights if weights is not None else self._base_weights
+        if participation is not None:
+            part = jnp.asarray(participation, jnp.float32)
+            base_w = (w if w is not None
+                      else jnp.ones((C,), jnp.float32))
+            w = base_w * part
+        kwargs = {}
+        if w is not None:
+            kwargs["weights"] = jnp.asarray(w, jnp.float32)
         if getattr(self.method.aggregate, "needs_step", False):
             # compressed codecs derive their stochastic-rounding keys
             # from the round counter (post-round, = the step the
             # production round_body passes), so both engines draw
             # identical masks
-            aggregated = self._agg(self.client_adapters, step=self._step)
-        else:
-            aggregated = self._agg(self.client_adapters)
+            kwargs["step"] = self._step
+        if getattr(self.method.aggregate, "needs_staleness", False):
+            kwargs["staleness"] = (
+                jnp.zeros((C,), jnp.float32) if staleness is None
+                else jnp.asarray(staleness, jnp.float32))
+        aggregated = self._agg(self.client_adapters, **kwargs)
         if enabled:
             jax.block_until_ready(aggregated)
             dt = time.perf_counter() - t0
@@ -368,15 +411,21 @@ class FedSim:
                         method=self.hp.method)
             self._obs_wall["aggregate"] = dt
         prev_bytes = self.comm_bytes
-        C = self.hp.n_clients
+        # billing is participation-masked: a dropped/straggling client
+        # uploads nothing this round (stragglers bill at delivery — see
+        # fed/cohort.CohortSim)
+        live = (np.asarray(jax.device_get(participation)) > 0
+                if participation is not None else np.ones((C,), bool))
         if self._client_ranks is None:
-            self.comm_bytes += C * agg.comm_bytes_per_round(
+            self.comm_bytes += int(live.sum()) * agg.comm_bytes_per_round(
                 self.adapter_template, exclude_rx=self.method.keep_local,
                 comm=self._comm_class, n_clients=C,
                 topk_ratio=self._topk_ratio)
         else:
             # heterogeneous fleet: each client moves only its own rank rows
-            for r in self.hp.client_ranks:
+            for r, on in zip(self.hp.client_ranks, live):
+                if not on:
+                    continue
                 self.comm_bytes += agg.comm_bytes_per_round(
                     self.adapter_template, exclude_rx=self.method.keep_local,
                     rank=int(r), comm=self._comm_class, n_clients=C,
@@ -445,6 +494,88 @@ class FedSim:
                   "aggregate": round(w.get("aggregate", 0.0), 6),
                   "rebroadcast": round(w.get("rebroadcast", 0.0), 6),
                   "total": round(total, 6)})
+        return mets
+
+    def client_comm_bytes(self, client: int | None = None) -> int:
+        """One client's wire bytes for a single round of this method's
+        collective (the unit ``aggregate`` bills per participant) —
+        cohort drivers use it to bill straggler deliveries at arrival."""
+        rank = (int(self.hp.client_ranks[client])
+                if self._client_ranks is not None and client is not None
+                else None)
+        return agg.comm_bytes_per_round(
+            self.adapter_template, exclude_rx=self.method.keep_local,
+            rank=rank, comm=self._comm_class, n_clients=self.hp.n_clients,
+            topk_ratio=self._topk_ratio)
+
+    def run_cohort_round(self, batches: list[dict], rng, *,
+                         participation=None, staleness=None,
+                         update_scale=None, weights=None) -> dict:
+        """One federated round under cohort faults — the parity oracle
+        for the production round with the same fault arguments
+        (``launch/train.round_step``).  All fault inputs are (C,) arrays:
+
+          participation  0/1 flags; a 0-client's adapters AND optimizer
+                         state revert to their round-start values (its
+                         mid-round work is lost), it contributes weight 0
+                         to the aggregate, and it is not billed.
+          update_scale   multiplies each client's round *update*
+                         (corrupted-update adversaries inflate theirs);
+                         honest clients pass 1.
+          staleness      rounds-since-last-sync, consumed by
+                         ``needs_staleness`` aggregates (FedBuff family).
+          weights        per-round override of ``hp.client_weights``.
+
+        Fault transforms are statically gated: with every argument None
+        this is byte-identical to ``run_round`` (the transforms would
+        otherwise perturb f32 bit patterns — ``old + 1·(new−old) ≠ new``).
+        When active, BOTH engines apply the identical expressions to ALL
+        clients (identity values for honest ones), so parity holds bit
+        for bit through the fault layer.
+
+        After a faulted round ``self.last_trained`` holds the post-scale,
+        pre-revert client state — what a straggler actually computed —
+        for delayed delivery (see ``fed/cohort.CohortSim``)."""
+        use_faults = participation is not None or update_scale is not None
+        C = self.hp.n_clients
+        if use_faults:
+            # jnp.copy: the round scan donates the live buffers
+            snap_ad = jax.tree.map(jnp.copy, self.client_adapters)
+            snap_ost = jax.tree.map(jnp.copy, self.opt_state)
+        mets = self.local_round(batches, rng)
+        self.last_trained = None
+        if use_faults:
+            s = (jnp.ones((C,), jnp.float32) if update_scale is None
+                 else jnp.asarray(update_scale, jnp.float32))
+            p = (jnp.ones((C,), jnp.float32) if participation is None
+                 else jnp.asarray(participation, jnp.float32))
+
+            def scaled(new, old):
+                sb = s.reshape((C,) + (1,) * (new.ndim - 1))
+                return old + sb * (new - old)
+
+            def revert(new, old):
+                pb = p.reshape((C,) + (1,) * (new.ndim - 1))
+                return jnp.where(pb > 0, new, old)
+
+            self.client_adapters = jax.tree.map(
+                scaled, self.client_adapters, snap_ad)
+            self.last_trained = {"adapters": self.client_adapters,
+                                 "opt_state": self.opt_state}
+            self.client_adapters = jax.tree.map(
+                revert, self.client_adapters, snap_ad)
+            self.opt_state = jax.tree.map(revert, self.opt_state, snap_ost)
+        if participation is not None and not np.any(
+                np.asarray(jax.device_get(participation)) > 0):
+            # every cohort client dropped: nothing uploads, nothing
+            # aggregates, nothing is billed — the round is a no-op (for
+            # prox methods the reverted adapters equal the round-start
+            # anchor bitwise, so the aliased round reference stays valid)
+            if self.method.prox:
+                self._round_ref = self.client_adapters
+            return mets
+        self.aggregate(weights=weights, staleness=staleness,
+                       participation=participation)
         return mets
 
     @staticmethod

@@ -136,6 +136,26 @@ def telemetry_section(events) -> str:
                 f"{split} |")
         out.append("")
 
+    cohorts = by_kind["fed_cohort"]
+    if cohorts:
+        out += ["### Cohort rounds (partial participation)", "",
+                "| method | round | cohort | part. rate | staleness "
+                "mean/max | drop | strag | corrupt | delivered | "
+                "in-flight | comm bytes |",
+                "|---|---|---|---|---|---|---|---|---|---|---|"]
+        for e in cohorts:
+            part = e.get("participation", [])
+            stale = e.get("staleness", []) or [0.0]
+            rate = _mean(part)
+            out.append(
+                f"| {e.get('method', '?')} | {e.get('round', 0)} | "
+                f"{len(part)} | {rate:.2f} | "
+                f"{_mean(stale):.1f}/{max(stale):.0f} | "
+                f"{e.get('dropouts', 0)} | {e.get('stragglers', 0)} | "
+                f"{e.get('corrupt', 0)} | {e.get('delivered', 0)} | "
+                f"{e.get('pending', 0)} | {e.get('comm_bytes', 0):,} |")
+        out.append("")
+
     stages = by_kind["fed_stage"]
     if stages:
         out += ["### Pipeline stages", "",
@@ -179,6 +199,33 @@ def telemetry_section(events) -> str:
         if lookups or regs:
             out += [f"pool hit-rate {lookups / max(lookups + regs, 1):.2%} "
                     f"({int(lookups)} lookups / {int(regs)} registers)", ""]
+        hists = snaps[-1].get("snapshot", {}).get("histograms", {})
+        if hists:
+            # bucket-resolved view: with the sub-ms default/latency
+            # bounds, an 80 µs and a 600 µs span show up as *different*
+            # rows here instead of one collapsed "< 1 ms" bucket
+            out += ["### Histograms", "",
+                    "| metric | labels | count | mean | min | max | "
+                    "buckets (le: n) |",
+                    "|---|---|---|---|---|---|---|"]
+            for name, series in sorted(hists.items()):
+                for s in series:
+                    labels = ", ".join(
+                        f"{k}={v}" for k, v in
+                        sorted(s.get("labels", {}).items())) or "-"
+                    bk = s.get("buckets", {})
+
+                    def le(k):
+                        return (float("inf") if k == "le_inf"
+                                else float(k[3:]))
+                    buckets = ", ".join(
+                        f"{k[3:]}:{bk[k]}" for k in sorted(bk, key=le))
+                    out.append(
+                        f"| {name} | {labels} | {s.get('count', 0)} | "
+                        f"{s.get('mean', 0.0):.3g} | "
+                        f"{s.get('min', 0.0):.3g} | "
+                        f"{s.get('max', 0.0):.3g} | {buckets} |")
+            out.append("")
 
     if len(out) == 2:
         out += ["_no telemetry events_", ""]

@@ -123,6 +123,17 @@ class TrainSettings:
     # the pre-telemetry ones.
     telemetry: bool = False
 
+    def __post_init__(self):
+        """Normalize the fleet vectors at the dataclass boundary
+        (lists/ndarrays → plain tuples; mirrors FedHyper).  Length checks
+        need the mesh and stay in ``make_fed_pipeline_step``."""
+        if self.client_ranks is not None:
+            object.__setattr__(self, "client_ranks",
+                               tuple(int(r) for r in self.client_ranks))
+        if self.client_weights is not None:
+            object.__setattr__(self, "client_weights",
+                               tuple(float(w) for w in self.client_weights))
+
 
 def pick_micro_batches(cfg: ArchConfig, per_client_batch: int,
                        seq_len: int, budget_bytes: float = 1.0e9) -> int:
@@ -354,7 +365,8 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
     ost_abs = jax.eval_shape(opt.init, abs_ad)
     ost_spec = shd.client_specs(ost_abs, mesh)
     cov_spec = shd.client_specs(covers_c, mesh)
-    w_spec = P(shd.client_axis(mesh))
+    w_spec = shd.client_vector_spec(mesh)   # weights / participation /
+                                            # staleness / update scales
     # the aggregated server model carries no client axis: replicated in,
     # replicated out (stages 1 → 2 hand it off in this layout)
     agg_spec = shd.replicated_specs(abs_ad)
@@ -466,7 +478,7 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
 
     # ---- stage 1: the federated round ----------------------------------
     def round_body(base, adapters, opt_state, step0, batch, anchor, weight,
-                   covers, rng, *, use_rng):
+                   part, stale, scale, covers, rng, *, use_rng, use_faults):
         # inside the manual region: one client per shard
         adapters = jax.tree.map(lambda x: x[0], adapters)   # drop C axis
         opt_state = jax.tree.map(lambda x: x[0], opt_state)
@@ -474,12 +486,33 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
         anchor = jax.tree.map(lambda x: x[0], anchor)
         w = weight[0]
         cover = jax.tree.map(lambda x: x[0], covers)
+        if use_faults:
+            ad0, ost0 = adapters, opt_state     # round-start snapshot
         adapters, opt_state, mets = train_scan(
             base, adapters, opt_state, step0, batch,
             T=settings.local_steps, stage_opt=opt,
             cover=cover if het else None, stage_lam=0.0,
             stage_prox=prox_mu, anchor=anchor, stage="round",
             rng=rng if use_rng else None)
+        if use_faults:
+            # fault layer — statically gated (``old + 1·(new−old) ≠ new``
+            # in f32, so the honest path must never run these), and when
+            # active BOTH engines apply the identical expressions to ALL
+            # shards (identity values for honest clients) so parity with
+            # FedSim.run_cohort_round holds bit for bit:
+            #   scale  corrupted-update adversaries inflate this shard's
+            #          round update;
+            #   part   a 0-participation shard reverts adapters AND
+            #          optimizer state to round start (its mid-round work
+            #          is lost) and contributes weight 0 below.
+            p, s = part[0], scale[0]
+            adapters = jax.tree.map(
+                lambda new, old: old + s * (new - old), adapters, ad0)
+            adapters = jax.tree.map(
+                lambda new, old: jnp.where(p > 0, new, old), adapters, ad0)
+            opt_state = jax.tree.map(
+                lambda new, old: jnp.where(p > 0, new, old), opt_state, ost0)
+            w = w * p
 
         # the method's collective aggregation: the only cross-client (and
         # only cross-pod) traffic.  Keep-local leaves (the paper's
@@ -487,8 +520,11 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
         # shard's own post-round values — personalization never crosses
         # shards.  ``step`` feeds the COMPRESSED codecs' rounding keys:
         # the post-round counter, = FedSim._step at FedSim.aggregate time.
+        # ``staleness`` feeds the STALENESS (FedBuff) discount; other
+        # kinds ignore it.
         agg = collective(adapters, axes=daxes, weight=w, cover=cover,
-                         step=step0 + settings.local_steps)
+                         step=step0 + settings.local_steps,
+                         staleness=stale[0])
         if settings.telemetry:
             # per-client aggregate drift ‖client − aggregate‖ over the
             # shared leaves, pre-rebroadcast (the simulator's
@@ -525,7 +561,8 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
                 jax.tree.map(lambda x: x[None], opt_state), agg, met_last)
 
     def round_step(base, adapters, opt_state, step, batch, anchor=None,
-                   rng=None):
+                   rng=None, weights=None, participation=None,
+                   staleness=None, update_scale=None):
         if anchor is None:
             # round-only training: the proximal reference is the call's
             # input adapters (a round ends in rebroadcast, so the next
@@ -534,16 +571,31 @@ def make_fed_pipeline_step(cfg: ArchConfig, mesh,
         use_rng = rng is not None
         if not use_rng:
             rng = jnp.zeros((2,), jnp.uint32)   # placeholder, never consumed
+        # cohort/fault inputs (mirror FedSim.run_cohort_round): all (C,)
+        # vectors riding w_spec.  ``use_faults`` is a static gate — with
+        # every argument None the fault transforms never enter the
+        # program and the placeholder vectors are dead inputs, so the
+        # honest round compiles to the identical math as before.
+        use_faults = participation is not None or update_scale is not None
+        w_c = weight_c if weights is None else jnp.asarray(
+            weights, jnp.float32)
+        part_c = (jnp.ones((dp,), jnp.float32) if participation is None
+                  else jnp.asarray(participation, jnp.float32))
+        stale_c = (jnp.zeros((dp,), jnp.float32) if staleness is None
+                   else jnp.asarray(staleness, jnp.float32))
+        scale_c = (jnp.ones((dp,), jnp.float32) if update_scale is None
+                   else jnp.asarray(update_scale, jnp.float32))
         body = shard_map_compat(
-            partial(round_body, use_rng=use_rng),
+            partial(round_body, use_rng=use_rng, use_faults=use_faults),
             mesh,
             in_specs=(base_manual_specs(base, cfg), ad_spec, ost_spec, P(),
-                      batch_spec_of(batch), ad_spec, w_spec, cov_spec, P()),
+                      batch_spec_of(batch), ad_spec, w_spec, w_spec,
+                      w_spec, w_spec, cov_spec, P()),
             out_specs=(ad_spec, ost_spec, agg_spec, P()),
             manual_axes=daxes,
         )
         return body(base, adapters, opt_state, step, batch, anchor,
-                    weight_c, covers_c, rng)
+                    w_c, part_c, stale_c, scale_c, covers_c, rng)
 
     # ---- stage 2: the global optimizer (replicated server model) -------
     def global_body(base, agg, adapters, sbatch, covers, rng, *, use_rng):
@@ -663,11 +715,17 @@ def make_fed_train_step(cfg: ArchConfig, mesh, settings: TrainSettings):
     """
     pipe = make_fed_pipeline_step(cfg, mesh, settings)
 
-    def train_step(base, adapters, opt_state, step, batch, rng=None):
+    def train_step(base, adapters, opt_state, step, batch, rng=None,
+                   weights=None, participation=None, staleness=None,
+                   update_scale=None):
         # the aggregate is dropped inside this jit so round-only training
-        # never pays for materializing the pipeline's replicated output
+        # never pays for materializing the pipeline's replicated output;
+        # the cohort/fault vectors pass straight through to the stage-1
+        # body (see round_step)
         adapters, opt_state, _, met = pipe.round_step_raw(
-            base, adapters, opt_state, step, batch, rng=rng)
+            base, adapters, opt_state, step, batch, rng=rng,
+            weights=weights, participation=participation,
+            staleness=staleness, update_scale=update_scale)
         return adapters, opt_state, met
 
     return jax.jit(train_step), pipe.opt_init

@@ -77,6 +77,15 @@ class ArchConfig:
                                           # and the federated deltas stay
                                           # f32.  Serving only — training
                                           # paths keep None.
+    backbone_quant_group: Optional[int] = None
+                                          # quantization group size along
+                                          # d_in (must divide it); None →
+                                          # one per-channel scale per
+                                          # output column.  Smaller groups
+                                          # cut int4 quantization error at
+                                          # a scale-table memory cost —
+                                          # threaded into quantize_backbone
+                                          # by ServeEngine.
     # --- misc ---
     tie_embeddings: bool = False
     norm_eps: float = 1e-6

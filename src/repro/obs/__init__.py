@@ -21,7 +21,8 @@ never caching it across rounds, so enabling mid-process works.
 from __future__ import annotations
 
 from repro.obs.events import EventLog, NullEventLog, read_events
-from repro.obs.metrics import MetricsRegistry, NullRegistry
+from repro.obs.metrics import (DEFAULT_BOUNDS, LATENCY_BOUNDS,
+                               MetricsRegistry, NullRegistry, to_prometheus)
 from repro.obs.tracing import annotate, named_scope, span
 
 __all__ = [
@@ -29,6 +30,7 @@ __all__ = [
     "inc", "set_gauge", "observe", "event", "emit_snapshot",
     "MetricsRegistry", "NullRegistry", "EventLog", "NullEventLog",
     "read_events", "span", "annotate", "named_scope",
+    "DEFAULT_BOUNDS", "LATENCY_BOUNDS", "to_prometheus",
 ]
 
 
@@ -88,8 +90,16 @@ def set_gauge(name: str, value: float, **labels) -> None:
     _active.metrics.gauge(name).set(value, **labels)
 
 
-def observe(name: str, value: float, **labels) -> None:
-    _active.metrics.histogram(name).observe(value, **labels)
+def observe(name: str, value: float, bounds: tuple | None = None,
+            **labels) -> None:
+    """Record one histogram observation.  ``bounds`` sets the bucket
+    upper bounds on the histogram's *first* creation (latency-class call
+    sites pass ``obs.LATENCY_BOUNDS`` for sub-ms resolution); later
+    calls — with or without bounds — share the existing instrument, per
+    the registry's first-creation-wins contract."""
+    h = (_active.metrics.histogram(name, bounds) if bounds is not None
+         else _active.metrics.histogram(name))
+    h.observe(value, **labels)
 
 
 def event(kind: str, **fields) -> None:

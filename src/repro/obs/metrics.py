@@ -30,10 +30,24 @@ import threading
 
 # Default histogram bucket upper bounds (inclusive), log-spaced so one
 # set covers microsecond spans and multi-second rounds alike.  Values
-# above the last bound land in the +Inf bucket.
+# above the last bound land in the +Inf bucket.  The sub-ms decades
+# matter: decode chunks and admission waits on a warm serve engine sit
+# well under 1 ms, and a histogram whose first bound is 1 ms collapses
+# them all into one bucket (p50 == p99 == "under a millisecond").
 DEFAULT_BOUNDS = (
+    0.00005, 0.0001, 0.00025, 0.0005,
     0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
     1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 1000.0,
+)
+
+# Serve-path latency bounds: denser sub-ms resolution, capped at 10 s —
+# the ServeEngine/batcher hot spans (admission wait, prefill, decode
+# chunk) thread these through ``obs.observe(..., bounds=...)`` so a 80 µs
+# and a 600 µs chunk land in distinct buckets.
+LATENCY_BOUNDS = (
+    0.00001, 0.000025, 0.00005, 0.0001, 0.00025, 0.0005,
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0,
 )
 
 
@@ -232,3 +246,75 @@ class NullRegistry:
 
     def reset(self) -> None:
         pass
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+def _prom_name(name: str) -> str:
+    """Metric names here are slash-namespaced (``fed/comm_bytes``);
+    Prometheus names admit only ``[a-zA-Z_:][a-zA-Z0-9_:]*``."""
+    out = "".join(c if (c.isalnum() or c in "_:") else "_" for c in name)
+    if out and out[0].isdigit():
+        out = "_" + out
+    return "repro_" + out
+
+
+def _prom_labels(labels: dict, extra: tuple = ()) -> str:
+    items = sorted(labels.items()) + list(extra)
+    if not items:
+        return ""
+    body = ",".join(
+        '{}="{}"'.format(k, str(v).replace("\\", r"\\").replace('"', r'\"'))
+        for k, v in items)
+    return "{" + body + "}"
+
+
+def _fmt(v: float) -> str:
+    f = float(v)
+    return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+def to_prometheus(snapshot: dict) -> str:
+    """Render a ``MetricsRegistry.snapshot()`` as Prometheus text
+    exposition format (version 0.0.4) — counters/gauges verbatim,
+    histograms as cumulative ``_bucket{le=...}`` series plus ``_sum`` /
+    ``_count``.  Pure function of the snapshot dict, so the serve loop's
+    ``REPRO_PROM_PATH`` hook and offline converters share one encoder."""
+    lines: list[str] = []
+    for name, series in snapshot.get("counters", {}).items():
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} counter")
+        for s in series:
+            lines.append(f"{pn}{_prom_labels(s['labels'])} "
+                         f"{_fmt(s['value'])}")
+    for name, series in snapshot.get("gauges", {}).items():
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} gauge")
+        for s in series:
+            lines.append(f"{pn}{_prom_labels(s['labels'])} "
+                         f"{_fmt(s['value'])}")
+    for name, series in snapshot.get("histograms", {}).items():
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} histogram")
+        for s in series:
+            # snapshot buckets are sparse per-bucket counts keyed
+            # "le_{bound:g}" / "le_inf"; prometheus wants cumulative
+            finite = sorted(
+                (float(k[3:]), c) for k, c in s["buckets"].items()
+                if k != "le_inf")
+            cum = 0
+            for bound, c in finite:
+                cum += c
+                lines.append(
+                    f"{pn}_bucket{_prom_labels(s['labels'], (('le', f'{bound:g}'),))} "
+                    f"{cum}")
+            lines.append(
+                f"{pn}_bucket{_prom_labels(s['labels'], (('le', '+Inf'),))} "
+                f"{s['count']}")
+            lines.append(f"{pn}_sum{_prom_labels(s['labels'])} "
+                         f"{_fmt(s['sum'])}")
+            lines.append(f"{pn}_count{_prom_labels(s['labels'])} "
+                         f"{s['count']}")
+    return "\n".join(lines) + ("\n" if lines else "")

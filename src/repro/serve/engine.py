@@ -24,6 +24,7 @@ reference generator bit-for-bit in float32.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Any
 
@@ -71,10 +72,12 @@ class ServeEngine:
                              "supported by ServeEngine yet")
         if cfg.backbone_quant:
             # store the frozen backbone quantized (int8/int4 + per-channel
-            # scales); the per-tenant BGMV deltas stay f32 on top, so one
-            # quantize pass serves every tenant
+            # or grouped scales, per cfg.backbone_quant_group); the
+            # per-tenant BGMV deltas stay f32 on top, so one quantize
+            # pass serves every tenant
             from repro.kernels import quantize_backbone
-            base = quantize_backbone(base, cfg.backbone_quant)
+            base = quantize_backbone(base, cfg.backbone_quant,
+                                     group_size=cfg.backbone_quant_group)
         self.base, self.cfg, self.store = base, cfg, store
         self.max_rows = max_rows
         self.max_len = max_len
@@ -184,7 +187,11 @@ class ServeEngine:
                     now = time.perf_counter()
                     for row, req in admitted:
                         wait = now - req.submit_ts
+                        # admission waits on a drained queue are tens of
+                        # microseconds — LATENCY_BOUNDS keeps them out
+                        # of one collapsed first bucket
                         obs.observe("serve/admission_wait_seconds", wait,
+                                    bounds=obs.LATENCY_BOUNDS,
                                     tenant=req.tenant or "<none>")
                         obs.event("serve_admit", rid=req.rid,
                                   tenant=req.tenant or None, row=row,
@@ -212,6 +219,8 @@ class ServeEngine:
                         self._compiled.add("prefill")
                         obs.event("compile", program="serve/prefill",
                                   wall=round(dt, 6))
+                    obs.observe("serve/prefill_seconds", dt,
+                                bounds=obs.LATENCY_BOUNDS)
                     obs.observe("span_seconds", dt, span="serve/prefill")
                     n_prefills += 1
                     gauges()
@@ -241,6 +250,8 @@ class ServeEngine:
                         obs.event("compile", program="serve/decode_chunk",
                                   wall=round(dt, 6))
                     produced = n_active * self.decode_chunk
+                    obs.observe("serve/decode_chunk_seconds", dt,
+                                bounds=obs.LATENCY_BOUNDS)
                     obs.observe("span_seconds", dt, span="serve/decode_chunk")
                     obs.observe("serve/chunk_tokens_per_s",
                                 produced / max(dt, 1e-9))
@@ -263,6 +274,16 @@ class ServeEngine:
                       tokens_per_s=round(total_toks / max(wall, 1e-9), 2),
                       chunks=n_chunks, prefills=n_prefills,
                       rows=R, decode_chunk=self.decode_chunk)
+            prom_path = os.environ.get("REPRO_PROM_PATH")
+            if prom_path:
+                # Prometheus textfile-collector hook: dump the registry
+                # after each drained run, atomically so a concurrent
+                # scrape never reads a torn file
+                text = obs.to_prometheus(obs.active().metrics.snapshot())
+                tmp = prom_path + ".tmp"
+                with open(tmp, "w") as f:
+                    f.write(text)
+                os.replace(tmp, prom_path)
         return results
 
     def generate(self, requests, n_new: int = 16) -> list[np.ndarray]:

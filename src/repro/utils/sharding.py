@@ -87,6 +87,14 @@ def client_specs(tree, mesh: Mesh):
     return jax.tree.map(lambda _: P(ax), tree)
 
 
+def client_vector_spec(mesh: Mesh) -> P:
+    """PartitionSpec for a per-client (C,) vector — aggregation weights,
+    participation flags, staleness counters, update scales: one scalar
+    per data shard, the layout the fed round's fault/weight inputs ride
+    (launch/train.py)."""
+    return P(client_axis(mesh))
+
+
 def replicated_specs(tree):
     """PartitionSpec pytree replicating every leaf — the layout of the
     federated pipeline's stage-2 state (the aggregated server model and

@@ -163,6 +163,73 @@ def test_weight_convexity(seed):
             assert (got >= lo - 1e-5).all() and (got <= hi + 1e-5).all(), name
 
 
+@pytest.mark.slow
+@given_seeds()
+def test_cohort_of_one_is_identity(seed):
+    """A cohort of a single client aggregates to that client's adapters
+    for every registry aggregator (trimmed-mean included: trimming 25%
+    of a 1-client fleet trims nobody) — the degenerate sampled-cohort
+    case the cross-device driver can legitimately produce."""
+    tree, _, _ = _make_fleet(seed, rank_sufficient=True)
+    one = jax.tree.map(lambda x: x[:1], tree)
+    full = jnp.full((1,), one["proj"]["lora_A"].shape[-1], jnp.int32)
+    want = jax.tree.map(lambda x: x[0], one)
+    for name, (fn, rank_aware, delta_only) in _registry_aggregators().items():
+        out = _call(fn, rank_aware, one, full)
+        _assert_same(name, out, want, delta_only)
+
+
+@pytest.mark.slow
+@given_seeds()
+def test_zero_weight_client_is_excluded(seed):
+    """A zero aggregation weight removes a client from the mean exactly:
+    the aggregate equals the aggregate of the remaining fleet with the
+    remaining weights.  Zero weights never come from ``client_weights``
+    (validated > 0 at the dataclass boundary) — they arrive at call time
+    through the cohort participation mask, so this is the law dropout
+    correctness rests on.  Trimmed-mean ignores weights by contract and
+    is exempt (a dropped client enters its order statistics through its
+    reverted round-start values, identically on both engines)."""
+    rng = np.random.default_rng(seed)
+    tree, _, w = _make_fleet(seed, rank_sufficient=True)
+    full = jnp.full((C,), tree["proj"]["lora_A"].shape[-1], jnp.int32)
+    drop = int(rng.integers(0, C))
+    keep = [c for c in range(C) if c != drop]
+    wz = np.asarray(w).copy()
+    wz[drop] = 0.0
+    sub = jax.tree.map(lambda x: x[np.asarray(keep)], tree)
+    for name, (fn, rank_aware, delta_only) in _registry_aggregators().items():
+        if name == "lora_trimmed":
+            continue
+        a = _call(fn, rank_aware, tree, full, weights=jnp.asarray(wz))
+        b = _call(fn, rank_aware, sub, full[np.asarray(keep)],
+                  weights=jnp.asarray(np.asarray(w)[keep]))
+        _assert_same(name, a, b, delta_only)
+
+
+def test_staleness_discount_law():
+    """FedBuff staleness weighting: τ=0 reduces to weighted FedAvg
+    EXACTLY ((1+0)^(−α) == 1.0 bitwise — the synchronous-fleet identity
+    the parity sweeps rely on), and a stale client's contribution is
+    discounted by (1+τ)^(−α) relative to re-weighted FedAvg."""
+    rng = np.random.default_rng(7)
+    x = rng.uniform(-1, 1, size=(C, 6, 4)).astype(np.float32)
+    tree = {"p": {"lora_A": jnp.asarray(x)}}
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=(C,)).astype(np.float32))
+    fb = agg.StalenessFedAvg(alpha=0.5)
+    np.testing.assert_array_equal(
+        np.asarray(fb(tree, w, staleness=jnp.zeros((C,)))["p"]["lora_A"]),
+        np.asarray(agg.fedavg(tree, w)["p"]["lora_A"]))
+    tau = jnp.asarray([0.0, 3.0, 0.0, 8.0], jnp.float32)
+    scaled = w * agg.staleness_scale(tau, 0.5)
+    np.testing.assert_allclose(
+        np.asarray(fb(tree, w, staleness=tau)["p"]["lora_A"]),
+        np.asarray(agg.fedavg(tree, scaled)["p"]["lora_A"]),
+        rtol=1e-6, atol=1e-7)
+    assert float(agg.staleness_scale(0.0)) == 1.0
+    np.testing.assert_allclose(float(agg.staleness_scale(3.0)), 0.5)
+
+
 # ---------------------------------------------------------------------------
 # compressed-uplink codec laws (COMPRESSED comm class)
 # ---------------------------------------------------------------------------

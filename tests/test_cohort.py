@@ -1,0 +1,282 @@
+"""Cross-device-scale federation (repro.fed.cohort): ClientBank
+gather/scatter semantics, deterministic cohort sampling, fault-plan
+draws, straggler buffering with delivery-time comm billing, checkpoint
+round-trips, and the participation/staleness telemetry surface.
+
+The *numerics* of faulted rounds (production shard_map engine vs the
+FedSim oracle, ~1 ulp) live in tests/test_distributed.py — this file
+covers the host-side orchestration layer around that engine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.fed import ClientBank, CohortSampler, CohortSim, FaultPlan
+from repro.fed.cohort import STALENESS_BOUNDS
+from repro.fed.simulate import FedHyper, FedSim
+from repro.models.config import ArchConfig
+
+CFG = ArchConfig(name="cohort-t", family="dense", n_layers=2, d_model=32,
+                 n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                 dtype="float32", lora_rank=4, lora_dropout=0.0)
+
+
+@pytest.fixture(autouse=True)
+def _null_sink():
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def _sim(method="lora", C=3, local_steps=2, lr=1e-2, **kw):
+    hp = FedHyper(method=method, n_clients=C, local_steps=local_steps,
+                  lr=lr, **kw)
+    return FedSim(CFG, hp)
+
+
+def _batches(C, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"tokens": jnp.asarray(rng.integers(5, 64, size=(C, 2, 16)),
+                                   jnp.int32),
+             "loss_mask": jnp.ones((C, 2, 16), jnp.float32)}
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# sampler + fault plan
+# ---------------------------------------------------------------------------
+
+def test_sampler_deterministic_distinct_and_bounded():
+    s = CohortSampler(n_total=50, cohort=5, seed=11)
+    a, b = s.sample(3), s.sample(3)
+    np.testing.assert_array_equal(a, b)          # (seed, round) keyed
+    assert len(set(a.tolist())) == 5             # without replacement
+    assert a.min() >= 0 and a.max() < 50
+    assert not np.array_equal(s.sample(3), s.sample(4))
+    # a different seed reshuffles the same round
+    assert not np.array_equal(a, CohortSampler(50, 5, seed=12).sample(3))
+    with pytest.raises(ValueError, match="cohort size"):
+        CohortSampler(n_total=4, cohort=5)
+    with pytest.raises(ValueError, match="cohort size"):
+        CohortSampler(n_total=4, cohort=0)
+
+
+def test_fault_plan_validation_and_partition():
+    with pytest.raises(ValueError, match="dropout_rate"):
+        FaultPlan(dropout_rate=0.7, straggler_rate=0.5)
+    with pytest.raises(ValueError, match="straggler_delay"):
+        FaultPlan(straggler_delay=(0, 2))
+    with pytest.raises(ValueError, match="straggler_delay"):
+        FaultPlan(straggler_delay=(3, 1))
+    assert not FaultPlan().any
+    plan = FaultPlan(dropout_rate=0.3, straggler_rate=0.3, corrupt_rate=0.5,
+                     corrupt_scale=7.0, seed=5)
+    assert plan.any
+    d1, d2 = plan.draw(2, 64), plan.draw(2, 64)
+    for k in d1:
+        np.testing.assert_array_equal(d1[k], d2[k])   # replayable
+    f = plan.draw(0, 256)
+    # fates partition: dropout/straggler disjoint, participation is the rest
+    assert not np.any(f["dropout"] & f["straggler"])
+    np.testing.assert_array_equal(
+        f["participation"], (~(f["dropout"] | f["straggler"])).astype(
+            np.float32))
+    # corruption only hits participants, and scales exactly corrupt_scale
+    assert not np.any(f["corrupt"] & (f["participation"] == 0))
+    np.testing.assert_array_equal(
+        f["update_scale"], np.where(f["corrupt"], 7.0, 1.0))
+    assert np.all((f["delays"] >= 1) & (f["delays"] <= 3))
+    # all fault classes actually occur at these rates over 256 slots
+    assert f["dropout"].sum() and f["straggler"].sum() and f["corrupt"].sum()
+
+
+# ---------------------------------------------------------------------------
+# bank semantics
+# ---------------------------------------------------------------------------
+
+def test_bank_gather_scatter_mask_semantics():
+    sim = _sim(C=3)
+    bank = ClientBank.from_sim(sim, n_total=8)
+    leaf0 = jax.tree.leaves(bank.adapters)[0]
+    assert leaf0.shape[0] == 8 and isinstance(leaf0, np.ndarray)
+
+    idx = np.asarray([1, 4, 6])
+    ad, ost = bank.gather(idx)
+    assert jax.tree.leaves(ad)[0].shape[0] == 3
+    before = jax.tree.map(np.copy, bank.adapters)
+
+    # perturb all three cohort slots, scatter back only slots 0 and 2
+    ad = jax.tree.map(lambda x: x + 1.0, ad)
+    bank.scatter(idx, ad, ost, round_idx=5,
+                 mask=np.asarray([True, False, True]))
+    for old, new in zip(jax.tree.leaves(before),
+                        jax.tree.leaves(bank.adapters)):
+        np.testing.assert_array_equal(new[[1, 6]], old[[1, 6]] + 1.0)
+        np.testing.assert_array_equal(new[4], old[4])     # masked-out
+        np.testing.assert_array_equal(new[[0, 2, 3, 5, 7]],
+                                      old[[0, 2, 3, 5, 7]])
+    np.testing.assert_array_equal(bank.last_sync,
+                                  [0, 5, 0, 0, 0, 0, 5, 0])
+    np.testing.assert_array_equal(bank.staleness([1, 4, 6], 7),
+                                  np.asarray([2.0, 7.0, 2.0], np.float32))
+
+
+def test_bank_rejects_mixed_rank_fleet():
+    sim = _sim(C=2, client_ranks=(2, 4))
+    with pytest.raises(ValueError, match="uniform-rank fleet"):
+        ClientBank.from_sim(sim, n_total=8)
+    with pytest.raises(ValueError, match="n_total"):
+        ClientBank.from_sim(_sim(C=2), n_total=0)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance round: straggler-dropout rounds converge, billing exact
+# ---------------------------------------------------------------------------
+
+def test_faulted_cohort_rounds_converge_with_exact_billing():
+    """ISSUE acceptance: a straggler/dropout/corruption round schedule
+    still drives the fleet's loss down, and every wire byte is accounted
+    for — live participants bill in-round, stragglers bill when their
+    buffered update *arrives*, dropped clients bill nothing."""
+    sim = _sim(method="lora_trimmed", C=4, local_steps=3, lr=5e-2)
+    cs = CohortSim(sim, n_total=6,
+                   faults=FaultPlan(dropout_rate=0.25, straggler_rate=0.25,
+                                    corrupt_rate=0.2, corrupt_scale=10.0,
+                                    straggler_delay=(1, 2), seed=3),
+                   seed=0)
+    unit = sim.client_comm_bytes()
+    batches = _batches(4, 3, seed=0)     # fixed batch → memorizable
+    ces, expected = [], 0
+    fates = set()
+    for r in range(12):
+        out = cs.run_round(batches, jax.random.PRNGKey(r))
+        live = int(out["participation"].sum())
+        expected += unit * (live + out["delivered_billed"])
+        ces.append(float(np.mean(out["metrics"]["ce"])))
+        assert np.all(np.isfinite(out["metrics"]["ce"]))
+        assert len(out["cohort"]) == 4
+        assert np.all(out["staleness"] >= 0)
+        fates |= {("drop", 4 - live - 0 >= 0)}
+        fates |= {("strag", out["pending"] > 0 or out["delivered"] > 0)}
+    assert sim.comm_bytes == expected
+    assert any(f == ("strag", True) for f in fates)   # plan actually fired
+    assert cs.round == 12
+    # convergence under faults: the tail of the run beats its start
+    assert np.mean(ces[-3:]) < ces[0] - 0.03
+    # stragglers really did resync late: some last_sync values lag round-1
+    synced = cs.bank.last_sync[cs.bank.last_sync > 0]
+    assert synced.size > 0
+
+
+def test_stale_delivery_is_billed_but_discarded():
+    """A straggler whose client re-participated (fresher sync) before the
+    buffered update matured: the upload is billed, the state discarded."""
+    sim = _sim(C=2, local_steps=1)
+    cs = CohortSim(sim, n_total=2, faults=FaultPlan(seed=0), seed=0)
+    batches = _batches(2, 1, seed=1)
+    cs.run_round(batches, jax.random.PRNGKey(0))     # honest round 0
+    # forge an in-flight delivery trained *before* round 0's sync
+    stale_ad = jax.tree.map(lambda x: np.asarray(x[0]) + 99.0,
+                            jax.device_get(sim.client_adapters))
+    stale_ost = jax.tree.map(lambda x: np.asarray(x[0]),
+                             jax.device_get(sim.opt_state))
+    cs._pending.append({"client": 0, "deliver_at": 1, "trained_round": -1,
+                        "adapters": stale_ad, "opt_state": stale_ost})
+    before_bytes = sim.comm_bytes
+    before_bank = jax.tree.map(np.copy, cs.bank.adapters)
+    out = cs.run_round(batches, jax.random.PRNGKey(1))
+    assert out["delivered_billed"] == 1 and out["delivered"] == 0
+    assert sim.comm_bytes > before_bytes           # wire billed anyway
+    # the forged +99 state never landed in the bank
+    for old, new in zip(jax.tree.leaves(before_bank),
+                        jax.tree.leaves(cs.bank.adapters)):
+        assert not np.any(np.abs(new) > np.abs(old).max() + 50.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_cohort_checkpoint_roundtrip(tmp_path):
+    sim = _sim(method="lora_fedbuff", C=3)
+    cs = CohortSim(sim, n_total=9,
+                   faults=FaultPlan(dropout_rate=0.3, straggler_rate=0.2,
+                                    seed=2), seed=4)
+    batches = _batches(3, 2, seed=2)
+    for r in range(3):
+        cs.run_round(batches, jax.random.PRNGKey(r))
+    path = str(tmp_path / "cohort.ckpt")
+    cs.save(path)
+
+    cs2 = CohortSim(_sim(method="lora_fedbuff", C=3), n_total=9,
+                    faults=cs.faults, seed=4)
+    assert cs2.load(path) == 3
+    assert cs2.round == 3 and cs2.sim.comm_bytes == sim.comm_bytes
+    np.testing.assert_array_equal(cs2.bank.last_sync, cs.bank.last_sync)
+    for a, b in zip(jax.tree.leaves(cs.bank.adapters),
+                    jax.tree.leaves(cs2.bank.adapters)):
+        np.testing.assert_array_equal(a, b)        # bitwise bank restore
+    for a, b in zip(jax.tree.leaves(cs.bank.opt_state),
+                    jax.tree.leaves(cs2.bank.opt_state)):
+        np.testing.assert_array_equal(a, b)
+    assert cs2._pending == []                      # in-flight not persisted
+    assert all(isinstance(x, np.ndarray)
+               for x in jax.tree.leaves(cs2.bank.adapters))  # host-resident
+    out = cs2.run_round(batches, jax.random.PRNGKey(3))      # resumable
+    assert np.all(np.isfinite(out["metrics"]["ce"]))
+
+
+# ---------------------------------------------------------------------------
+# telemetry surface
+# ---------------------------------------------------------------------------
+
+def test_cohort_telemetry_metrics_and_events(tmp_path):
+    from repro.launch.report import telemetry_section
+    from repro.obs import read_events
+
+    path = str(tmp_path / "cohort.jsonl")
+    sim = _sim(C=3)
+    cs = CohortSim(sim, n_total=8,
+                   faults=FaultPlan(dropout_rate=0.3, straggler_rate=0.3,
+                                    seed=1), seed=0)
+    batches = _batches(3, 1, seed=5)
+    obs.enable(path)
+    for r in range(4):
+        cs.run_round(batches, jax.random.PRNGKey(r))
+    snap = obs.emit_snapshot()
+    obs.disable()
+
+    g = snap["gauges"]["fed/participation_rate"]
+    assert g and 0.0 <= g[0]["value"] <= 1.0
+    (h,) = snap["histograms"]["fed/staleness_rounds"]
+    assert h["count"] >= 1
+    # staleness-shaped bounds, not the latency defaults: integer-round
+    # buckets like le_1 / le_2 exist, sub-ms buckets don't
+    assert set(h["buckets"]) <= {f"le_{b:g}" for b in STALENESS_BOUNDS} \
+        | {"le_inf"}
+    for name in ("fed/dropouts", "fed/stragglers"):
+        assert name in snap["counters"], name
+
+    evs = read_events(path, kind="fed_cohort")
+    assert len(evs) == 4
+    assert evs[0]["round"] == 0 and len(evs[0]["cohort"]) == 3
+    assert evs[-1]["comm_bytes"] == sim.comm_bytes
+    text = telemetry_section(path)
+    assert "### Cohort rounds (partial participation)" in text
+    assert "| lora | 0 | 3 |" in text
+
+
+def test_honest_cohort_emits_full_participation(tmp_path):
+    path = str(tmp_path / "honest.jsonl")
+    sim = _sim(C=2)
+    cs = CohortSim(sim, n_total=5, seed=0)        # no FaultPlan
+    obs.enable(path)
+    out = cs.run_round(_batches(2, 1), jax.random.PRNGKey(0))
+    snap = obs.emit_snapshot()
+    obs.disable()
+    assert out["participation"].all() and out["pending"] == 0
+    assert snap["gauges"]["fed/participation_rate"][0]["value"] == 1.0
+    assert "fed/dropouts" in snap["counters"]     # present, value 0
+    assert snap["counters"]["fed/dropouts"][0]["value"] == 0.0

@@ -73,6 +73,17 @@ mesh = make_client_mesh(C)
 rng = np.random.default_rng(0)
 
 
+def reseed(name):
+    # every case draws from its own name-keyed data stream: sweep
+    # results must not depend on registry order/size (a method added
+    # earlier in the alphabet would otherwise shift every later case's
+    # batches, and the ~ulp parity tolerances are marginal enough for
+    # that to matter)
+    import zlib
+    global rng
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
+
+
 def make_batches():
     return [{"tokens": jnp.asarray(
                  rng.integers(5, cfg.vocab_size, size=(C, B, S)), jnp.int32),
@@ -112,6 +123,7 @@ def compare(name, prod, ref):
 
 
 def run_case(name, ranks=None, weights=None, prox_mu=0.0):
+    reseed(name)
     hp = FedHyper(method=name, n_clients=C, local_steps=T, batch=B,
                   seq_len=S, lr=1e-2, prox_mu=prox_mu, client_ranks=ranks,
                   client_weights=weights)
@@ -163,6 +175,7 @@ def keep_leaves(method, tree):
 
 def run_pipeline_case(name, ranks=None, weights=None, prox_mu=0.0):
     from repro.launch.train import make_fed_pipeline_step
+    reseed(name)
     method = get_method(name)
     hp = FedHyper(method=name, n_clients=C, local_steps=T, batch=B,
                   seq_len=S, lr=1e-2, server_lr=5e-3, global_steps=TG,
@@ -221,7 +234,7 @@ for name in names:
     run_case(name, prox_mu=0.05 if m.prox else 0.0)
 print("SWEPT", len(names))
 """)
-    assert "SWEPT 13" in out, out
+    assert "SWEPT 14" in out, out
 
 
 @pytest.mark.slow
@@ -378,7 +391,7 @@ for name in names:
     run_pipeline_case(name, prox_mu=0.05 if m.prox else 0.0)
 print("PIPE-SWEPT", len(names))
 """, timeout=1800)
-    assert "PIPE-SWEPT 13" in out, out
+    assert "PIPE-SWEPT 14" in out, out
 
 
 @pytest.mark.slow
@@ -399,6 +412,71 @@ run_pipeline_case("lora", weights=(1., 2., 3., 4.))
 print("PIPE-HET-OK")
 """, timeout=1800)
     assert "PIPE-HET-OK" in out, out
+
+
+@pytest.mark.slow
+def test_collective_parity_faulted_and_async_rounds():
+    """Cohort-fault parity: the production round with participation /
+    staleness / update_scale vectors matches ``FedSim.run_cohort_round``
+    on identical state across three aggregation classes — weighted
+    FedAvg with dropouts, trimmed-mean with corrupted-update
+    adversaries, and FedBuff staleness-discounted (async/buffered)
+    rounds.  Fault vectors change per round, so the static ``use_faults``
+    gate and the call-time weight threading both get exercised across a
+    retrace boundary."""
+    out = _run(PARITY_HARNESS + r"""
+def run_fault_case(name, weights=None, fault_rounds=()):
+    reseed(name)
+    hp = FedHyper(method=name, n_clients=C, local_steps=T, batch=B,
+                  seq_len=S, lr=1e-2, client_weights=weights)
+    sim = FedSim(cfg, hp)
+    st = TrainSettings(lr=hp.lr, micro_batches=1, clip=hp.clip, remat=False,
+                       method=name, local_steps=T, client_weights=weights)
+    step_fn, _ = make_fed_train_step(cfg, mesh, st)
+    na, no = sim.client_adapters, sim.opt_state
+    step0 = jnp.zeros((), jnp.int32)
+    bytes_before = sim.comm_bytes
+    for r, f in enumerate(fault_rounds):
+        batches = make_batches()
+        big = {k: jnp.concatenate([b[k] for b in batches], axis=1)
+               for k in batches[0]}
+        def arr(k):
+            v = f.get(k)
+            return None if v is None else jnp.asarray(v, jnp.float32)
+        na, no, met = step_fn(sim.base, na, no, step0, big,
+                              participation=arr("participation"),
+                              staleness=arr("staleness"),
+                              update_scale=arr("update_scale"))
+        sim.run_cohort_round(batches, jax.random.PRNGKey(r),
+                             participation=f.get("participation"),
+                             staleness=f.get("staleness"),
+                             update_scale=f.get("update_scale"))
+        step0 = step0 + T
+        assert np.isfinite(float(met["ce"])), (name, r)
+    compare(name, na, sim.client_adapters)
+    # billing followed participation: only live clients paid the wire
+    live = sum(sum(1 for p in f.get("participation", (1.,) * C) if p > 0)
+               for f in fault_rounds)
+    assert sim.comm_bytes - bytes_before == live * sim.client_comm_bytes(), \
+        (name, sim.comm_bytes - bytes_before, live)
+    print("FAULT-OK", name)
+
+
+run_fault_case("lora", weights=(1., 2., 3., 4.),
+               fault_rounds=[{"participation": (1., 0., 1., 1.)},
+                             {"participation": (0., 1., 1., 0.)}])
+run_fault_case("lora_trimmed",
+               fault_rounds=[{"participation": (1., 1., 1., 1.),
+                              "update_scale": (1., 25., 1., 1.)},
+                             {"participation": (1., 0., 1., 1.),
+                              "update_scale": (1., 1., 40., 1.)}])
+run_fault_case("lora_fedbuff",
+               fault_rounds=[{"participation": (1., 1., 0., 1.),
+                              "staleness": (0., 2., 5., 1.)},
+                             {"participation": (1., 1., 1., 0.),
+                              "staleness": (3., 0., 0., 7.)}])
+""")
+    assert out.count("FAULT-OK") == 3, out
 
 
 def test_fed_train_step_rejects_bad_fleets():

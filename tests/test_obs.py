@@ -310,3 +310,103 @@ def test_telemetry_section_renders_jsonl(tmp_path):
 
 def test_telemetry_section_empty():
     assert "_no telemetry events_" in telemetry_section([])
+
+
+# ---------------------------------------------------------------------------
+# sub-ms bucket resolution + per-histogram bounds override
+# ---------------------------------------------------------------------------
+
+def test_sub_ms_latencies_land_in_distinct_buckets():
+    """Regression: an 80 µs and a 600 µs span used to collapse into one
+    "< 1 ms" bucket.  Both the refined defaults and LATENCY_BOUNDS must
+    keep them apart."""
+    reg = MetricsRegistry()
+    h = reg.histogram("span_seconds")                 # refined defaults
+    h.observe(80e-6, span="serve/prefill")
+    h.observe(600e-6, span="serve/prefill")
+    (s,) = h.snapshot()
+    assert s["buckets"] == {"le_0.0001": 1, "le_0.001": 1}
+
+    lo = reg.histogram("serve/admission_wait_seconds", obs.LATENCY_BOUNDS)
+    lo.observe(8e-6)
+    lo.observe(80e-6)
+    lo.observe(600e-6)
+    (s,) = lo.snapshot()
+    assert s["buckets"] == {"le_1e-05": 1, "le_0.0001": 1, "le_0.001": 1}
+    assert obs.LATENCY_BOUNDS[0] < obs.DEFAULT_BOUNDS[0]
+
+
+def test_observe_bounds_override_first_creation_wins(tmp_path):
+    obs.enable(str(tmp_path / "b.jsonl"))
+    obs.observe("custom/lat", 0.3, bounds=(0.25, 0.5, 1.0))
+    obs.observe("custom/lat", 0.4, bounds=(9.0,))    # ignored: name exists
+    obs.observe("custom/lat", 2.0)                   # default arg: same hist
+    snap = obs.emit_snapshot()
+    obs.disable()
+    (s,) = snap["histograms"]["custom/lat"]
+    assert s["count"] == 3
+    assert s["buckets"] == {"le_0.5": 2, "le_inf": 1}
+
+
+def test_telemetry_section_histogram_table_separates_sub_ms(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    obs.enable(path)
+    obs.observe("serve/prefill_seconds", 80e-6, bounds=obs.LATENCY_BOUNDS)
+    obs.observe("serve/prefill_seconds", 600e-6, bounds=obs.LATENCY_BOUNDS)
+    obs.emit_snapshot()
+    obs.disable()
+    text = telemetry_section(path)
+    assert "### Histograms" in text
+    # two sub-ms observations render as two distinct bucket cells
+    assert "0.0001:1" in text and "0.001:1" in text
+    assert "| serve/prefill_seconds |" in text
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+def test_to_prometheus_text_format():
+    reg = MetricsRegistry()
+    reg.counter("fed/comm_bytes").inc(4096, method="lora")
+    reg.gauge("serve/queue_depth").set(3)
+    h = reg.histogram("span_seconds", (0.001, 0.01, 0.1))
+    for v in (0.0005, 0.005, 0.008, 0.5):
+        h.observe(v, span="fed/round")
+    text = obs.to_prometheus(reg.snapshot())
+    lines = text.splitlines()
+    assert text.endswith("\n")
+    assert "# TYPE repro_fed_comm_bytes counter" in lines
+    assert 'repro_fed_comm_bytes{method="lora"} 4096' in lines
+    assert "# TYPE repro_serve_queue_depth gauge" in lines
+    assert "repro_serve_queue_depth 3" in lines
+    assert "# TYPE repro_span_seconds histogram" in lines
+    # buckets are cumulative and close with +Inf == count
+    assert 'repro_span_seconds_bucket{span="fed/round",le="0.001"} 1' in lines
+    assert 'repro_span_seconds_bucket{span="fed/round",le="0.01"} 3' in lines
+    assert 'repro_span_seconds_bucket{span="fed/round",le="+Inf"} 4' in lines
+    assert 'repro_span_seconds_count{span="fed/round"} 4' in lines
+    sum_line = [ln for ln in lines
+                if ln.startswith('repro_span_seconds_sum')][0]
+    np.testing.assert_allclose(float(sum_line.split()[-1]), 0.5135)
+    assert obs.to_prometheus(MetricsRegistry().snapshot()) == ""
+
+
+def test_serve_run_writes_prom_file(tmp_path, monkeypatch):
+    prom = tmp_path / "metrics.prom"
+    monkeypatch.setenv("REPRO_PROM_PATH", str(prom))
+    base = M.init_params(jax.random.PRNGKey(0), CFG)
+    shared = pt.tree_map_with_path(
+        lambda p, x: x + 0.25 if p.endswith("B_mag") else x,
+        peft.add_lora(base, CFG, jax.random.PRNGKey(1), decomposed=True))
+    obs.enable(str(tmp_path / "s.jsonl"))
+    _run_serve(base, shared)
+    obs.disable()
+    assert prom.exists()
+    text = prom.read_text()
+    assert "# TYPE repro_serve_requests_admitted counter" in text \
+        or "repro_" in text.splitlines()[0]
+    # sub-ms serve spans made it into exposition with cumulative buckets
+    assert "repro_serve_prefill_seconds_bucket" in text
+    assert 'le="+Inf"' in text
+    assert not (tmp_path / "metrics.prom.tmp").exists()  # atomic rename

@@ -199,3 +199,39 @@ def test_quantized_engine_matches_quantized_reference():
     ref = greedy_generate(quantize_backbone(base, "int8"),
                           {"tokens": jnp.asarray(prompts)}, CFG, n_new=5)
     np.testing.assert_array_equal(out, np.asarray(ref[0]))
+
+
+def test_backbone_quant_group_threads_to_engine():
+    """``ArchConfig.backbone_quant_group`` must reach the engine-build
+    ``quantize_backbone`` call: a grouped engine serves exactly what
+    greedy decoding over the *grouped* quantized tree serves, and the
+    grouped codec is a genuinely different program (finer scale grid,
+    different codes) than the per-channel default."""
+    from repro.launch.serve import greedy_generate
+    from repro.serve import AdapterStore, ServeEngine
+
+    assert CFG.backbone_quant_group is None          # default: per-channel
+    base = M.init_params(jax.random.PRNGKey(0), CFG)
+
+    perchan = quantize_backbone(base, "int8")
+    grouped = quantize_backbone(base, "int8", group_size=16)
+    for p in pt.tree_paths(grouped):
+        if p.endswith("kernel_scale"):
+            gs, ps = pt.tree_get(grouped, p), pt.tree_get(perchan, p)
+            assert gs.shape[-2] == ps.shape[-2] * (gs.size // ps.size), p
+            assert gs.size > ps.size                 # finer grid
+    diff = any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(grouped),
+                               jax.tree.leaves(perchan)))
+    assert diff
+
+    qcfg = dataclasses.replace(CFG, backbone_quant="int8",
+                               backbone_quant_group=16)
+    store = AdapterStore(base, CFG, n_slots=2, kind="pairs")
+    eng = ServeEngine(base, qcfg, store, max_rows=2, max_prompt_len=8,
+                      max_len=24, decode_chunk=4)
+    prompts = np.asarray(RNG.integers(5, 64, size=(1, 8)), np.int32)
+    out = eng.generate([(None, prompts[0])], n_new=5)[0]
+    ref = greedy_generate(grouped, {"tokens": jnp.asarray(prompts)},
+                          CFG, n_new=5)
+    np.testing.assert_array_equal(out, np.asarray(ref[0]))
