@@ -1,4 +1,4 @@
-.PHONY: test test-serve test-het test-dist test-quant test-obs test-scale test-fast perf serve-bench bench-smoke
+.PHONY: test test-serve test-het test-dist test-quant test-obs test-scale test-tier test-fast perf serve-bench bench-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -33,6 +33,11 @@ test-obs:
 test-scale:
 	bash scripts/ci.sh --scale
 
+# tiered adapter pool (T2→T1→T0 promotion parity, queue-informed
+# eviction, async prefetch determinism, tier checkpoints + base pool)
+test-tier:
+	bash scripts/ci.sh --tier
+
 # tier-1 minus the slow sweeps and the multi-device dist tests
 test-fast:
 	bash scripts/ci.sh --fast
@@ -50,5 +55,5 @@ serve-bench:
 # entry also leaves its telemetry JSONL artifact at
 # experiments/bench/obs_telemetry.jsonl
 bench-smoke:
-	PYTHONPATH=src python -m benchmarks.run --only perf,het,cohort,dist,pipeline,quant,obs --fresh
+	PYTHONPATH=src python -m benchmarks.run --only perf,het,cohort,dist,pipeline,quant,obs,tier --fresh
 	PYTHONPATH=src python scripts/check_bench.py

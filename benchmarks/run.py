@@ -18,7 +18,7 @@ import time
 from repro.obs import MetricsRegistry
 
 ALL = ("table1", "table2", "fig1", "fig3", "perf", "het", "cohort",
-       "dist", "pipeline", "quant", "serve", "obs", "roofline")
+       "dist", "pipeline", "quant", "serve", "tier", "obs", "roofline")
 
 
 def main():
@@ -132,6 +132,14 @@ def main():
         results["serve"] = rows
         for r in rows:
             record(r['arch'], r['us'], f"tokens_s={r['tokens_s']:.1f}")
+    if "tier" in which:
+        from benchmarks import serve_multitenant
+        rows = cached("tier", lambda: serve_multitenant.run_churn()[0])
+        results["tier"] = rows
+        for r in rows:
+            extra = (f";ratio={r['ratio']:.2f}" if "ratio" in r else "")
+            record(r['arch'], r['us'],
+                   f"tokens_s={r['tokens_s']:.1f}" + extra)
     if "obs" in which:
         from benchmarks import perf_micro
         rows = cached("obs", lambda: perf_micro.run_obs()[0])

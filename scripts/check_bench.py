@@ -2,7 +2,7 @@
 """CI benchmark smoke gate.
 
 Reads the JSON the benchmark harness wrote (``python -m benchmarks.run
---only perf,het,cohort,dist,pipeline,quant,obs --fresh`` →
+--only perf,het,cohort,dist,pipeline,quant,obs,tier --fresh`` →
 experiments/bench/) and fails if a gated ratio regressed past its
 checked-in bar:
 
@@ -21,7 +21,13 @@ checked-in bar:
     buffering) must stay within ``max_ratio`` of the bare
     full-participation round at equal cohort size (PR-8 trajectory;
     see docs/distributed_training.md — fleet scale-out is host work,
-    not a second jitted program).
+    not a second jitted program);
+  * ``baselines/tier_churn.json`` — the tiered adapter pool
+    (PR-9 trajectory; see docs/serving.md): warm-T0 lookups through
+    the TieredAdapterStore must stay within ``max_warm_ratio`` of the
+    flat pool, and Zipf churn over the 10k-tenant registry must keep
+    at least ``min_churn_ratio`` of the all-resident throughput —
+    promotions must remain a batched between-chunks host epilogue.
 
 Exit status is the contract: 0 = within the bar, 1 = regression or
 missing results.  The CI lane uploads experiments/bench/ as an artifact
@@ -45,8 +51,8 @@ def _load(name: str, results: str):
     if not os.path.exists(path):
         print(f"[check_bench] FAIL: no benchmark results at {path} — "
               "run `make bench-smoke` (= `python -m benchmarks.run --only "
-              "perf,het,cohort,dist,pipeline,quant,obs --fresh` + this "
-              "check) first")
+              "perf,het,cohort,dist,pipeline,quant,obs,tier --fresh` + "
+              "this check) first")
         return base, None
     with open(path) as f:
         return base, json.load(f)
@@ -147,11 +153,54 @@ def check_cohort() -> bool:
     return True
 
 
+def check_tier() -> bool:
+    base, rows = _load("tier_churn.json", "tier.json")
+    if rows is None:
+        return False
+    recorded = base["recorded"]
+    ok = True
+    warm = [r for r in rows if r.get("arch") == "serve/tier_warm"]
+    if not warm:
+        print("[check_bench] FAIL: no serve/tier_warm row in tier.json")
+        ok = False
+    else:
+        ratio = float(warm[0]["ratio"])
+        bar = float(base["max_warm_ratio"])
+        print(f"[check_bench] tier warm-T0 ratio {ratio:.3f}x "
+              f"(bar {bar:.2f}x; recorded {recorded['warm_ratio']:.2f}x "
+              f"in PR {recorded['pr']})")
+        if ratio > bar:
+            print("[check_bench] FAIL: warm-T0 lookups through the tiered "
+                  "store regressed past the bar — tier bookkeeping (dict "
+                  "walks, prefetch drains, telemetry) leaked into the "
+                  "steady-state decode loop")
+            ok = False
+    churn = [r for r in rows if r.get("arch") == "serve/tier_churn"]
+    if not churn:
+        print("[check_bench] FAIL: no serve/tier_churn row in tier.json")
+        ok = False
+    else:
+        ratio = float(churn[0]["ratio"])
+        bar = float(base["min_churn_ratio"])
+        print(f"[check_bench] tier churn throughput {ratio:.2f}x of "
+              f"all-resident (bar {bar:.2f}x; recorded "
+              f"{recorded['churn_ratio']:.2f}x in PR {recorded['pr']})")
+        if ratio < bar:
+            print("[check_bench] FAIL: Zipf churn over the 10k-tenant "
+                  "registry fell below the bar — hot-swap stopped being a "
+                  "batched between-chunks epilogue (per-request device "
+                  "puts, a recompile, or synchronous shard reads on the "
+                  "decode path)")
+            ok = False
+    return ok
+
+
 def main() -> int:
     ok = check_het()
     ok = check_quant() and ok
     ok = check_obs() and ok
     ok = check_cohort() and ok
+    ok = check_tier() and ok
     if not ok:
         return 1
     print("[check_bench] OK")

@@ -25,6 +25,11 @@
 #                              # + straggler billing (test_cohort.py),
 #                              # plus the faulted/async production-vs-
 #                              # oracle parity case from the dist suite
+#   scripts/ci.sh --tier       # tiered adapter pool: T2→T1→T0 promotion
+#                              # parity, queue-informed eviction, async
+#                              # prefetch determinism, tier checkpoints
+#                              # (test_tiered_store.py) + the flat-pool
+#                              # base suite it extends
 #   scripts/ci.sh --fast       # tier-1 minus the slow sweeps and the
 #                              # multi-device dist tests
 #                              # (-m 'not slow and not dist')
@@ -80,6 +85,14 @@ case "${1:-}" in
     exec python -m pytest -x -q tests/test_cohort.py \
       "tests/test_distributed.py::test_collective_parity_faulted_and_async_rounds" \
       "$@"
+    ;;
+  --tier)
+    shift
+    # the tiered store subclasses the flat pool, so the base suite rides
+    # along: a base-class regression (slot math, packing, eviction) is a
+    # tier regression even when the tiered file still passes
+    exec python -m pytest -x -q tests/test_tiered_store.py \
+      tests/test_adapter_store.py "$@"
     ;;
   --fast)
     shift

@@ -1,1 +1,3 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    has_shard, list_shards, load_checkpoint_flat, load_shard_flat,
+    restore_checkpoint, save_checkpoint, save_shard, shard_path)

@@ -62,6 +62,72 @@ def checkpoint_leaf_paths(path: str) -> list[str]:
     return sorted(payload["leaves"])
 
 
+def load_checkpoint_flat(path: str) -> tuple[dict, int]:
+    """Load a checkpoint as a flat ``{leaf_path: np.ndarray}`` dict plus
+    its step, with no ``like`` template.  The shape-flexible read path:
+    callers whose state has a variable-length axis between save and load
+    (e.g. CohortSim's in-flight straggler buffers, AdapterStore tier-2
+    shards) reconstruct their structure from the paths instead of
+    asserting shapes against a template."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat = {p: _unpack_leaf(rec) for p, rec in payload["leaves"].items()}
+    if obs.enabled():
+        obs.event("ckpt_restore", path=str(path),
+                  step=int(payload["step"]), leaves=len(flat))
+        obs.inc("ckpt/restores")
+    return flat, payload["step"]
+
+
+# ---------------------------------------------------------------------------
+# per-key shards — the AdapterStore's tier-2 layout
+# ---------------------------------------------------------------------------
+#
+# One tiny msgpack checkpoint per key (tenant id), written through the
+# same codec as full checkpoints.  Keys are arbitrary 1..64-byte utf-8
+# strings (the AdapterStore tenant-id contract), so filenames are the
+# hex encoding of the utf-8 bytes — reversible, case-safe, and free of
+# path separators.
+
+_SHARD_EXT = ".msgpack"
+
+
+def shard_path(shard_dir: str, key: str) -> str:
+    """Filesystem path of ``key``'s shard under ``shard_dir``."""
+    return os.path.join(shard_dir, key.encode("utf-8").hex() + _SHARD_EXT)
+
+
+def save_shard(shard_dir: str, key: str, tree: Any, step: int = 0) -> None:
+    """Write one key's pytree as a per-key shard (atomic, same codec as
+    ``save_checkpoint``)."""
+    save_checkpoint(shard_path(shard_dir, key), tree, step=step)
+
+
+def load_shard_flat(shard_dir: str, key: str) -> tuple[dict, int]:
+    """Lazy per-key load: one shard as a flat ``{path: array}`` dict."""
+    return load_checkpoint_flat(shard_path(shard_dir, key))
+
+
+def has_shard(shard_dir: str, key: str) -> bool:
+    return os.path.exists(shard_path(shard_dir, key))
+
+
+def list_shards(shard_dir: str) -> list[str]:
+    """Decode every shard filename under ``shard_dir`` back to its key
+    (sorted).  Non-shard files are ignored."""
+    if not os.path.isdir(shard_dir):
+        return []
+    keys = []
+    for name in os.listdir(shard_dir):
+        if not name.endswith(_SHARD_EXT):
+            continue
+        try:
+            keys.append(bytes.fromhex(name[:-len(_SHARD_EXT)]).decode("utf-8"))
+        except ValueError:
+            continue
+    return sorted(keys)
+
+
 def restore_checkpoint(path: str, like: Any, shardings: Any = None,
                        strict: bool = True, allow_missing: str | None = None,
                        to_host: bool = False):
@@ -108,7 +174,12 @@ def restore_checkpoint(path: str, like: Any, shardings: Any = None,
 
     host_tree = tree_map_with_path(fn, like)
     if to_host:
-        host_tree = jax.tree.map(np.asarray, host_tree)
+        # np.array, not np.asarray: unpacked leaves are read-only views
+        # over the msgpack payload, and host-resident state (ClientBank)
+        # is mutated in place after restore — a view would make the
+        # first post-restore scatter raise "assignment destination is
+        # read-only" (and would pin the whole payload buffer alive)
+        host_tree = jax.tree.map(np.array, host_tree)
         if obs.enabled():
             obs.event("ckpt_restore", path=str(path),
                       step=int(payload["step"]), leaves=len(recs))

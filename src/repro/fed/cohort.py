@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.utils import pytree as pt
 
 # Bucket bounds for the fed/staleness_rounds histogram: staleness is a
 # small integer (rounds since last sync), so the default latency-shaped
@@ -253,11 +254,15 @@ class CohortSim:
     is buffered host-side for delayed delivery, and participants scatter
     back with ``last_sync = round``.
 
-    Checkpoint scope: the bank + round counter + comm bill.  In-flight
-    straggler buffers are deliberately NOT saved — a delivery lost to a
-    restart is indistinguishable from a dropout, which the aggregation
-    already tolerates; persisting per-delivery client trees would double
-    the checkpoint for a fault class the system absorbs anyway.
+    Checkpoint scope: the bank + round counter + comm bill + in-flight
+    straggler buffers.  The buffers ride along as stacked host trees
+    (one ``(P, ...)`` leaf per adapter/opt leaf, P = deliveries in
+    flight) so a restart mid-delay still delivers — and bills — each
+    buffered update at its original delivery round instead of silently
+    converting stragglers into dropouts.  The stacked leaves are
+    variable-length, so ``load`` reads them through the flat
+    (template-free) checkpoint path; checkpoints written before this
+    field existed restore with no pending deliveries, as before.
     """
 
     def __init__(self, sim, n_total: int, faults: FaultPlan | None = None,
@@ -378,15 +383,68 @@ class CohortSim:
 
     def save(self, path: str) -> None:
         from repro.checkpoint.ckpt import save_checkpoint
-        save_checkpoint(path, self.state_tree(), step=self.round)
+        tree = self.state_tree()
+        if self._pending:
+            # stack the in-flight deliveries on a lead P axis; P varies
+            # between checkpoints, so load() reads these back through the
+            # flat (template-free) path instead of state_tree()
+            tree["pending"] = {
+                "client": np.array([d["client"] for d in self._pending],
+                                   np.int64),
+                "deliver_at": np.array([d["deliver_at"]
+                                        for d in self._pending], np.int64),
+                "trained_round": np.array([d["trained_round"]
+                                           for d in self._pending], np.int64),
+                "adapters": jax.tree.map(
+                    lambda *xs: np.stack(xs),
+                    *[d["adapters"] for d in self._pending]),
+                "opt_state": jax.tree.map(
+                    lambda *xs: np.stack(xs),
+                    *[d["opt_state"] for d in self._pending]),
+            }
+        save_checkpoint(path, tree, step=self.round)
 
     def load(self, path: str) -> int:
-        from repro.checkpoint.ckpt import restore_checkpoint
-        tree, _ = restore_checkpoint(path, self.state_tree(), to_host=True)
+        from repro.checkpoint.ckpt import (load_checkpoint_flat,
+                                           restore_checkpoint)
+        tree, _ = restore_checkpoint(path, self.state_tree(), to_host=True,
+                                     # pre-pending checkpoints lack these
+                                     # leaves; extra ckpt leaves are also
+                                     # ignored by the template restore
+                                     strict=True)
         self.bank.adapters = tree["bank"]["adapters"]
         self.bank.opt_state = tree["bank"]["opt_state"]
         self.bank.last_sync = np.asarray(tree["bank"]["last_sync"], np.int64)
         self.round = int(tree["round"])
         self.sim.comm_bytes = int(tree["comm_bytes"])
-        self._pending = []
+        self._pending = self._load_pending(load_checkpoint_flat(path)[0])
         return self.round
+
+    def _load_pending(self, flat: dict) -> list[dict]:
+        """Rebuild the in-flight straggler list from a checkpoint's flat
+        leaves (empty for checkpoints written before pending persisted).
+        The bank's own trees template the structure — optimizer state is
+        a namedtuple pytree, which flat paths alone can't reconstruct."""
+        if "pending/client" not in flat:
+            return []
+        clients = np.asarray(flat["pending/client"], np.int64)
+        deliver = np.asarray(flat["pending/deliver_at"], np.int64)
+        trained = np.asarray(flat["pending/trained_round"], np.int64)
+
+        def unstack(template, head):
+            return pt.tree_map_with_path(
+                lambda p, _leaf: np.asarray(flat[head + p]), template)
+
+        stacked_ad = unstack(self.bank.adapters, "pending/adapters/")
+        stacked_ost = unstack(self.bank.opt_state, "pending/opt_state/")
+        pending = []
+        for i in range(clients.shape[0]):
+            def take(leaf, i=i):
+                return np.asarray(leaf[i])
+            pending.append({
+                "client": int(clients[i]),
+                "deliver_at": int(deliver[i]),
+                "trained_round": int(trained[i]),
+                "adapters": jax.tree.map(take, stacked_ad),
+                "opt_state": jax.tree.map(take, stacked_ost)})
+        return pending

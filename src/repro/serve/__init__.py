@@ -3,12 +3,16 @@
 One frozen backbone, many tiny per-tenant adapters, one mixed batch:
 
   adapter_store  — packs per-tenant LoRA / decomposed-DoRA adapters into
-                   stacked pools [n_slots, ...] with LRU register/evict
+                   stacked pools [n_slots, ...] with LRU register/evict;
+                   TieredAdapterStore pages 10k+ tenants through a
+                   host-RAM cache (T1) and per-tenant disk shards (T2)
+                   with batched hot-swap and async prefetch
   batcher        — continuous batcher: admits tenant-tagged requests
                    into free rows of a persistent batch
   engine         — prefill/decode loop threading per-row adapter_idx
                    through the model (BGMV kernel or einsum fallback)
 """
-from repro.serve.adapter_store import AdapterStore  # noqa: F401
+from repro.serve.adapter_store import (AdapterStore,  # noqa: F401
+                                       TieredAdapterStore)
 from repro.serve.batcher import ContinuousBatcher, Request  # noqa: F401
 from repro.serve.engine import ServeEngine  # noqa: F401

@@ -41,10 +41,36 @@ Register/evict is LRU over slots; ``save``/``load`` round-trip the pools
 plus the tenant table through ``checkpoint/ckpt.py`` (tenant ids are
 encoded as fixed-width uint8 rows so every checkpoint leaf stays a plain
 numeric array).
+
+``TieredAdapterStore`` grows the same pool into a three-tier cache for
+fleets far larger than the device pool (the ROADMAP's million-tenant
+north star — at 4·r bytes of ΔB_M per tenant, host RAM holds millions):
+
+    T0  the fixed-shape device pool above (n_slots hot tenants)
+    T1  host-RAM cache: packed numpy leaves keyed by tenant id,
+        capacity-bounded with its own LRU eviction (spill → T2)
+    T2  per-tenant checkpoint shards on disk (``checkpoint.save_shard``)
+
+Promotion on a T0 miss is T2→T1→T0; ``install_batch`` installs every
+adapter the next batcher chunk needs in ONE donated device scatter per
+pool leaf between decode chunks (pools stay fixed-shape — nothing
+recompiles), and an async prefetcher (background thread + double-
+buffered host staging) pulls queued tenants' shards toward T1 while the
+decode scan runs, so by install time the promotion is a host-memory hit
+instead of a blocking disk read.  Victim choice is queue-informed:
+active-row tenants are hard-pinned, tenants sitting in the batcher
+queue are only evicted when no unqueued victim exists, and LRU recency
+breaks the remaining ties.
 """
 from __future__ import annotations
 
+import os
+import queue
+import threading
+import time
 import warnings
+from collections import OrderedDict
+from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -52,8 +78,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.checkpoint.ckpt import (checkpoint_leaf_paths, restore_checkpoint,
-                                   save_checkpoint)
+from repro.checkpoint.ckpt import (checkpoint_leaf_paths,
+                                   list_shards, load_checkpoint_flat,
+                                   load_shard_flat, restore_checkpoint,
+                                   save_checkpoint, save_shard)
 from repro.core.peft import _target_kernels
 from repro.models.config import ArchConfig
 from repro.utils import pytree as pt
@@ -155,6 +183,9 @@ class AdapterStore:
         # per-slot adapter ranks (null slot stays 0: an all-zero rank-0
         # identity); tenants below r_max are zero-padded into their slot
         self._slot_ranks = np.zeros((n_slots + 1,), np.int32)
+        # bumped on every pool/rank-table mutation — ServeEngine keys its
+        # merged-params cache on this so unchanged pools skip the merge
+        self.version = 0
 
     # ------------------------------------------------------------------
     # slot management
@@ -197,6 +228,7 @@ class AdapterStore:
         lead, _, _ = self.targets[prefix]
         idx = (slice(None), slot) if lead else (slot,)
         pool[key] = pool[key].at[idx].set(val)
+        self.version += 1
 
     def evict(self, tenant: str) -> None:
         slot = self._slot_of.pop(tenant)
@@ -229,6 +261,51 @@ class AdapterStore:
         the client's own rank are zero), so the shape alone over-states
         the rank and the BGMV mask would not truncate.  Raises ValueError
         on rank/target mismatch."""
+        packed, r_t = self._pack_adapter(tenant, adapter, rank)
+        slot = self._alloc(tenant)
+        for prefix, leaves in packed.items():
+            for key, val in leaves.items():
+                self._set_slot(prefix, key, slot, val)
+        self._slot_of[tenant] = slot
+        self._tenant_of[slot] = tenant
+        self._slot_ranks[slot] = r_t
+        self._touch(slot)
+        if obs.enabled():
+            obs.inc("pool/registers", kind=self.kind)
+            obs.set_gauge("pool/occupancy",
+                          len(self._tenant_of) / self.n_slots, kind=self.kind)
+            obs.event("pool_register", tenant=tenant, slot=slot,
+                      rank=int(self._slot_ranks[slot]), pool=self.kind)
+        return slot
+
+    # ------------------------------------------------------------------
+    # batch install / prefetch — the tier-aware surface ServeEngine uses
+    # ------------------------------------------------------------------
+
+    def install_batch(self, tenants, *, pinned=(), queued=()) -> dict[str, int]:
+        """Make every tenant resident in the device pool and return
+        ``{tenant: slot}``.  The flat store has exactly one tier, so this
+        is a recency-bumping lookup (a never-registered tenant raises
+        KeyError); ``pinned``/``queued`` are victim-selection hints for
+        the tiered override and are ignored here."""
+        return {t: self.slot_of(t) for t in tenants}
+
+    def prefetch(self, tenants) -> None:
+        """Hint that ``tenants`` will be needed by an upcoming chunk.
+        No-op for the flat store; ``TieredAdapterStore`` hands them to
+        its background shard loader."""
+
+    def drain_prefetch(self) -> None:
+        """Fold completed prefetches into the host cache (tier store);
+        no-op here."""
+
+    def _pack_adapter(self, tenant: str, adapter: Params,
+                      rank: int = 0) -> tuple[dict, int]:
+        """Validate + pack one tenant's adapter into HOST numpy leaves,
+        keyed ``{target_prefix: {pool_key: array}}``; returns (packed,
+        true_rank).  Pure host work — no device dispatch — so bulk
+        registration (the tiered store's 10k-tenant fleets) never blocks
+        on the accelerator."""
         _encode_id(tenant)                            # validate early
         packed, t_ranks = {}, set()
         for p in self.targets:
@@ -248,23 +325,9 @@ class AdapterStore:
         if extra:
             raise ValueError(f"adapter has leaves outside the store's "
                              f"targets: {extra[:3]}")
-        slot = self._alloc(tenant)
-        for prefix, leaves in packed.items():
-            for key, val in leaves.items():
-                self._set_slot(prefix, key, slot, val)
-        self._slot_of[tenant] = slot
-        self._tenant_of[slot] = tenant
-        self._slot_ranks[slot] = t_ranks.pop()
-        self._touch(slot)
-        if obs.enabled():
-            obs.inc("pool/registers", kind=self.kind)
-            obs.set_gauge("pool/occupancy",
-                          len(self._tenant_of) / self.n_slots, kind=self.kind)
-            obs.event("pool_register", tenant=tenant, slot=slot,
-                      rank=int(self._slot_ranks[slot]), pool=self.kind)
-        return slot
+        return packed, t_ranks.pop()
 
-    def _pad_rank(self, x, axis: int):
+    def _pad_rank(self, x: np.ndarray, axis: int) -> np.ndarray:
         """Zero-pad a rank-``r_t`` leaf up to the pool's r_max along
         ``axis`` (negative).  Raises (with 'mismatch' in the message) when
         the leaf exceeds the pool allocation."""
@@ -276,7 +339,7 @@ class AdapterStore:
             return x
         pad = [(0, 0)] * x.ndim
         pad[x.ndim + axis] = (0, self.rank - r_t)
-        return jnp.pad(x, pad)
+        return np.pad(x, pad)
 
     def _pack_one(self, prefix: str, adapter: Params) -> tuple[dict, int]:
         """Pack one target's leaves for a slot; returns (leaves, rank)."""
@@ -299,16 +362,21 @@ class AdapterStore:
             # rank mask covers the magnitude rows too — padded rows,
             # stale rows, and the null slot all contribute exactly zero
             return {"pool_dB_mag": self._pad_rank(
-                jnp.asarray(db, jnp.float32), -1)}, r_t
+                np.asarray(db, np.float32), -1)}, r_t
         if "lora_A" in sub:
-            A, B = sub["lora_A"], sub["lora_B"]
+            A = np.asarray(sub["lora_A"], np.float32)
+            B = np.asarray(sub["lora_B"], np.float32)
         elif "A_dir" in sub:
             da = sub.get("dA_dir")
             db = sub.get("dB_mag")
-            A = sub["A_mag"][..., None] * (
-                sub["A_dir"] + (da if da is not None else 0.0))
-            B = (sub["B_mag"] + (db if db is not None else 0.0)
-                 )[..., None] * sub["B_dir"]
+            a_dir = np.asarray(sub["A_dir"], np.float32)
+            if da is not None:
+                a_dir = a_dir + np.asarray(da, np.float32)
+            b_mag = np.asarray(sub["B_mag"], np.float32)
+            if db is not None:
+                b_mag = b_mag + np.asarray(db, np.float32)
+            A = np.asarray(sub["A_mag"], np.float32)[..., None] * a_dir
+            B = b_mag[..., None] * np.asarray(sub["B_dir"], np.float32)
         else:
             raise ValueError(f"{prefix}: no lora_A/A_dir leaves in adapter")
         r_t = A.shape[-1]
@@ -317,8 +385,8 @@ class AdapterStore:
             raise ValueError(f"{prefix}: shape mismatch A{A.shape} B{B.shape} "
                              f"vs {(*lead, d_in, f'<={r}')} / "
                              f"{(*lead, f'<={r}', d_out)}")
-        A = self._pad_rank(jnp.asarray(A, jnp.float32), -1)
-        B = self._pad_rank(jnp.asarray(B, jnp.float32), -2)
+        A = self._pad_rank(np.asarray(A, np.float32), -1)
+        B = self._pad_rank(np.asarray(B, np.float32), -2)
         return {"pool_A": A, "pool_B": B}, r_t
 
     # ------------------------------------------------------------------
@@ -412,6 +480,7 @@ class AdapterStore:
             self._pools[p] = {k: jnp.asarray(v) for k, v in
                               tree["pools"][p.replace("/", ".")].items()}
         self._restore_meta(tree["meta"])
+        self.version += 1
         return step
 
     def _restore_meta(self, meta: dict) -> None:
@@ -491,8 +560,456 @@ class AdapterStore:
             self._pools[p] = {k: jnp.asarray(v) for k, v in ck.items()
                               if k != "pool_B_mag"}
             self._pools[p]["pool_dB_mag"] = jnp.asarray(db, jnp.float32)
+        self.version += 1
         if obs.enabled():
             obs.event("ckpt_migrate", path=str(path),
                       layout="pool_B_mag->pool_dB_mag",
                       tenants=len(self._tenant_of))
         return step
+
+
+# ---------------------------------------------------------------------------
+# tiered store: device pool (T0) + host-RAM cache (T1) + disk shards (T2)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("lead",), donate_argnums=(0,))
+def _scatter_rows(pool, idx, vals, lead: bool):
+    """Batched multi-slot install: scatter ``k`` packed slot rows into a
+    pool leaf in one donated device put (the pool buffer is reused in
+    place — no reallocation, and pool shapes are static so nothing
+    recompiles; compiled variants are bounded by distinct (leaf shape,
+    k)).  ``vals`` stacks the rows on the slot axis — axis 1 under a
+    scanned-block lead axis, axis 0 otherwise."""
+    if lead:
+        return pool.at[:, idx].set(vals)
+    return pool.at[idx].set(vals)
+
+
+class _Prefetcher:
+    """Background T2→staging loader for the tiered store.
+
+    One daemon thread drains a work queue of tenant ids, loads each
+    tenant's shard into packed host leaves, and deposits the result in
+    the BACK staging buffer.  ``drain`` — always called from the serving
+    thread, between decode chunks — flips back→front under the lock (an
+    O(1) pointer swap) and returns the front buffer for the store to
+    fold into T1 lock-free.  Only the staging buffers are shared; the
+    thread never touches T0/T1 state, so the store needs no locking.
+
+    Each work item carries the tenant's registration generation at
+    submit time; the store discards a completed load whose generation is
+    stale (the tenant re-registered while the shard read was in flight),
+    so a prefetch can never resurrect an outdated adapter."""
+
+    def __init__(self, load_fn):
+        self._load = load_fn                  # tenant → (packed, rank)
+        self._lock = threading.Lock()
+        self._work: queue.Queue = queue.Queue()
+        self._inflight: set[str] = set()
+        self._back: dict[str, tuple] = {}     # tenant → (packed, rank, gen)
+        self._thread: Optional[threading.Thread] = None
+
+    def submit(self, tenant: str, gen: int) -> None:
+        with self._lock:
+            if tenant in self._inflight or tenant in self._back:
+                return
+            self._inflight.add(tenant)
+        self._work.put((tenant, gen))
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._run, name="adapter-prefetch", daemon=True)
+            self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            tenant, gen = self._work.get()
+            try:
+                packed, rank = self._load(tenant)
+            except Exception:
+                # missing/corrupt shard: drop the prefetch — the install
+                # path's synchronous load raises the real error clearly
+                packed, rank = None, 0
+            with self._lock:
+                self._inflight.discard(tenant)
+                if packed is not None:
+                    self._back[tenant] = (packed, rank, gen)
+
+    def drain(self) -> dict[str, tuple]:
+        """Flip the double buffer; returns completed loads."""
+        with self._lock:
+            front, self._back = self._back, {}
+        return front
+
+    def wait(self, timeout: float = 5.0) -> bool:
+        """Block until no load is in flight (True) or timeout (False)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                if not self._inflight:
+                    return True
+            time.sleep(0.001)
+        return False
+
+
+class TieredAdapterStore(AdapterStore):
+    """Three-tier adapter store: device pool (T0) ⊇ host cache (T1) →
+    per-tenant disk shards (T2).
+
+    T1 is an INCLUSIVE host-RAM cache of packed numpy leaves keyed by
+    tenant id: promotion into T0 keeps the T1 copy, so demotion out of
+    T0 is pure bookkeeping (no device read-back, no row zeroing — the
+    victim row is overwritten by the incoming scatter) and every
+    registered tenant always lives in T1 or a T2 shard.  T1 is
+    capacity-bounded with its own LRU; evicting a DIRTY entry (packed
+    since its last shard write) spills it to ``shard_dir`` first, so no
+    adapter is ever lost.
+
+    ``register`` packs into T1 only — bulk fleet registration never
+    touches the device.  Residency comes from ``install_batch`` (or
+    ``slot_of``, which promotes on demand): every missing tenant is
+    promoted T2→T1→T0 with ONE donated device scatter per pool leaf.
+    Victim selection is queue-informed: ``pinned`` tenants (active batch
+    rows) are never evicted — a pool with every slot pinned raises
+    RuntimeError rather than corrupt an active row — and ``queued``
+    tenants (sitting in the batcher queue) are evicted only when no
+    unqueued victim exists; LRU recency orders the rest.  Sizing rule:
+    give the pool at least as many slots as the engine has batch rows
+    (``n_slots >= max_rows``) — an admitted batch can need one slot per
+    row, all pinned at once.
+
+    ``prefetch``/``drain_prefetch`` bound the async prefetcher: submit
+    upcoming tenants before launching a decode chunk, drain after it
+    returns — completed shard loads fold into T1 so the next
+    ``install_batch`` hits host memory instead of disk.  Determinism
+    contract: a promoted adapter's bytes are identical whether they
+    arrived via the prefetcher or a synchronous T2 load, so served
+    tokens never depend on thread timing.
+
+    ``save`` flushes dirty T1 entries to their shards, then writes the
+    base (T0) state plus a tier directory table; ``load`` accepts both
+    tiered checkpoints and legacy flat-store checkpoints (the directory
+    then starts as the resident set), and adopts any shards already in
+    ``shard_dir``."""
+
+    def __init__(self, base: Params, cfg: ArchConfig, *, shard_dir: str,
+                 host_capacity: int = 1024, n_slots: int = 8,
+                 kind: str = "pairs", rank: int = 0,
+                 shared: Optional[Params] = None):
+        super().__init__(base, cfg, n_slots=n_slots, kind=kind, rank=rank,
+                         shared=shared)
+        if not shard_dir:
+            raise ValueError("TieredAdapterStore needs a shard_dir (the T2 "
+                             "spill/restore target)")
+        if host_capacity < 1:
+            raise ValueError(f"host_capacity must be >= 1, got "
+                             f"{host_capacity}")
+        self.shard_dir = str(shard_dir)
+        os.makedirs(self.shard_dir, exist_ok=True)
+        self.host_capacity = int(host_capacity)
+        # T1: tenant → (packed leaves, rank, dirty), insertion = LRU order
+        self._t1: OrderedDict[str, tuple] = OrderedDict()
+        # tier directory: every tenant in ANY tier → rank (-1 = unknown
+        # yet; shard-only tenants adopted from disk resolve lazily)
+        self._dir: dict[str, int] = {}
+        self._gen: dict[str, int] = {}        # re-registration generations
+        self._prefetcher = _Prefetcher(self._read_shard)
+        for t in list_shards(self.shard_dir):  # warm-start against a
+            self._dir[t] = -1                  # pre-existing shard set
+
+    # -- membership is directory-wide, not resident-set ----------------
+
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._dir
+
+    @property
+    def tenants(self) -> list[str]:
+        return sorted(self._dir)
+
+    @property
+    def resident_tenants(self) -> list[str]:
+        """Tenants currently holding a T0 slot (the base class's notion
+        of membership)."""
+        return sorted(self._slot_of)
+
+    def rank_of(self, tenant: str) -> int:
+        r = self._dir[tenant]
+        if r < 0:                             # shard-only: resolve lazily
+            _packed, r = self._read_shard(tenant)
+            self._dir[tenant] = int(r)
+        return int(r)
+
+    # -- registration goes to T1 ---------------------------------------
+
+    def register(self, tenant: str, adapter: Params, rank: int = 0) -> int:
+        """Pack one tenant's adapter into the host cache (T1, dirty).
+        Unlike the flat store, registration does NOT claim a device slot
+        — residency comes from ``install_batch``/``slot_of``.  Returns
+        the tenant's T0 slot when it is already resident (the device row
+        is refreshed in place), else -1."""
+        packed, r_t = self._pack_adapter(tenant, adapter, rank)
+        self._gen[tenant] = self._gen.get(tenant, 0) + 1
+        self._dir[tenant] = r_t
+        self._t1_put(tenant, packed, r_t, dirty=True)
+        slot = self._slot_of.get(tenant, -1)
+        if slot >= 0:
+            self._install_rows([(slot, tenant, packed, r_t)])
+        if obs.enabled():
+            obs.inc("pool/registers", kind=self.kind)
+            obs.set_gauge("pool/t1_occupancy",
+                          len(self._t1) / self.host_capacity)
+            obs.event("pool_register", tenant=tenant, slot=slot,
+                      rank=int(r_t), pool=self.kind, tier="t1")
+        return slot
+
+    # -- promotion ------------------------------------------------------
+
+    def slot_of(self, tenant: str) -> int:
+        """Slot for a known tenant, promoting T2→T1→T0 on a miss."""
+        if tenant in self._slot_of:
+            return super().slot_of(tenant)
+        return self.install_batch([tenant])[tenant]
+
+    def install_batch(self, tenants, *, pinned=(), queued=()) -> dict[str, int]:
+        """Make every tenant T0-resident and return ``{tenant: slot}``.
+        All missing tenants are promoted (T2→T1→T0) and installed with
+        one donated device scatter per pool leaf — between decode chunks
+        this is the batched hot-swap.  Tenants in ``tenants`` that are
+        already resident are implicitly pinned (they are needed by the
+        same chunk)."""
+        order = list(dict.fromkeys(tenants))
+        out: dict[str, int] = {}
+        missing: list[str] = []
+        for t in order:
+            slot = self._slot_of.get(t)
+            if slot is not None:
+                self._touch(slot)
+                out[t] = slot
+                obs.inc("pool/tier_hits", tier="t0")
+            else:
+                missing.append(t)
+        if order:
+            obs.inc("pool/lookups", len(order), kind=self.kind)
+        if not missing:
+            return out
+        self.drain_prefetch()                 # fold completed prefetches
+        incoming = []
+        for t in missing:
+            if t not in self._dir:
+                raise KeyError(f"unknown tenant {t!r}: register it first")
+            entry = self._t1.get(t)
+            if entry is not None:
+                self._t1.move_to_end(t)
+                packed, r_t, _dirty = entry
+                src = "t1"
+                obs.inc("pool/tier_hits", tier="t1")
+            else:
+                obs.inc("pool/tier_misses", tier="t1")
+                packed, r_t = self._read_shard(t)
+                self._t1_put(t, packed, r_t, dirty=False)
+                src = "t2"
+            obs.inc("pool/promotions", src=src)
+            incoming.append((t, packed, r_t, src))
+        slots = self._alloc_slots(len(incoming), pinned=set(pinned) | set(out),
+                                  queued=set(queued))
+        self._install_rows([(s, t, p, r)
+                            for s, (t, p, r, _src) in zip(slots, incoming)])
+        for (t, _p, r_t, src), s in zip(incoming, slots):
+            out[t] = s
+            if obs.enabled():
+                obs.event("pool_promote", tenant=t, slot=s, src=src,
+                          rank=int(r_t), pool=self.kind)
+        if obs.enabled():
+            obs.set_gauge("pool/occupancy",
+                          len(self._tenant_of) / self.n_slots, kind=self.kind)
+            obs.set_gauge("pool/t1_occupancy",
+                          len(self._t1) / self.host_capacity)
+        return out
+
+    def _alloc_slots(self, k: int, *, pinned: set, queued: set) -> list[int]:
+        """Pick ``k`` free-or-evictable slots.  Preference order: free
+        slots, then LRU over unpinned+unqueued residents, then LRU over
+        unpinned queued residents (queue-informed eviction).  Raises
+        RuntimeError when fewer than ``k`` slots are evictable (every
+        resident is pinned) — active rows are never corrupted."""
+        slots = [s for s in range(self.n_slots)
+                 if s not in self._tenant_of][:k]
+        need = k - len(slots)
+        if need > 0:
+            ranked = sorted(
+                (self._tenant_of[s] in queued, int(self._last_used[s]), s)
+                for s in self._tenant_of
+                if self._tenant_of[s] not in pinned)
+            if len(ranked) < need:
+                raise RuntimeError(
+                    f"adapter pool exhausted: need {need} more slots but "
+                    f"only {len(ranked)} of {self.n_slots} residents are "
+                    f"evictable (rest pinned by active rows) — raise "
+                    f"n_slots or shrink the admitted batch")
+            for was_queued, _lu, s in ranked[:need]:
+                self._demote(s, bool(was_queued))
+                slots.append(s)
+        return slots
+
+    def _demote(self, slot: int, was_queued: bool) -> None:
+        """Bookkeeping-only T0 eviction: the adapter's bytes stay in T1
+        (or its spilled shard) and the device row itself is overwritten
+        by the incoming scatter — no zeroing write."""
+        tenant = self._tenant_of.pop(slot)
+        del self._slot_of[tenant]
+        self._last_used[slot] = 0
+        self._slot_ranks[slot] = 0
+        if obs.enabled():
+            obs.inc("pool/evictions", kind=self.kind)
+            obs.event("pool_evict", tenant=tenant, slot=slot, pool=self.kind,
+                      tier="t0", queued=was_queued)
+
+    def _install_rows(self, rows) -> None:
+        """Install packed host rows into T0 — one donated device scatter
+        per pool leaf, shared by every row in ``rows``."""
+        idx = jnp.asarray(np.array([s for s, *_ in rows], np.int32))
+        for prefix, (lead, _d_in, _d_out) in self.targets.items():
+            pool = self._pools[prefix]
+            axis = 1 if lead else 0
+            for key in _SLOT_KEYS:
+                if key not in pool:
+                    continue
+                vals = np.stack([p[prefix][key] for _s, _t, p, _r in rows],
+                                axis=axis)
+                pool[key] = _scatter_rows(pool[key], idx,
+                                          jnp.asarray(vals), bool(lead))
+        for slot, tenant, _packed, r_t in rows:
+            self._slot_of[tenant] = slot
+            self._tenant_of[slot] = tenant
+            self._slot_ranks[slot] = int(r_t)
+            self._touch(slot)
+        self.version += 1
+
+    # -- T1 cache -------------------------------------------------------
+
+    def _t1_put(self, tenant: str, packed: dict, rank: int,
+                *, dirty: bool) -> None:
+        self._t1[tenant] = (packed, int(rank), bool(dirty))
+        self._t1.move_to_end(tenant)
+        while len(self._t1) > self.host_capacity:
+            victim, (vp, vr, vdirty) = self._t1.popitem(last=False)
+            if vdirty:
+                save_shard(self.shard_dir, victim,
+                           self._shard_tree(vp, vr))
+                obs.inc("pool/t1_spills")
+            obs.inc("pool/t1_evictions")
+
+    # -- T2 shard codec -------------------------------------------------
+
+    def _shard_tree(self, packed: dict, rank: int) -> dict:
+        return {"leaves": {p.replace("/", "."): dict(v)
+                           for p, v in packed.items()},
+                "rank": np.asarray(rank, np.int32)}
+
+    def _read_shard(self, tenant: str) -> tuple[dict, int]:
+        flat, _step = load_shard_flat(self.shard_dir, tenant)
+        rank = int(flat.pop("rank"))
+        packed: dict = {}
+        for p in self.targets:
+            head = "leaves/" + p.replace("/", ".") + "/"
+            leaves = {path[len(head):]: np.asarray(arr, np.float32)
+                      for path, arr in flat.items() if path.startswith(head)}
+            if not leaves:
+                raise KeyError(f"shard for tenant {tenant!r} is missing "
+                               f"target {p}")
+            packed[p] = leaves
+        return packed, rank
+
+    # -- async prefetch -------------------------------------------------
+
+    def prefetch(self, tenants) -> None:
+        """Queue background shard loads for tenants not yet in T0/T1.
+        Called before launching a decode chunk; loads overlap the scan."""
+        for t in tenants:
+            if t in self._slot_of or t in self._t1 or t not in self._dir:
+                continue
+            self._prefetcher.submit(t, self._gen.get(t, 0))
+            obs.inc("pool/prefetch_submits")
+
+    def drain_prefetch(self) -> None:
+        """Fold completed prefetches into T1 (the buffer flip).  Loads
+        superseded by a re-registration while in flight are discarded."""
+        for tenant, (packed, rank, gen) in self._prefetcher.drain().items():
+            if gen != self._gen.get(tenant, 0) or tenant in self._t1:
+                continue
+            self._t1_put(tenant, packed, rank, dirty=False)
+            if obs.enabled():
+                obs.inc("pool/prefetched")
+                obs.event("pool_prefetch", tenant=tenant, rank=int(rank))
+
+    def wait_prefetch(self, timeout: float = 5.0) -> bool:
+        """Block until the prefetcher is quiet.  Tests/benchmarks use
+        this as a barrier; serving never needs it — a missed prefetch
+        just falls back to the synchronous T2 path, with identical
+        bytes (the determinism contract)."""
+        return self._prefetcher.wait(timeout)
+
+    # -- checkpointing --------------------------------------------------
+
+    def flush(self) -> None:
+        """Spill every dirty T1 entry to its T2 shard (clean entries are
+        already byte-identical on disk)."""
+        for t, (packed, r, dirty) in list(self._t1.items()):
+            if dirty:
+                save_shard(self.shard_dir, t, self._shard_tree(packed, r))
+                self._t1[t] = (packed, r, False)
+                obs.inc("pool/t1_spills")
+
+    def save(self, path: str, step: int = 0) -> None:
+        """Flush dirty T1 → shards, then write the base (T0) state plus
+        the tier directory table (ids + ranks, variable-length — read
+        back via the flat loader, never shape-asserted)."""
+        self.flush()
+        tree = self.state_tree()
+        names = sorted(self._dir)
+        ids = np.zeros((len(names), _ID_BYTES), np.uint8)
+        ranks = np.zeros((len(names),), np.int32)
+        for i, t in enumerate(names):
+            ids[i] = _encode_id(t)
+            ranks[i] = self._dir[t]
+        tree["tier"] = {"ids": ids, "ranks": ranks}
+        save_checkpoint(path, tree, step=step)
+
+    def load(self, path: str) -> int:
+        """Restore T0 state — legacy flat-store checkpoints load
+        unchanged (the directory then starts as the resident set) — plus
+        the tier directory when present.  T1 restarts from the restored
+        resident rows (kept inclusive so demotion stays bookkeeping-
+        only) and refills from shards on demand."""
+        step = super().load(path)
+        self._t1.clear()
+        self._gen.clear()
+        self._dir = {}
+        flat, _ = load_checkpoint_flat(path)
+        ids = flat.get("tier/ids")
+        if ids is not None:
+            for row, r in zip(np.asarray(ids, np.uint8),
+                              np.asarray(flat["tier/ranks"], np.int32)):
+                t = _decode_id(row)
+                if t:
+                    self._dir[t] = int(r)
+        for slot, t in self._tenant_of.items():
+            self._dir.setdefault(t, int(self._slot_ranks[slot]))
+        for t in list_shards(self.shard_dir):
+            self._dir.setdefault(t, -1)
+        # resident rows become T1 entries too (inclusive cache): without
+        # a host copy, a bookkeeping-only demotion would lose the bytes
+        for slot, t in sorted(self._tenant_of.items()):
+            self._t1_put(t, self._extract_slot(slot),
+                         int(self._slot_ranks[slot]), dirty=True)
+        return step
+
+    def _extract_slot(self, slot: int) -> dict:
+        """Copy one resident row back to packed host leaves."""
+        packed: dict = {}
+        for prefix, (lead, _di, _do) in self.targets.items():
+            pool = self._pools[prefix]
+            idx = (slice(None), slot) if lead else (slot,)
+            packed[prefix] = {k: np.asarray(pool[k][idx])
+                              for k in _SLOT_KEYS if k in pool}
+        return packed

@@ -55,6 +55,20 @@ class ContinuousBatcher:
     def pending(self) -> int:
         return len(self._queue)
 
+    def queued_tenants(self, limit: Optional[int] = None) -> list[str]:
+        """Distinct tenants with queued requests, in FIFO order (the
+        empty-string pseudo-tenant is excluded).  ``limit`` caps the
+        number of REQUESTS scanned, not tenants — the tiered store's
+        prefetch and queue-informed eviction only care about the near
+        front of the queue."""
+        seen: list[str] = []
+        for i, req in enumerate(self._queue):
+            if limit is not None and i >= limit:
+                break
+            if req.tenant and req.tenant not in seen:
+                seen.append(req.tenant)
+        return seen
+
     def admit(self, free_rows: list[int]) -> list[tuple[int, Request]]:
         """Pop up to len(free_rows) queued requests, FIFO, pairing each
         with a free row index."""

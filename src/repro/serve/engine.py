@@ -116,6 +116,20 @@ class ServeEngine:
         self._chunk = obs.annotate("serve/decode_chunk")(
             jax.jit(chunk_fn, donate_argnums=(1,)))
         self._compiled: set[str] = set()   # compile-event bookkeeping
+        self._params_cache: tuple[int, Params] | None = None
+
+    def _merged_params(self) -> Params:
+        """Backbone ∪ pool overlay, rebuilt only when the store's pools
+        actually changed (keyed on ``store.version`` — the tiered
+        store's batched hot-swap bumps it once per install, and the
+        donated scatter invalidates the old pool buffers, so a stale
+        merge must never be reused)."""
+        if (self._params_cache is None
+                or self._params_cache[0] != self.store.version):
+            self._params_cache = (self.store.version,
+                                  pt.merge_trees(self.base,
+                                                 self.store.overlay()))
+        return self._params_cache[1]
 
     # ------------------------------------------------------------------
 
@@ -135,10 +149,14 @@ class ServeEngine:
         """Drain the queue, returning {rid: generated tokens (n_new,)}.
 
         Adapter slots are snapshotted per admission — register/evict
-        between ``run`` calls, not during one.
+        between ``run`` calls, not during one.  With a tiered store,
+        admission promotes each admitted tenant's adapter (T2→T1→T0,
+        one batched device scatter), pinning active rows and consulting
+        the batcher queue for victims; queued tenants prefetch toward
+        the host cache while each decode chunk runs.
         """
         cfg, R = self.cfg, self.max_rows
-        params = pt.merge_trees(self.base, self.store.overlay())
+        params = self._merged_params()
         cache = M.init_cache(cfg, R, self.max_len)
 
         # telemetry is sampled once per run; everything below is behind
@@ -197,11 +215,23 @@ class ServeEngine:
                                   tenant=req.tenant or None, row=row,
                                   wait=round(wait, 6),
                                   queue_depth=self.batcher.pending)
+                # one batched install covers every admitted tenant:
+                # active rows are hard-pinned (their slots are serving)
+                # and the near front of the queue informs victim choice
+                need = [self._tenant_of_rid[req.rid] for _, req in admitted
+                        if self._tenant_of_rid[req.rid] is not None]
+                still_active = {self._tenant_of_rid.get(int(rid_of_row[r]))
+                                for r in range(R) if active[r]}
+                still_active.discard(None)
+                installed = self.store.install_batch(
+                    need, pinned=still_active,
+                    queued=self.batcher.queued_tenants(limit=2 * R))
                 slot_of_rid = {
                     req.rid: (self.store.null_slot
                               if self._tenant_of_rid[req.rid] is None else
-                              self.store.slot_of(self._tenant_of_rid[req.rid]))
+                              installed[self._tenant_of_rid[req.rid]])
                     for _, req in admitted}
+                params = self._merged_params()
                 tokens, lens, row_slots = self.batcher.pack_prompts(
                     admitted, slot_of_rid, self.store.null_slot, row_slots)
                 admit_mask = np.zeros((R,), bool)
@@ -238,11 +268,16 @@ class ServeEngine:
 
             if active.any():
                 n_active = int(active.sum())
+                # queued tenants' shards load toward T1 while the scan
+                # runs (flat store: no-op); the drain after the chunk
+                # folds whatever completed into the host cache
+                self.store.prefetch(self.batcher.queued_tenants(limit=2 * R))
                 t0 = time.perf_counter() if enabled else 0.0
                 tok, cache, pos, toks = self._chunk(
                     params, cache, tok, pos, jnp.asarray(row_slots),
                     jnp.asarray(active))
                 toks_h = np.asarray(toks)               # (chunk, R)
+                self.store.drain_prefetch()
                 if enabled:
                     dt = time.perf_counter() - t0
                     if "decode_chunk" not in self._compiled:

@@ -1,0 +1,91 @@
+"""Lane-drift guard: the CI matrix (.github/workflows/ci.yml), the
+ci.sh case dispatch, and the Makefile test-* targets must all name the
+same lane set — a lane added to one surface but not the others runs
+locally yet silently never runs in CI (or vice versa).  Also pins the
+``timeout-minutes`` bound on both CI jobs so a hung lane cannot eat the
+runner's 6-hour default."""
+import os
+import re
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _read(*parts):
+    with open(os.path.join(ROOT, *parts)) as f:
+        return f.read()
+
+
+def ci_yml_lanes() -> set[str]:
+    text = _read(".github", "workflows", "ci.yml")
+    m = re.search(r"^\s*lane:\s*\[([^\]]+)\]", text, re.M)
+    assert m, "no `lane: [...]` matrix line in ci.yml"
+    return {x.strip() for x in m.group(1).split(",")}
+
+
+def ci_sh_lanes() -> set[str]:
+    text = _read("scripts", "ci.sh")
+    return set(re.findall(r"^\s*--([a-z]+)\)", text, re.M))
+
+
+def makefile_lanes() -> set[str]:
+    text = _read("Makefile")
+    return set(re.findall(r"^test-([a-z]+):", text, re.M))
+
+
+def test_matrix_matches_ci_sh_flags():
+    # ruff is a lint gate with no ci.sh/Makefile counterpart by design
+    assert ci_yml_lanes() - {"ruff"} == ci_sh_lanes()
+
+
+def test_matrix_matches_makefile_targets():
+    assert ci_yml_lanes() - {"ruff"} == makefile_lanes()
+
+
+def test_every_lane_documented_in_ci_yml_header():
+    text = _read(".github", "workflows", "ci.yml")
+    header = text.split("name: ci")[0]
+    for lane in sorted(ci_yml_lanes()):
+        assert re.search(rf"^#\s+{lane}\s", header, re.M), (
+            f"lane {lane!r} is in the matrix but not described in the "
+            f"ci.yml header comment")
+
+
+def test_every_lane_documented_in_ci_sh_header():
+    text = _read("scripts", "ci.sh")
+    for lane in sorted(ci_sh_lanes()):
+        assert f"ci.sh --{lane}" in text.split("set -euo")[0], (
+            f"lane {lane!r} dispatches in ci.sh but its header comment "
+            f"does not document it")
+
+
+def test_ci_jobs_have_timeouts():
+    text = _read(".github", "workflows", "ci.yml")
+    jobs = dict(re.findall(
+        r"^  (\w[\w-]*):\n((?:    .*\n|\n)*)", text, re.M))
+    for job in ("lane", "bench-smoke"):
+        assert job in jobs, f"job {job!r} missing from ci.yml"
+        assert "timeout-minutes:" in jobs[job], (
+            f"job {job!r} has no timeout-minutes — a hung lane would "
+            f"hold the runner for the 6-hour GitHub default")
+
+
+def test_bench_smoke_only_lists_cover_gated_benches():
+    """Every bench the regression checker gates must be produced by the
+    bench-smoke run (main --only list) — and the retry loop must re-run
+    at least the timing-sensitive gated subset."""
+    yml = _read(".github", "workflows", "ci.yml")
+    mk = _read("Makefile")
+    onlys = re.findall(r"--only\s+([a-z,0-9]+)", yml + mk)
+    assert onlys, "no --only lists found in ci.yml/Makefile"
+    # gate source of truth: the baseline files consumed by check_bench
+    gated = {"het_round.json": "het", "quant_decode.json": "quant",
+             "obs_overhead.json": "obs", "cohort_round.json": "cohort",
+             "tier_churn.json": "tier"}
+    baselines = set(os.listdir(os.path.join(ROOT, "benchmarks",
+                                            "baselines")))
+    assert set(gated) <= baselines
+    for only in onlys:
+        missing = set(gated.values()) - set(only.split(","))
+        assert not missing, (
+            f"--only list {only!r} drops gated benches {sorted(missing)}: "
+            f"check_bench would fail on missing results")

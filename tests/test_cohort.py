@@ -221,11 +221,55 @@ def test_cohort_checkpoint_roundtrip(tmp_path):
     for a, b in zip(jax.tree.leaves(cs.bank.opt_state),
                     jax.tree.leaves(cs2.bank.opt_state)):
         np.testing.assert_array_equal(a, b)
-    assert cs2._pending == []                      # in-flight not persisted
+    # in-flight straggler buffers persist: same count, clients, delivery
+    # rounds, and bitwise-identical buffered trees
+    assert len(cs2._pending) == len(cs._pending)
+    for d, d2 in zip(cs._pending, cs2._pending):
+        assert (d2["client"], d2["deliver_at"], d2["trained_round"]) == \
+            (d["client"], d["deliver_at"], d["trained_round"])
+        for a, b in zip(jax.tree.leaves(d["adapters"]),
+                        jax.tree.leaves(d2["adapters"])):
+            np.testing.assert_array_equal(a, b)
+        for a, b in zip(jax.tree.leaves(d["opt_state"]),
+                        jax.tree.leaves(d2["opt_state"])):
+            np.testing.assert_array_equal(a, b)
     assert all(isinstance(x, np.ndarray)
                for x in jax.tree.leaves(cs2.bank.adapters))  # host-resident
     out = cs2.run_round(batches, jax.random.PRNGKey(3))      # resumable
     assert np.all(np.isfinite(out["metrics"]["ce"]))
+
+
+def test_cohort_restart_mid_delay_delivers_at_original_round(tmp_path):
+    """A straggler buffered before a checkpoint must still deliver —
+    and bill — at its original delivery round after a restart, instead
+    of degrading into a silent dropout."""
+    sim = _sim(method="lora_fedbuff", C=3)
+    cs = CohortSim(sim, n_total=9,
+                   faults=FaultPlan(straggler_rate=1.0,
+                                    straggler_delay=(2, 2), seed=7), seed=5)
+    batches = _batches(3, 2, seed=3)
+    cs.run_round(batches, jax.random.PRNGKey(0))   # round 0: all straggle
+    assert cs._pending, "fault plan should have buffered stragglers"
+    pend = [dict(d) for d in cs._pending]
+    path = str(tmp_path / "mid_delay.ckpt")
+    cs.save(path)
+
+    cs2 = CohortSim(_sim(method="lora_fedbuff", C=3), n_total=9,
+                    faults=FaultPlan(seed=7), seed=5)    # no new faults
+    assert cs2.load(path) == 1
+    assert [d["deliver_at"] for d in cs2._pending] == \
+        [d["deliver_at"] for d in pend]
+    bytes_before = cs2.sim.comm_bytes
+    out1 = cs2.run_round(batches, jax.random.PRNGKey(1))  # round 1: too early
+    assert out1["delivered"] == 0 and out1["delivered_billed"] == 0
+    out2 = cs2.run_round(batches, jax.random.PRNGKey(2))  # round 2: matures
+    assert out2["delivered_billed"] == len(pend)
+    assert cs2.sim.comm_bytes > bytes_before       # billed on arrival
+    assert cs2._pending == []
+    # delivered buffers deposited at their original trained_round
+    for d in pend:
+        if out2["delivered"]:
+            assert cs2.bank.last_sync[d["client"]] >= d["trained_round"]
 
 
 # ---------------------------------------------------------------------------

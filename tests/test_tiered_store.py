@@ -1,0 +1,374 @@
+"""TieredAdapterStore: T2→T1→T0 promotion parity (bit-identical in f32
+to the all-resident flat pool), queue-informed eviction, T1 spill/reload,
+deterministic prefetch/decode interleaving under a seeded churn schedule,
+legacy (single-tier) checkpoint compatibility, and tier telemetry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.checkpoint import list_shards
+from repro.core import peft
+from repro.launch.serve import greedy_generate, merge_adapters
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.serve import AdapterStore, ServeEngine, TieredAdapterStore
+from repro.utils import pytree as pt
+
+CFG = ArchConfig(name="tier-t", family="dense", n_layers=2, d_model=32,
+                 n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                 dtype="float32", lora_rank=4, lora_dropout=0.0)
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def base():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def shared(base):
+    ad = peft.add_lora(base, CFG, jax.random.PRNGKey(1), decomposed=True)
+    return pt.tree_map_with_path(
+        lambda p, x: x + 0.25 if p.endswith("B_mag") else x, ad)
+
+
+def _pair_adapter(base, t):
+    tree = peft.add_lora(base, CFG, jax.random.PRNGKey(300 + t))
+    return pt.tree_map_with_path(
+        lambda p, x: x * 50.0 if p.endswith("lora_B") else x, tree)
+
+
+def _mag_overlay(shared, t):
+    full = pt.tree_map_with_path(
+        lambda p, x: x + 0.15 * (t + 1) * jnp.sign(jnp.sin(
+            jnp.arange(x.size, dtype=jnp.float32) + t)).reshape(x.shape)
+        if p.endswith("dB_mag") else x, shared)
+    return pt.filter_tree(full, lambda p: p.endswith("dB_mag"))
+
+
+def _prompts(n, S):
+    return np.asarray(RNG.integers(5, CFG.vocab_size, size=(n, S)), np.int32)
+
+
+def _pool_row(store, prefix, key, slot):
+    lead, _, _ = store.targets[prefix]
+    arr = np.asarray(store._pools[prefix][key])
+    return arr[:, slot] if lead else arr[slot]
+
+
+# ---------------------------------------------------------------------------
+# tier mechanics
+# ---------------------------------------------------------------------------
+
+def test_register_goes_to_t1_install_promotes(base, tmp_path):
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=8, n_slots=2)
+    for t in range(4):
+        assert ts.register(f"t{t}", _pair_adapter(base, t)) == -1
+    assert ts.tenants == ["t0", "t1", "t2", "t3"]
+    assert ts.resident_tenants == []          # nothing on device yet
+    slots = ts.install_batch(["t0", "t1"])
+    assert sorted(slots.values()) == [0, 1]
+    assert ts.resident_tenants == ["t0", "t1"]
+    # promoted rows carry the packed bytes exactly
+    packed, _ = ts._pack_adapter("t0", _pair_adapter(base, 0))
+    for prefix in ts.targets:
+        for key in ("pool_A", "pool_B"):
+            np.testing.assert_array_equal(
+                _pool_row(ts, prefix, key, slots["t0"]), packed[prefix][key])
+
+
+def test_t1_capacity_spills_dirty_entries_to_shards(base, tmp_path):
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=2, n_slots=2)
+    for t in range(5):
+        ts.register(f"t{t}", _pair_adapter(base, t))
+    assert len(ts._t1) == 2                   # capacity-bounded
+    # the three evicted entries were dirty → spilled to T2
+    assert sorted(list_shards(ts.shard_dir)) == ["t0", "t1", "t2"]
+    # a spilled tenant still promotes — via a shard read — bit-exactly
+    slot = ts.slot_of("t0")
+    packed, _ = ts._pack_adapter("t0", _pair_adapter(base, 0))
+    for prefix in ts.targets:
+        np.testing.assert_array_equal(
+            _pool_row(ts, prefix, "pool_A", slot), packed[prefix]["pool_A"])
+
+
+def test_queued_tenants_evicted_only_as_last_resort(base, tmp_path):
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=8, n_slots=3)
+    for t in range(5):
+        ts.register(f"t{t}", _pair_adapter(base, t))
+    ts.install_batch(["t0", "t1", "t2"])
+    # t0 is LRU, but it sits in the batcher queue — the unqueued t1
+    # must be the victim instead
+    ts.install_batch(["t3"], queued={"t0", "t2"})
+    assert "t0" in ts.resident_tenants and "t2" in ts.resident_tenants
+    assert "t1" not in ts.resident_tenants
+    # only queued victims remain → eviction falls back to queued LRU
+    ts.install_batch(["t4"], pinned={"t3"}, queued={"t0", "t2"})
+    assert "t4" in ts.resident_tenants and "t3" in ts.resident_tenants
+
+
+def test_pinned_slots_are_never_evicted(base, tmp_path):
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=8, n_slots=2)
+    for t in range(3):
+        ts.register(f"t{t}", _pair_adapter(base, t))
+    ts.install_batch(["t0", "t1"])
+    with pytest.raises(RuntimeError, match="pinned"):
+        ts.install_batch(["t2"], pinned={"t0", "t1"})
+    assert ts.resident_tenants == ["t0", "t1"]   # nothing corrupted
+
+
+def test_reregister_refreshes_resident_row(base, tmp_path):
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=4, n_slots=2)
+    ts.register("t0", _pair_adapter(base, 0))
+    slot = ts.slot_of("t0")
+    assert ts.register("t0", _pair_adapter(base, 99)) == slot
+    packed, _ = ts._pack_adapter("t0", _pair_adapter(base, 99))
+    for prefix in ts.targets:
+        np.testing.assert_array_equal(
+            _pool_row(ts, prefix, "pool_B", slot), packed[prefix]["pool_B"])
+
+
+def test_unknown_tenant_raises(base, tmp_path):
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=4, n_slots=2)
+    with pytest.raises(KeyError, match="register"):
+        ts.install_batch(["ghost"])
+
+
+# ---------------------------------------------------------------------------
+# prefetch
+# ---------------------------------------------------------------------------
+
+def test_prefetch_folds_into_t1_with_identical_bytes(base, tmp_path):
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=4, n_slots=2)
+    for t in range(3):
+        ts.register(f"t{t}", _pair_adapter(base, t))
+    ts.flush()
+    ts._t1.clear()                            # force everything to T2
+    ts.prefetch(["t1"])
+    assert ts.wait_prefetch(timeout=10.0)
+    ts.drain_prefetch()
+    assert "t1" in ts._t1
+    packed_pf = ts._t1["t1"][0]
+    packed_sync, _ = ts._read_shard("t1")     # the synchronous-path bytes
+    for prefix in ts.targets:
+        for key in packed_sync[prefix]:
+            np.testing.assert_array_equal(packed_pf[prefix][key],
+                                          packed_sync[prefix][key])
+    assert ts._t1["t1"][2] is False           # prefetched entries are clean
+
+
+def test_stale_prefetch_is_discarded_after_reregister(base, tmp_path):
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=4, n_slots=2)
+    ts.register("t0", _pair_adapter(base, 0))
+    ts.flush()
+    ts._t1.clear()
+    ts.prefetch(["t0"])
+    assert ts.wait_prefetch(timeout=10.0)
+    ts.register("t0", _pair_adapter(base, 1))  # supersedes the in-flight load
+    ts._t1.clear()                             # drop even the fresh T1 copy
+    ts.drain_prefetch()
+    # the stale load must NOT resurrect the old adapter
+    assert "t0" not in ts._t1
+
+
+# ---------------------------------------------------------------------------
+# promotion parity — the acceptance-criteria test
+# ---------------------------------------------------------------------------
+
+def test_promoted_mixed_batch_bit_identical_to_flat_pool(base, tmp_path):
+    """Mixed batch served through T1- and T2-promoted adapters must be
+    bit-identical in f32 to the all-resident flat pool AND to each
+    tenant's merged-backbone reference."""
+    trees = {t: _pair_adapter(base, t) for t in range(6)}
+    reqs = [(f"t{i % 6}", p) for i, p in enumerate(_prompts(12, 8))]
+
+    flat = AdapterStore(base, CFG, n_slots=8)
+    for t, tree in trees.items():
+        flat.register(f"t{t}", tree)
+    eng_flat = ServeEngine(base, CFG, flat, max_rows=4, max_prompt_len=8,
+                           max_len=24, decode_chunk=4)
+    out_flat = eng_flat.generate(reqs, n_new=8)
+
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=3, n_slots=4)
+    for t, tree in trees.items():
+        ts.register(f"t{t}", tree)
+    ts.flush()
+    # leave a mixed residency: some T1, some T2-only
+    while len(ts._t1) > 2:
+        ts._t1.popitem(last=False)
+    eng = ServeEngine(base, CFG, ts, max_rows=4, max_prompt_len=8,
+                      max_len=24, decode_chunk=4)
+    out_tier = eng.generate(reqs, n_new=8)
+    for (tenant, prompt), a, b in zip(reqs, out_flat, out_tier):
+        np.testing.assert_array_equal(a, b)
+    for t in range(6):
+        merged = merge_adapters(base, trees[t])
+        ref = greedy_generate(merged, {"tokens": jnp.asarray(
+            reqs[t][1][None])}, CFG, n_new=8)
+        np.testing.assert_array_equal(out_tier[t], np.asarray(ref[0]))
+
+
+def test_dora_mag_promotion_parity(base, shared, tmp_path):
+    """The paper's deployment layout (shared directions + per-tenant raw
+    ΔB_M, 4·r bytes each) through T2 promotion."""
+    overlays = {t: _mag_overlay(shared, t) for t in range(4)}
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=2, n_slots=4, kind="dora_mag",
+                            shared=shared)
+    for t, ov in overlays.items():
+        ts.register(f"m{t}", ov)
+    ts.flush()
+    ts._t1.clear()                            # all promotions come from T2
+    eng = ServeEngine(base, CFG, ts, max_rows=4, max_prompt_len=8,
+                      max_len=24, decode_chunk=4)
+    prompts = _prompts(4, 8)
+    outs = eng.generate([(f"m{t}", prompts[t]) for t in range(4)], n_new=6)
+    for t in range(4):
+        full = pt.tree_map_with_path(
+            lambda p, x: pt.tree_get(overlays[t], p, x), shared)
+        ref = greedy_generate(merge_adapters(base, full),
+                              {"tokens": jnp.asarray(prompts[t:t + 1])},
+                              CFG, n_new=6)
+        np.testing.assert_array_equal(outs[t], np.asarray(ref[0]))
+
+
+def test_seeded_churn_is_deterministic_with_and_without_prefetch(base,
+                                                                 tmp_path):
+    """A seeded churn schedule (more tenants than slots, repeats, T1
+    thrash) must produce identical tokens run-to-run — and identically
+    whether the async prefetcher participates or not (the interleaving-
+    independence contract)."""
+    trees = {t: _pair_adapter(base, t) for t in range(8)}
+    sched_rng = np.random.default_rng(7)
+    order = sched_rng.integers(0, 8, size=16)
+    prompts = _prompts(16, 8)
+    reqs = [(f"t{order[i]}", prompts[i]) for i in range(16)]
+
+    def serve(tag, use_prefetch):
+        ts = TieredAdapterStore(base, CFG,
+                                shard_dir=str(tmp_path / f"s{tag}"),
+                                host_capacity=3, n_slots=4)
+        for t, tree in trees.items():
+            ts.register(f"t{t}", tree)
+        ts.flush()
+        ts._t1.clear()
+        if not use_prefetch:
+            ts.prefetch = lambda tenants: None           # disable async path
+        eng = ServeEngine(base, CFG, ts, max_rows=4, max_prompt_len=8,
+                          max_len=24, decode_chunk=4)
+        return eng.generate(reqs, n_new=6)
+
+    a = serve(0, use_prefetch=True)
+    b = serve(1, use_prefetch=True)
+    c = serve(2, use_prefetch=False)
+
+    for x, y, z in zip(a, b, c):
+        np.testing.assert_array_equal(x, y)
+        np.testing.assert_array_equal(x, z)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_tiered_checkpoint_roundtrip(base, tmp_path):
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=4, n_slots=2)
+    for t in range(5):
+        ts.register(f"t{t}", _pair_adapter(base, t))
+    ts.install_batch(["t0", "t1"])
+    path = str(tmp_path / "tier.ckpt")
+    ts.save(path)
+    assert sorted(list_shards(ts.shard_dir)) == [f"t{t}" for t in range(5)]
+
+    ts2 = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                             host_capacity=4, n_slots=2)
+    ts2.load(path)
+    assert ts2.tenants == ts.tenants
+    assert ts2.resident_tenants == ["t0", "t1"]
+    assert ts2.rank_of("t3") == CFG.lora_rank
+    # a demote/re-promote cycle after restore serves the exact bytes
+    ts2.install_batch(["t3", "t4"])
+    slot = ts2.slot_of("t0")
+    packed, _ = ts._pack_adapter("t0", _pair_adapter(base, 0))
+    for prefix in ts2.targets:
+        np.testing.assert_array_equal(
+            _pool_row(ts2, prefix, "pool_A", slot), packed[prefix]["pool_A"])
+
+
+def test_legacy_flat_checkpoint_loads_unchanged(base, tmp_path):
+    """A single-tier AdapterStore checkpoint restores into the tiered
+    store: same residents, same pool bytes, and the residents survive a
+    demote/re-promote cycle (T1 adoption keeps demotion lossless)."""
+    flat = AdapterStore(base, CFG, n_slots=2)
+    flat.register("a", _pair_adapter(base, 0))
+    flat.register("b", _pair_adapter(base, 1))
+    path = str(tmp_path / "flat.ckpt")
+    flat.save(path)
+
+    ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                            host_capacity=4, n_slots=2)
+    ts.load(path)
+    assert ts.tenants == ["a", "b"] and ts.resident_tenants == ["a", "b"]
+    for prefix in ts.targets:
+        for key in ("pool_A", "pool_B"):
+            np.testing.assert_array_equal(
+                np.asarray(ts._pools[prefix][key]),
+                np.asarray(flat._pools[prefix][key]))
+    # legacy residents were adopted into T1 → demotion cannot lose them
+    ts.register("c", _pair_adapter(base, 2))
+    ts.install_batch(["c"])                   # evicts one legacy resident
+    demoted = [t for t in ("a", "b") if t not in ts.resident_tenants]
+    assert demoted
+    back = ts.slot_of(demoted[0])             # …and it comes back intact
+    packed, _ = ts._pack_adapter(
+        demoted[0], _pair_adapter(base, 0 if demoted[0] == "a" else 1))
+    for prefix in ts.targets:
+        np.testing.assert_array_equal(
+            _pool_row(ts, prefix, "pool_A", back), packed[prefix]["pool_A"])
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+def test_tier_metrics_and_events(base, tmp_path):
+    tel = obs.enable(str(tmp_path / "tier.jsonl"))
+    try:
+        ts = TieredAdapterStore(base, CFG, shard_dir=str(tmp_path / "s"),
+                                host_capacity=2, n_slots=2)
+        for t in range(4):
+            ts.register(f"t{t}", _pair_adapter(base, t))
+        ts.install_batch(["t0", "t1"])        # t0/t1 spilled → T2 promotions
+        ts.install_batch(["t0"])              # T0 hit
+        ts.prefetch(["t2"])
+        assert ts.wait_prefetch(timeout=10.0)
+        ts.drain_prefetch()
+        ts.install_batch(["t2"])              # T1 hit from prefetch
+        m = tel.metrics
+        assert m.counter("pool/tier_hits").value(tier="t0") >= 1
+        assert m.counter("pool/tier_hits").value(tier="t1") >= 1
+        assert m.counter("pool/tier_misses").value(tier="t1") >= 1
+        assert m.counter("pool/promotions").value(src="t2") >= 1
+        assert m.counter("pool/promotions").value(src="t1") >= 1
+        assert m.counter("pool/prefetched").value() >= 1
+        assert m.counter("pool/t1_spills").value() >= 1
+        assert m.gauge("pool/t1_occupancy").value() > 0
+        obs.disable()
+        kinds = {e["kind"] for e in obs.read_events(str(tmp_path
+                                                        / "tier.jsonl"))}
+        assert {"pool_promote", "pool_prefetch",
+                "pool_register"} <= kinds
+    finally:
+        obs.disable()
