@@ -1,4 +1,4 @@
-.PHONY: test test-serve test-het test-dist test-quant test-obs test-scale test-tier test-fast perf serve-bench bench-smoke
+.PHONY: test test-serve test-het test-dist test-quant test-obs test-scale test-tier test-lint test-fast lint-fed perf serve-bench bench-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -37,6 +37,14 @@ test-scale:
 # eviction, async prefetch determinism, tier checkpoints + base pool)
 test-tier:
 	bash scripts/ci.sh --tier
+
+# static-analysis lane (repro.lint R1–R5 over src/repro + its tests)
+test-lint:
+	bash scripts/ci.sh --lint
+
+# just the analyzer, no test suite — the quick pre-commit check
+lint-fed:
+	PYTHONPATH=src python -m repro.lint src/repro
 
 # tier-1 minus the slow sweeps and the multi-device dist tests
 test-fast:

@@ -30,6 +30,12 @@
 #                              # prefetch determinism, tier checkpoints
 #                              # (test_tiered_store.py) + the flat-pool
 #                              # base suite it extends
+#   scripts/ci.sh --lint       # repo-aware static analyzer: repro.lint
+#                              # rules R1–R5 over src/repro (zero
+#                              # unsuppressed findings beyond the
+#                              # justified .lint-baseline.json) + the
+#                              # rule/runner/sanitizer test suite
+#                              # (test_lint_rules.py)
 #   scripts/ci.sh --fast       # tier-1 minus the slow sweeps and the
 #                              # multi-device dist tests
 #                              # (-m 'not slow and not dist')
@@ -93,6 +99,13 @@ case "${1:-}" in
     # tier regression even when the tiered file still passes
     exec python -m pytest -x -q tests/test_tiered_store.py \
       tests/test_adapter_store.py "$@"
+    ;;
+  --lint)
+    shift
+    # the analyzer must exit 0 on the merged tree (ISSUE 10 acceptance
+    # criterion) before the fixture/runner suite runs
+    python -m repro.lint src/repro
+    exec python -m pytest -x -q tests/test_lint_rules.py "$@"
     ;;
   --fast)
     shift

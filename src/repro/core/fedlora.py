@@ -67,6 +67,10 @@ def run_federated(cfg: ArchConfig, hp: FedHyper,
                 {k: jax.numpy.asarray(v) for k, v in
                  server_dataset.sample_batch(rng, hp.batch, hp.seq_len).items()}
                 for _ in range(hp.global_steps)]
+            # stage 1 consumes split(fold_in(jrng, step)) children, stage 2
+            # the unsplit parent — split's domain separation keeps the streams
+            # disjoint, and this chain is the sim↔engine parity contract
+            # lint: ok[R3] stage-2 parent key is disjoint from stage-1 split children
             aggregated = sim.global_stage(aggregated, sbatches, jrng)
         ev = sim.eval_global(aggregated, eval_global_batches)
         history.append({"round": rnd, "train_ce": float(np.mean(mets["ce"])),

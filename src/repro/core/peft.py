@@ -70,12 +70,12 @@ def add_lora(base: Params, cfg: ArchConfig, rng, *, decomposed: bool = False,
         *lead, d_in, d_out = kern.shape
         k1, k2 = jax.random.split(jax.random.fold_in(rng, i))
         A = jax.random.normal(k1, (*lead, d_in, r), jnp.float32) / jnp.sqrt(r)
-        B = jax.random.normal(k2, (*lead, r, d_out), jnp.float32) * 1e-3
+        rawB = jax.random.normal(k2, (*lead, r, d_out), jnp.float32)
+        B = rawB * 1e-3
         prefix = path.rsplit("/", 1)[0]
         if decomposed:
             A_mag, A_dir = dora.decompose(A)
-            _, B_dir = dora.decompose(
-                jax.random.normal(k2, (*lead, r, d_out), jnp.float32))
+            _, B_dir = dora.decompose(rawB)
             B_mag = jnp.zeros((*lead, r), jnp.float32)
             _set_path(overlay, f"{prefix}/A_dir", A_dir)
             _set_path(overlay, f"{prefix}/A_mag", A_mag)

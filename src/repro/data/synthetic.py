@@ -216,6 +216,7 @@ class SyntheticInstructionDataset:
         toks = np.zeros((batch, seq_len), np.int32)
         mask = np.zeros((batch, seq_len), np.float32)
         for b in range(batch):
+            # lint: ok[R3] numpy Generator — stateful, sequential reuse is the API
             toks[b], mask[b] = self._GEN[task](self, rng, seq_len)
         tid = np.full((batch,), TASK_TYPES.index(task), np.int32)
         return {"tokens": toks, "loss_mask": mask, "task_id": tid}

@@ -204,6 +204,13 @@ class FaultPlan:
     dropout_rate: float = 0.0
     straggler_rate: float = 0.0
     straggler_delay: tuple = (1, 3)
+    # delay-draw distribution over [lo, hi]: "uniform" (the default),
+    # or the heavy-tailed straggler models of arXiv 2410.22815 —
+    # "lognormal" (delay ≈ lo·LogNormal(0, σ=straggler_tail)) and
+    # "pareto" (delay ≈ lo·(1+Pareto(α=straggler_tail))), both clipped
+    # into [lo, hi] so the host-side in-flight buffers stay bounded
+    straggler_dist: str = "uniform"
+    straggler_tail: float = 1.0
     corrupt_rate: float = 0.0
     corrupt_scale: float = 10.0
     seed: int = 0
@@ -219,6 +226,14 @@ class FaultPlan:
                 f"straggler_delay range {self.straggler_delay} must "
                 "satisfy 1 <= lo <= hi (a 0-round delay is just "
                 "participation)")
+        if self.straggler_dist not in ("uniform", "lognormal", "pareto"):
+            raise ValueError(
+                f"straggler_dist {self.straggler_dist!r} must be "
+                "uniform | lognormal | pareto")
+        if self.straggler_tail <= 0.0:
+            raise ValueError(
+                f"straggler_tail must be > 0 (σ for lognormal, α for "
+                f"pareto), got {self.straggler_tail}")
 
     @property
     def any(self) -> bool:
@@ -233,8 +248,7 @@ class FaultPlan:
                                   + self.straggler_rate)
         corrupt = ((~dropout) & (~straggler)
                    & (rng.random(n) < self.corrupt_rate))
-        lo, hi = self.straggler_delay
-        delays = rng.integers(int(lo), int(hi) + 1, size=n)
+        delays = self._draw_delays(rng, n)
         participation = (~(dropout | straggler)).astype(np.float32)
         update_scale = np.where(corrupt, self.corrupt_scale,
                                 1.0).astype(np.float32)
@@ -242,6 +256,21 @@ class FaultPlan:
                 "update_scale": update_scale, "dropout": dropout,
                 "straggler": straggler, "corrupt": corrupt,
                 "delays": delays}
+
+    def _draw_delays(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Integer delays in [lo, hi].  Heavy-tailed draws scale the
+        floor ``lo`` by a LogNormal/Pareto multiplier ≥ ~1 and clip at
+        ``hi`` — the cap bounds the in-flight straggler buffers, so hi
+        acts as a "declared dead after" horizon for the tail."""
+        lo, hi = int(self.straggler_delay[0]), int(self.straggler_delay[1])
+        if self.straggler_dist == "uniform":
+            return rng.integers(lo, hi + 1, size=n)
+        if self.straggler_dist == "lognormal":
+            mult = rng.lognormal(mean=0.0, sigma=self.straggler_tail,
+                                 size=n)
+        else:                                  # pareto, α = straggler_tail
+            mult = 1.0 + rng.pareto(self.straggler_tail, size=n)
+        return np.clip(np.floor(lo * mult).astype(np.int64), lo, hi)
 
 
 class CohortSim:

@@ -1,0 +1,18 @@
+"""repro.lint — repo-aware JAX static analyzer + runtime sanitizers.
+
+Static half: five AST rules (R1 host-sync-in-jit, R2 donation-safety,
+R3 PRNG hygiene, R4 recompile hazards, R5 dead-mask detection) behind a
+``FedMethod``-style registry, run by ``python -m repro.lint <paths>``
+with per-line suppressions and a checked-in baseline.  Runtime half:
+``repro.lint.sanitize`` (``nan_guard``, key-reuse-tracking ``tracked``
+PRNG shim) for use from tests.
+
+See docs/static_analysis.md for the rule catalog and the historical
+bug each rule encodes.
+"""
+from .rules import available_rules, get_rule, register
+from .rules.base import Finding, Rule
+from .runner import main
+
+__all__ = ["available_rules", "get_rule", "register", "Finding",
+           "Rule", "main"]

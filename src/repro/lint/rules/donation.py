@@ -1,0 +1,207 @@
+"""R2 — donation-safety.
+
+Historical bug: PR 9's tiered adapter pool.  The batched hot-swap
+scatter is a jitted function with ``donate_argnums=(0,)``: the pool
+leaf buffer is donated so the scatter aliases it in place.  The caller
+kept a reference to the *pre-call* binding and read it after the call —
+on CPU that read stale-but-alive memory and "worked"; on TPU it is a
+deleted-buffer error.  The workaround (re-keying the engine's merge on
+``store.version``) shipped before the root cause was understood.
+
+Detection: within each function, track names bound to a jitted callable
+that carries ``donate_argnums=`` (direct ``jax.jit(f, donate_argnums=…)``
+assignment, the ``obs.annotate(...)(jax.jit(...))`` wrap, or a
+``@partial(jax.jit, donate_argnums=…)`` decorated def).  At every call
+of such a callable, any *positional* plain-Name argument at a donated
+index is poisoned; a later Name *load* before the name is rebound is a
+finding.  Assignments (including the same statement's own target, e.g.
+``x = f(x)``) rebind and clear the poison.  Starred args, attribute and
+subscript arguments are skipped — the donated buffer there lives behind
+a container the analyzer can't track, which is exactly what the
+``store.version`` protocol covers at runtime.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .base import Finding, FunctionNode, ModuleInfo, Rule, last_seg
+
+
+def _donated_indices(call: ast.Call) -> Optional[tuple[int, ...]]:
+    """donate_argnums of a ``jax.jit(...)`` call expression, unwrapping
+    ``annotate(...)(jax.jit(...))``; None if not a donating jit."""
+    if not isinstance(call, ast.Call):
+        return None
+    if isinstance(call.func, ast.Call) and call.args:
+        return _donated_indices(call.args[0])
+    if last_seg(call.func) != "jit":
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            return _literal_ints(kw.value)
+    return None
+
+
+def _decorator_donated(fn) -> Optional[tuple[int, ...]]:
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call):
+            if last_seg(dec.func) == "jit":
+                idx = _kw_ints(dec, "donate_argnums")
+                if idx is not None:
+                    return idx
+            if last_seg(dec.func) == "partial" and dec.args and \
+                    last_seg(dec.args[0]) == "jit":
+                idx = _kw_ints(dec, "donate_argnums")
+                if idx is not None:
+                    return idx
+    return None
+
+
+def _kw_ints(call: ast.Call, name: str) -> Optional[tuple[int, ...]]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return _literal_ints(kw.value)
+    return None
+
+
+def _literal_ints(node) -> tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.append(elt.value)
+        return tuple(out)
+    return ()
+
+
+class DonationSafety(Rule):
+    code = "R2"
+    name = "donation-safety"
+    description = ("argument donated to a jitted function is read again "
+                   "after the call (deleted buffer on TPU, stale memory "
+                   "on CPU)")
+
+    def check_module(self, mod: ModuleInfo) -> list[Finding]:
+        # donating callables visible module-wide: name -> donated indices
+        donators: dict[str, tuple[int, ...]] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                idx = _donated_indices(node.value)
+                if idx:
+                    tgt = node.targets[0]
+                    if isinstance(tgt, ast.Name):
+                        donators[tgt.id] = idx
+                    elif isinstance(tgt, ast.Attribute):
+                        donators[f"self.{tgt.attr}"] = idx
+            elif isinstance(node, FunctionNode):
+                idx = _decorator_donated(node)
+                if idx:
+                    donators[node.name] = idx
+        if not donators:
+            return []
+        out: list[Finding] = []
+        for fn in [n for n in ast.walk(mod.tree)
+                   if isinstance(n, FunctionNode)]:
+            out.extend(self._check_fn(mod, fn, donators))
+        return out
+
+    def _callee_key(self, call: ast.Call) -> str:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return f.id
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id == "self":
+            return f"self.{f.attr}"
+        return ""
+
+    def _check_fn(self, mod: ModuleInfo, fn, donators) -> list[Finding]:
+        """Statement-ordered pass over ``fn``: donated Name args become
+        poisoned; a later load fires, a store rebinds.  Within one
+        statement loads/donations are processed before stores, so
+        ``x = f(x)`` donates and immediately rebinds — no finding."""
+        poisoned: dict[str, str] = {}           # name -> donating callee
+        out: list[Finding] = []
+
+        def stmt_events(stmt) -> tuple[list, list]:
+            loads, stores = [], []
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)) and node is not stmt:
+                    continue
+                if isinstance(node, ast.Call):
+                    key = self._callee_key(node)
+                    if key in donators and not any(
+                            isinstance(a, ast.Starred) for a in node.args):
+                        for i in donators[key]:
+                            if i < len(node.args) and isinstance(
+                                    node.args[i], ast.Name):
+                                loads.append((node.lineno, node.col_offset,
+                                              "donate",
+                                              node.args[i].id, key, node))
+                elif isinstance(node, ast.Name):
+                    if isinstance(node.ctx, ast.Load):
+                        loads.append((node.lineno, node.col_offset, "load",
+                                      node.id, None, node))
+                    else:
+                        stores.append(node.id)
+            loads.sort(key=lambda e: (e[0], e[1]))
+            return loads, stores
+
+        def fire(name: str, node) -> None:
+            out.append(mod.finding(
+                "R2", node,
+                f"`{name}` was donated to `{poisoned[name]}` and is read "
+                f"afterwards — the buffer may be deleted or aliased in "
+                f"place; rebind the result instead"))
+            poisoned.pop(name)                  # one finding per donation
+
+        def run_stmt(stmt) -> None:
+            loads, stores = stmt_events(stmt)
+            for _, _, kind, name, key, node in loads:
+                if kind == "load" and name in poisoned:
+                    fire(name, node)
+            for _, _, kind, name, key, node in loads:
+                if kind == "donate":
+                    poisoned[name] = key
+            for name in stores:
+                poisoned.pop(name, None)
+
+        def run_header(stmt) -> None:
+            """Loads in a compound statement's header (``if x:``,
+            ``for i in f(x):``, ``with g(x):``)."""
+            exprs = []
+            for f in ("test", "iter"):
+                v = getattr(stmt, f, None)
+                if v is not None:
+                    exprs.append(v)
+            for item in getattr(stmt, "items", []):
+                exprs.append(item.context_expr)
+            for e in exprs:
+                for sub in ast.walk(e):
+                    if isinstance(sub, ast.Name) and isinstance(
+                            sub.ctx, ast.Load) and sub.id in poisoned:
+                        fire(sub.id, sub)
+
+        def run_block(body) -> None:
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef, ast.ClassDef)):
+                    continue
+                blocks = [b for b in (getattr(stmt, "body", None),
+                                      getattr(stmt, "orelse", None),
+                                      getattr(stmt, "finalbody", None)) if b]
+                handlers = getattr(stmt, "handlers", [])
+                if blocks or handlers:
+                    run_header(stmt)
+                    for blk in blocks:
+                        run_block(blk)
+                    for h in handlers:
+                        run_block(h.body)
+                else:
+                    run_stmt(stmt)
+
+        run_block(fn.body)
+        return out

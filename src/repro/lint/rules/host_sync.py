@@ -1,0 +1,93 @@
+"""R1 — host-sync-in-jit.
+
+Historical bug: PR 7's zero-cost-telemetry contract.  An ``obs.inc``
+call (or any host materialization — ``np.asarray``, ``.item()``,
+``jax.device_get``, ``time.perf_counter``) inside a function traced by
+``jax.jit`` / ``shard_map`` / ``lax.scan`` either breaks tracing
+outright or, worse, silently freezes a trace-time value into the
+compiled program and the telemetry counter never moves again.  The
+contract is: telemetry rides *replicated metric leaves* through the
+carry; host emission happens outside jit.
+
+What gets flagged inside a jit-reachable function body:
+
+* ``np.asarray`` / ``np.array`` / ``np.copy`` (numpy materializes the
+  tracer — concretization error or silent constant-folding)
+* ``jax.device_get(...)`` and ``.item()`` / ``.tolist()`` /
+  ``.block_until_ready()`` method calls
+* ``float(x)`` / ``bool(x)`` where ``x`` is a *parameter* of the traced
+  function (a tracer for sure; ``float`` of locals is often static
+  trace-time math and stays allowed)
+* ``obs.<emit>`` calls: inc / set_gauge / observe / event /
+  emit_snapshot (``obs.annotate`` is a host-side wrapper and is fine)
+* ``time.time`` / ``time.perf_counter`` / ``print``
+
+Suppress with ``# lint: ok[R1] <reason>`` when the call provably runs
+at trace time only (e.g. shaping static python config).
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, ModuleInfo, Rule, dotted_name, walk_skip_nested
+
+_OBS_EMITS = {"inc", "set_gauge", "observe", "event", "emit_snapshot",
+              "to_prometheus"}
+_NP_MATERIALIZE = {"asarray", "array", "copy"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+
+class HostSyncInJit(Rule):
+    code = "R1"
+    name = "host-sync-in-jit"
+    description = ("host callback / device sync inside a jitted or "
+                   "scanned body (breaks the zero-cost telemetry "
+                   "contract; freezes trace-time values)")
+
+    def check_module(self, mod: ModuleInfo) -> list[Finding]:
+        np_aliases = mod.numpy_aliases()
+        obs_aliases = {alias for alias, full in mod.imports.items()
+                       if full.endswith(".obs") or full == "repro.obs"
+                       or full.endswith("import obs")}
+        obs_aliases.add("obs")
+        out: list[Finding] = []
+        for fn in mod.jit_reachable():
+            params = {a.arg for a in fn.args.args + fn.args.posonlyargs
+                      + fn.args.kwonlyargs}
+            for node in walk_skip_nested(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = self._classify(node, np_aliases, obs_aliases, params)
+                if f:
+                    out.append(mod.finding(
+                        "R1", node,
+                        f"{f} inside jit-reachable `{fn.name}` — host "
+                        f"sync/callback is forbidden in traced bodies "
+                        f"(carry metrics as replicated leaves instead)"))
+        return out
+
+    def _classify(self, call: ast.Call, np_aliases, obs_aliases,
+                  params) -> str:
+        func = call.func
+        dotted = dotted_name(func)
+        if isinstance(func, ast.Attribute):
+            head = dotted.split(".")[0] if dotted else ""
+            if head in np_aliases and func.attr in _NP_MATERIALIZE:
+                return f"`{dotted}` (numpy materialization)"
+            if func.attr in _SYNC_METHODS:
+                return f"`.{func.attr}()` (device sync)"
+            if dotted in ("jax.device_get",):
+                return "`jax.device_get` (device sync)"
+            if head in obs_aliases and func.attr in _OBS_EMITS:
+                return f"`{dotted}` (telemetry emit)"
+            if dotted in ("time.time", "time.perf_counter",
+                          "time.monotonic"):
+                return f"`{dotted}` (wall clock)"
+        elif isinstance(func, ast.Name):
+            if func.id == "print":
+                return "`print` (host IO)"
+            if func.id in ("float", "bool") and call.args and isinstance(
+                    call.args[0], ast.Name) and call.args[0].id in params:
+                return (f"`{func.id}()` of traced parameter "
+                        f"`{call.args[0].id}` (concretization)")
+        return ""

@@ -1,0 +1,307 @@
+"""R3 — PRNG hygiene.
+
+Two historical failure classes:
+
+(a) **key reuse** — the same PRNG key consumed by two samplers without
+    an interleaving ``split``/``fold_in`` makes the draws identical
+    (correlated dropout masks, duplicated inits).  The repo's
+    convention is: every consumer gets its own key derived by
+    ``fold_in`` with a distinct constant or ``split``.
+
+(b) **fold-chain drift** — sim↔production parity (PRs 6/7) depends on
+    ``launch/train.py`` and ``fed/simulate.py`` deriving per-stage keys
+    with the *same* literal fold offsets (stage-1 round ``fold_in(rng,
+    0 + step)``, stage-3 personalization ``fold_in(rng, 31 + step)``).
+    A constant edited in one file but not the other silently breaks ~1
+    ulp parity.  The rule extracts the literal fold-offset sets from
+    both files and compares them.
+
+Reuse detection (per function): a name is a *key binding* when assigned
+from ``PRNGKey``/``key``/``split``/``fold_in`` (including tuple
+unpacking of a ``split``).  Passing a key binding to any call that is
+not itself a deriver (``split``/``fold_in``/key plumbing) counts as a
+consumption.  Two consumptions of the same binding without a rebind
+fire at the second site.  ``if``/``else`` branches are mutually
+exclusive, so the count across branches is the *max*, not the sum; a
+loop body that consumes a key which was bound outside the loop fires
+(every iteration reuses it).
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import (Finding, FunctionNode, ModuleInfo, ProjectContext, Rule,
+                   last_seg)
+
+_KEY_MAKERS = {"PRNGKey", "key", "split", "fold_in", "wrap_key_data"}
+# calls a key can flow into without being "consumed"
+_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "clone", "key_data",
+             "wrap_key_data", "tracked", "len", "tuple", "list", "print",
+             "repr", "str", "type", "isinstance", "partial"}
+# parameter names that mark engine fold-offset plumbing for check (b)
+_FOLD_PARAM_NAMES = {"fold_offset", "rng_fold", "fold"}
+_ENGINE_FILES = ("launch/train.py", "fed/simulate.py")
+
+
+def _terminates(body) -> bool:
+    """True if a statement block unconditionally leaves the enclosing
+    function/loop (ends in return/raise/continue/break)."""
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+def _is_key_expr(node) -> bool:
+    """Expression that evaluates to a PRNG key (or tuple of keys)."""
+    if isinstance(node, ast.Call):
+        return last_seg(node.func) in _KEY_MAKERS
+    if isinstance(node, ast.Subscript):
+        return _is_key_expr(node.value)
+    return False
+
+
+class _FnScanner:
+    """Sequential consumption scanner for one function body."""
+
+    def __init__(self, mod: ModuleInfo, fn):
+        self.mod = mod
+        self.fn = fn
+        self.findings: list[Finding] = []
+        # name -> consumption count since last (re)bind; None = not a key
+        self.counts: dict[str, int] = {}
+        # seed: parameters named like keys are key bindings — unless
+        # annotated as a numpy Generator (stateful; reuse is the API)
+        for a in fn.args.args + fn.args.posonlyargs + fn.args.kwonlyargs:
+            low = a.arg.lower()
+            if low == "rng" or low.endswith("_rng") or low == "key" \
+                    or low.endswith("_key") or low == "rngs":
+                ann = ast.unparse(a.annotation) if a.annotation else ""
+                if "Generator" in ann:
+                    continue
+                self.counts[a.arg] = 0
+
+    def scan(self) -> list[Finding]:
+        self.block(self.fn.body)
+        # dedupe: loop bodies are scanned twice (simulated 2nd iteration)
+        seen: set[tuple] = set()
+        uniq: list[Finding] = []
+        for f in self.findings:
+            k = (f.path, f.line, f.col)
+            if k not in seen:
+                seen.add(k)
+                uniq.append(f)
+        return uniq
+
+    # -- statement walk ---------------------------------------------------
+
+    def block(self, body) -> None:
+        for stmt in body:
+            self.stmt(stmt)
+
+    def stmt(self, stmt) -> None:
+        if isinstance(stmt, FunctionNode + (ast.ClassDef,)):
+            return
+        if isinstance(stmt, ast.If):
+            self.expr(stmt.test)
+            snap = dict(self.counts)
+            self.block(stmt.body)
+            then_counts = self.counts
+            self.counts = dict(snap)
+            self.block(stmt.orelse)
+            else_counts = self.counts
+            # a branch that leaves the function never reaches the code
+            # after the if — its consumptions must not merge
+            if _terminates(stmt.body):
+                self.counts = else_counts
+                return
+            if stmt.orelse and _terminates(stmt.orelse):
+                self.counts = then_counts
+                return
+            # mutually exclusive: keep the max per name
+            merged = dict(else_counts)
+            for k, v in then_counts.items():
+                if k in merged:
+                    merged[k] = max(merged[k], v)
+                else:
+                    merged[k] = v
+            self.counts = merged
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.expr(stmt.iter)
+            # run the body twice: a key bound outside the loop and
+            # consumed inside without a rebind is reused across
+            # iterations — the second pass fires at the consumption site
+            self.block(stmt.body)
+            self.block(stmt.body)
+            self.block(stmt.orelse)
+            return
+        if isinstance(stmt, ast.While):
+            self.expr(stmt.test)
+            self.block(stmt.body)
+            self.block(stmt.body)
+            self.block(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.expr(item.context_expr)
+            self.block(stmt.body)
+            return
+        if isinstance(stmt, ast.Try):
+            self.block(stmt.body)
+            for h in stmt.handlers:
+                self.block(h.body)
+            self.block(stmt.orelse)
+            self.block(stmt.finalbody)
+            return
+        if isinstance(stmt, ast.Assign):
+            self.expr(stmt.value)
+            for tgt in stmt.targets:
+                self.bind_target(tgt, stmt.value)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self.expr(stmt.value)
+            return
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self.expr(stmt.value)
+            if isinstance(stmt.target, ast.Name):
+                self.bind_target(stmt.target, stmt.value)
+            return
+        if isinstance(stmt, (ast.Expr, ast.Return)):
+            if getattr(stmt, "value", None) is not None:
+                self.expr(stmt.value)
+            return
+        # default: evaluate all child expressions
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self.expr(child)
+
+    def bind_target(self, tgt, value) -> None:
+        if isinstance(tgt, ast.Name):
+            if _is_key_expr(value):
+                self.counts[tgt.id] = 0
+            elif tgt.id in self.counts:
+                del self.counts[tgt.id]        # shadowed by a non-key
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            fresh = _is_key_expr(value)
+            for elt in tgt.elts:
+                if isinstance(elt, ast.Name):
+                    if fresh:
+                        self.counts[elt.id] = 0
+                    elif elt.id in self.counts:
+                        del self.counts[elt.id]
+
+    # -- expression walk --------------------------------------------------
+
+    def expr(self, node) -> None:
+        if node is None:
+            return
+        for call in [n for n in ast.walk(node) if isinstance(n, ast.Call)]:
+            self.call(call)
+
+    def call(self, call: ast.Call) -> None:
+        callee = last_seg(call.func)
+        if callee in _DERIVERS:
+            return
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        for arg in args:
+            if isinstance(arg, ast.Name) and arg.id in self.counts:
+                self.counts[arg.id] += 1
+                if self.counts[arg.id] >= 2:
+                    self.findings.append(self.mod.finding(
+                        "R3", arg,
+                        f"key `{arg.id}` consumed again by `{callee or '<call>'}` "
+                        f"without an interleaving split/fold_in — draws "
+                        f"will be identical across consumers"))
+                    self.counts[arg.id] = 0     # one finding per reuse
+
+
+class PrngHygiene(Rule):
+    code = "R3"
+    name = "prng-hygiene"
+    description = ("PRNG key consumed twice without split/fold_in, or "
+                   "sim vs. engine fold_in offset constants drifting "
+                   "apart (breaks ~1 ulp parity)")
+
+    def check_module(self, mod: ModuleInfo) -> list[Finding]:
+        out: list[Finding] = []
+        for fn in [n for n in ast.walk(mod.tree)
+                   if isinstance(n, FunctionNode)]:
+            out.extend(_FnScanner(mod, fn).scan())
+        return out
+
+    # -- (b) fold-chain contract ------------------------------------------
+
+    def check_project(self, ctx: ProjectContext) -> list[Finding]:
+        mods = {rel: ctx.module(rel) for rel in _ENGINE_FILES}
+        present = {rel: m for rel, m in mods.items() if m is not None}
+        if len(present) < 2:
+            return []                          # partial lint run
+        offsets = {rel: self._fold_offsets(m) for rel, m in present.items()}
+        vals = list(offsets.values())
+        if vals[0] == vals[1]:
+            return []
+        (rel_a, set_a), (rel_b, set_b) = offsets.items()
+        m = present[rel_a]
+        anchor = m.tree.body[0] if m.tree.body else m.tree
+        return [m.finding(
+            "R3", anchor,
+            f"fold_in offset contract drift: {rel_a} uses {sorted(set_a)} "
+            f"but {rel_b} uses {sorted(set_b)} — the stage key chains "
+            f"must use identical literal offsets for sim↔engine parity")]
+
+    def _fold_offsets(self, mod: ModuleInfo) -> set[int]:
+        """Literal fold-offset constants in a module's key chains:
+        ``fold_in(k, N)`` / ``fold_in(k, N + x)`` plus literal arguments
+        and defaults flowing into parameters named like fold offsets."""
+        found: set[int] = set()
+        fold_params: dict[str, list[int]] = {}  # fn name -> param indices
+        for node in ast.walk(mod.tree):
+            if isinstance(node, FunctionNode):
+                names = [a.arg for a in node.args.args]
+                idxs = [i for i, nm in enumerate(names)
+                        if nm in _FOLD_PARAM_NAMES]
+                kwonly = [i for i, a in enumerate(node.args.kwonlyargs)
+                          if a.arg in _FOLD_PARAM_NAMES]
+                if idxs or kwonly:
+                    fold_params[node.name] = idxs
+                    # positional defaults align right
+                    off = len(names) - len(node.args.defaults)
+                    for i in idxs:
+                        j = i - off
+                        if 0 <= j < len(node.args.defaults):
+                            d = node.args.defaults[j]
+                            if isinstance(d, ast.Constant) and isinstance(
+                                    d.value, int):
+                                found.add(d.value)
+                    for i in kwonly:
+                        d = node.args.kw_defaults[i]
+                        if isinstance(d, ast.Constant) and isinstance(
+                                d.value, int):
+                            found.add(d.value)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if last_seg(node.func) == "fold_in" and len(node.args) >= 2:
+                found |= self._const_terms(node.args[1])
+            callee = last_seg(node.func)
+            if callee in fold_params:
+                for i in fold_params[callee]:
+                    if i < len(node.args) and isinstance(
+                            node.args[i], ast.Constant) and isinstance(
+                            node.args[i].value, int):
+                        found.add(node.args[i].value)
+                for kw in node.keywords:
+                    if kw.arg in _FOLD_PARAM_NAMES and isinstance(
+                            kw.value, ast.Constant) and isinstance(
+                            kw.value.value, int):
+                        found.add(kw.value.value)
+        return found
+
+    def _const_terms(self, node) -> set[int]:
+        """Integer literals additively contributing to a fold value:
+        ``31`` in ``31 + step``; plain ``step`` contributes nothing."""
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return {node.value}
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+            return self._const_terms(node.left) | \
+                self._const_terms(node.right)
+        return set()

@@ -1,0 +1,129 @@
+"""R4 — recompile hazards.
+
+A jitted function recompiles whenever the treedef / static parts of its
+inputs or closure change.  Two mechanically detectable shapes:
+
+(a) **mutated closure scalar** — a Python int/float/str closed over by
+    a jit-traced inner function and *mutated* in the enclosing scope
+    (``n += 1``, or reassigned lexically after the jitted def).  Every
+    mutation silently retriggers a trace; worse, if the mutation
+    happens after the first call the compiled program keeps the stale
+    value.  The fix is to pass the value as an argument (dynamic) or
+    mark it static explicitly.
+
+(b) **unhashable static args** — a dict/list/set literal passed at a
+    ``static_argnums`` position of a known-jitted callable: unhashable
+    statics raise at call time, and fresh literals would defeat the
+    compile cache even if hashable.
+
+Suppress with ``# lint: ok[R4] <reason>`` when the rebind provably
+happens before the first trace (e.g. config resolution above the jit).
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, ModuleInfo, Rule, last_seg, walk_skip_nested
+
+
+class RecompileHazards(Rule):
+    code = "R4"
+    name = "recompile-hazards"
+    description = ("python scalar closed over by a jitted fn is mutated "
+                   "in the enclosing scope, or an unhashable literal is "
+                   "passed as a static arg (retrace/recompile every call)")
+
+    def check_module(self, mod: ModuleInfo) -> list[Finding]:
+        out: list[Finding] = []
+        reachable = {id(f): f for f in mod.jit_reachable()}
+        for fn in reachable.values():
+            owner = mod.enclosing_function(fn)
+            if owner is None:
+                continue
+            out.extend(self._closure_mutations(mod, fn, owner))
+        out.extend(self._unhashable_statics(mod))
+        return out
+
+    # -- (a) mutated closure scalars --------------------------------------
+
+    def _closure_mutations(self, mod: ModuleInfo, fn, owner) \
+            -> list[Finding]:
+        bound = {a.arg for a in fn.args.args + fn.args.posonlyargs
+                 + fn.args.kwonlyargs}
+        local_stores = {n.id for n in walk_skip_nested(fn)
+                        if isinstance(n, ast.Name)
+                        and not isinstance(n.ctx, ast.Load)}
+        freevars = {n.id for n in walk_skip_nested(fn)
+                    if isinstance(n, ast.Name)
+                    and isinstance(n.ctx, ast.Load)
+                    and n.id not in bound and n.id not in local_stores}
+        if not freevars:
+            return []
+        out: list[Finding] = []
+        for node in walk_skip_nested(owner):
+            if isinstance(node, ast.AugAssign) and isinstance(
+                    node.target, ast.Name) and node.target.id in freevars:
+                out.append(mod.finding(
+                    "R4", node,
+                    f"`{node.target.id}` is closed over by jit-reachable "
+                    f"`{fn.name}` and mutated here — each mutation "
+                    f"retraces (or is silently ignored after the first "
+                    f"compile); pass it as an argument instead"))
+            elif isinstance(node, ast.Assign) and node.lineno > fn.lineno:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id in freevars \
+                            and self._is_scalar(node.value):
+                        out.append(mod.finding(
+                            "R4", node,
+                            f"`{tgt.id}` is closed over by jit-reachable "
+                            f"`{fn.name}` (defined above) and reassigned "
+                            f"here — the traced program keeps the old "
+                            f"value; pass it as an argument instead"))
+        return out
+
+    def _is_scalar(self, node) -> bool:
+        return isinstance(node, ast.Constant) and isinstance(
+            node.value, (int, float, str, bool))
+
+    # -- (b) unhashable static args ---------------------------------------
+
+    def _unhashable_statics(self, mod: ModuleInfo) -> list[Finding]:
+        # name -> static positional indices, from jax.jit(f, static_argnums=…)
+        statics: dict[str, tuple[int, ...]] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call) \
+                    and last_seg(node.value.func) == "jit":
+                for kw in node.value.keywords:
+                    if kw.arg == "static_argnums":
+                        idx = self._ints(kw.value)
+                        if idx:
+                            statics[node.targets[0].id] = idx
+        if not statics:
+            return []
+        out: list[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and isinstance(
+                    node.func, ast.Name) and node.func.id in statics):
+                continue
+            for i in statics[node.func.id]:
+                if i < len(node.args) and isinstance(
+                        node.args[i], (ast.Dict, ast.List, ast.Set)):
+                    kind = type(node.args[i]).__name__.lower()
+                    out.append(mod.finding(
+                        "R4", node.args[i],
+                        f"{kind} literal at static_argnums position {i} "
+                        f"of jitted `{node.func.id}` — unhashable statics "
+                        f"raise at call time; use a tuple or a hashable "
+                        f"config object"))
+        return out
+
+    def _ints(self, node) -> tuple[int, ...]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return (node.value,)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return tuple(e.value for e in node.elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, int))
+        return ()

@@ -1,0 +1,132 @@
+"""Runtime sanitizers — the dynamic half of repro.lint.
+
+``nan_guard`` walks a pytree on the host and raises on the first
+non-finite leaf, naming every offending path (a NaN that surfaces five
+ops downstream of where it was born is the classic week-long hunt).
+``tracked`` wraps a JAX PRNG key in a reuse detector: deriving
+(``split`` / ``fold_in``) is free, but *consuming* the same key twice
+(passing it to two samplers) raises ``KeyReuseError`` — the runtime
+twin of static rule R3.
+
+Both are host-side tools for tests and debugging sessions; neither is
+jit-compatible and neither should appear in engine hot paths.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.utils import pytree as pt
+
+
+class NonFiniteError(ValueError):
+    """A guarded pytree contained NaN/Inf leaves."""
+
+    def __init__(self, name: str, bad: list[str]):
+        self.name = name
+        self.bad_paths = bad
+        super().__init__(
+            f"nan_guard({name!r}): non-finite values in {len(bad)} "
+            f"leaf/leaves: " + ", ".join(bad[:8])
+            + (" …" if len(bad) > 8 else ""))
+
+
+def nan_guard(tree: Any, name: str = "tree") -> Any:
+    """Raise ``NonFiniteError`` if any array leaf of ``tree`` holds
+    NaN/Inf; returns ``tree`` unchanged otherwise (so it chains:
+    ``params = nan_guard(step(params), "params")``)."""
+    bad: list[str] = []
+
+    def check(path: str, leaf: Any) -> Any:
+        try:
+            arr = np.asarray(leaf)
+        except TypeError:
+            return leaf                        # non-array leaf (config &c)
+        if arr.dtype.kind in "fc" and not np.isfinite(arr).all():
+            bad.append(path)
+        return leaf
+
+    pt.tree_map_with_path(check, tree)
+    if bad:
+        raise NonFiniteError(name, sorted(bad))
+    return tree
+
+
+def guard(name: str = "result") -> Callable:
+    """Decorator form: ``@guard("grads")`` nan-guards the return value."""
+    def deco(fn: Callable) -> Callable:
+        def wrapped(*args, **kwargs):
+            return nan_guard(fn(*args, **kwargs), name)
+        wrapped.__name__ = getattr(fn, "__name__", "wrapped")
+        return wrapped
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# key-reuse tracking
+# ---------------------------------------------------------------------------
+
+class KeyReuseError(RuntimeError):
+    """A tracked PRNG key was consumed twice without re-derivation."""
+
+
+class TrackedKey:
+    """A PRNG key that raises on its second *consumption*.
+
+    Deriving is free and returns fresh tracked keys::
+
+        k = tracked(jax.random.PRNGKey(0))
+        k1, k2 = k.split(2)
+        x = jax.random.normal(k1.use(), (3,))   # fine
+        y = jax.random.normal(k1.use(), (3,))   # KeyReuseError
+
+    ``use()`` (or letting jax convert the object via ``__jax_array__``)
+    marks the key consumed.  ``split``/``fold_in`` mirror
+    ``jax.random`` and do not consume — deriving many children from one
+    parent is exactly the hygienic pattern R3 enforces statically.
+    """
+
+    def __init__(self, key, label: str = "key"):
+        self._key = key
+        self.label = label
+        self.consumed_at: str | None = None
+
+    # -- derivation (never consumes) --------------------------------------
+
+    def split(self, num: int = 2) -> list["TrackedKey"]:
+        ks = jax.random.split(self._key, num)
+        return [TrackedKey(ks[i], f"{self.label}.split[{i}]")
+                for i in range(num)]
+
+    def fold_in(self, data: int) -> "TrackedKey":
+        return TrackedKey(jax.random.fold_in(self._key, data),
+                          f"{self.label}.fold_in({data})")
+
+    # -- consumption -------------------------------------------------------
+
+    def use(self, site: str = "use()") -> Any:
+        if self.consumed_at is not None:
+            raise KeyReuseError(
+                f"PRNG key {self.label!r} consumed twice: first at "
+                f"{self.consumed_at}, now at {site} — derive a fresh key "
+                f"with split()/fold_in() instead (lint rule R3)")
+        self.consumed_at = site
+        return self._key
+
+    def __jax_array__(self):
+        return self.use("__jax_array__ (implicit conversion)")
+
+    def __repr__(self) -> str:
+        state = f"consumed at {self.consumed_at}" \
+            if self.consumed_at else "fresh"
+        return f"TrackedKey({self.label}, {state})"
+
+
+def tracked(key, label: str = "key") -> TrackedKey:
+    """Wrap a raw JAX PRNG key (or another TrackedKey's raw key) in a
+    reuse tracker."""
+    if isinstance(key, TrackedKey):
+        return key
+    return TrackedKey(key, label)

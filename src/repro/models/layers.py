@@ -287,15 +287,22 @@ def attention(p: Params, x, positions, cfg, *, kind: str = "global",
     window = cfg.sliding_window if kind == "local" else None
     scale = 1.0 / math.sqrt(dh)
 
+    # one dropout key per projection: sharing dropout_rng across q/k/v
+    # makes the adapter-dropout masks identical (q and k/v see the same
+    # input tensor in self-attention) — lint rule R3
+    if dropout_rng is None:
+        q_rng = k_rng = v_rng = None
+    else:
+        q_rng, k_rng, v_rng = jax.random.split(dropout_rng, 3)
     q = linear(p["q_proj"], x, lora_scale=lora_scale if "q_proj" in cfg.lora_targets else 0.0,
-               dropout_rng=dropout_rng, dropout=cfg.lora_dropout,
+               dropout_rng=q_rng, dropout=cfg.lora_dropout,
                fused=cfg.use_fused_dora, adapter_idx=adapter_idx)
     kv_in = x if kv_source is None else kv_source
     k = linear(p["k_proj"], kv_in, lora_scale=lora_scale if "k_proj" in cfg.lora_targets else 0.0,
-               dropout_rng=dropout_rng, dropout=cfg.lora_dropout,
+               dropout_rng=k_rng, dropout=cfg.lora_dropout,
                fused=cfg.use_fused_dora, adapter_idx=adapter_idx)
     v = linear(p["v_proj"], kv_in, lora_scale=lora_scale if "v_proj" in cfg.lora_targets else 0.0,
-               dropout_rng=dropout_rng, dropout=cfg.lora_dropout,
+               dropout_rng=v_rng, dropout=cfg.lora_dropout,
                fused=cfg.use_fused_dora, adapter_idx=adapter_idx)
     Skv = kv_in.shape[1]
     q = q.reshape(B, S, H, dh)

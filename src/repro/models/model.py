@@ -320,9 +320,13 @@ def forward(params, batch, cfg: ArchConfig, *, rng=None, mesh=None,
         e_pos = jnp.broadcast_to(
             jnp.arange(enc_tokens_emb.shape[1])[None],
             enc_tokens_emb.shape[:2])
+        # fold the dropout rng onto a branch of its own: sharing `rng`
+        # between the encoder and decoder stacks gives layer i of both
+        # the same fold_in(rng, i) key → identical dropout masks (R3)
+        enc_rng = None if rng is None else jax.random.fold_in(rng, 998)
         enc_out, _, _ = _run_blocks(
             params["encoder"]["blocks"], {}, enc_tokens_emb.astype(x.dtype),
-            enc_pat, cfg, positions=e_pos, rng=rng, mesh=mesh,
+            enc_pat, cfg, positions=e_pos, rng=enc_rng, mesh=mesh,
             causal=False, chunk_q=True, remat=remat)
         enc_out = L.rms_norm(enc_out, params["encoder"]["final_norm"],
                              cfg.norm_eps)

@@ -69,6 +69,21 @@ def test_ci_jobs_have_timeouts():
             f"hold the runner for the 6-hour GitHub default")
 
 
+def test_lint_lane_on_every_surface():
+    """The static-analysis lane must exist end to end: ci.yml matrix →
+    ci.sh dispatch → Makefile target, and the analyzer invocation itself
+    must appear in both the lane and the quick `lint-fed` target (the
+    drift the equality tests can't see: a lane that runs the tests but
+    forgot the analyzer)."""
+    assert "lint" in ci_yml_lanes()
+    assert "lint" in ci_sh_lanes()
+    assert "lint" in makefile_lanes()
+    assert "python -m repro.lint src/repro" in _read("scripts", "ci.sh")
+    mk = _read("Makefile")
+    assert re.search(r"^lint-fed:", mk, re.M), "make lint-fed missing"
+    assert "python -m repro.lint src/repro" in mk
+
+
 def test_bench_smoke_only_lists_cover_gated_benches():
     """Every bench the regression checker gates must be produced by the
     bench-smoke run (main --only list) — and the retry loop must re-run

@@ -92,6 +92,64 @@ def test_fault_plan_validation_and_partition():
     assert f["dropout"].sum() and f["straggler"].sum() and f["corrupt"].sum()
 
 
+def test_fault_plan_heavy_tailed_straggler_delays():
+    """arXiv 2410.22815-style straggler models: lognormal/pareto delay
+    draws alongside uniform, clipped into [lo, hi] so in-flight buffers
+    stay bounded — the tail mass piles up at the hi cap instead of the
+    uniform's flat spread."""
+    with pytest.raises(ValueError, match="straggler_dist"):
+        FaultPlan(straggler_dist="cauchy")
+    with pytest.raises(ValueError, match="straggler_tail"):
+        FaultPlan(straggler_dist="pareto", straggler_tail=0.0)
+    lo, hi, n = 1, 12, 4096
+    draws = {}
+    for dist in ("uniform", "lognormal", "pareto"):
+        plan = FaultPlan(straggler_rate=0.5, straggler_delay=(lo, hi),
+                         straggler_dist=dist, straggler_tail=1.0, seed=9)
+        d1, d2 = plan.draw(0, n), plan.draw(0, n)
+        np.testing.assert_array_equal(d1["delays"], d2["delays"])
+        assert d1["delays"].min() >= lo and d1["delays"].max() <= hi
+        draws[dist] = d1["delays"]
+    # heavy tails: most clients are fast (median below uniform's), yet
+    # the extreme quantile still reaches the cap — p95/median dispersion
+    # far exceeds uniform's
+    unif_disp = (np.percentile(draws["uniform"], 95)
+                 / np.median(draws["uniform"]))
+    for dist in ("lognormal", "pareto"):
+        assert np.median(draws[dist]) < np.median(draws["uniform"])
+        assert draws[dist].max() == hi
+        disp = np.percentile(draws[dist], 95) / np.median(draws[dist])
+        assert disp > unif_disp
+    # a sharper pareto tail (bigger α) means fewer slow clients
+    sharp = FaultPlan(straggler_rate=0.5, straggler_delay=(lo, hi),
+                      straggler_dist="pareto", straggler_tail=3.0,
+                      seed=9).draw(0, n)["delays"]
+    assert sharp.mean() < draws["pareto"].mean()
+
+
+def test_cohort_rounds_run_with_heavy_tailed_stragglers():
+    """End-to-end: a lognormal-delay plan drives CohortSim rounds with
+    buffered deliveries and exact billing, same as uniform."""
+    sim = _sim(C=3, local_steps=1, lr=2e-2)
+    cs = CohortSim(sim, n_total=5,
+                   faults=FaultPlan(straggler_rate=0.4,
+                                    straggler_delay=(1, 3),
+                                    straggler_dist="lognormal",
+                                    straggler_tail=1.5, seed=2),
+                   seed=1)
+    unit = sim.client_comm_bytes()
+    batches = _batches(3, 1, seed=4)
+    expected, delivered = 0, 0
+    for r in range(8):
+        out = cs.run_round(batches, jax.random.PRNGKey(r))
+        live = int(out["participation"].sum())
+        expected += unit * (live + out["delivered_billed"])
+        delivered += out["delivered"]
+        assert np.all(np.isfinite(out["metrics"]["ce"]))
+    assert sim.comm_bytes == expected
+    assert delivered > 0                      # stragglers actually matured
+
+
 # ---------------------------------------------------------------------------
 # bank semantics
 # ---------------------------------------------------------------------------
